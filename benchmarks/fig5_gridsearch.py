@@ -1,0 +1,54 @@
+"""Paper Figure 5: the two 1-D slices of the (t, N_p/N_d) grid search.
+
+(a) fix t at optimum, sweep prefill/decode split -> peak at N_p=3, N_d=5;
+(b) fix N_p=3, N_d=5, sweep t -> Θ_prfaas/p and Θ_pdp/(1-p) cross at ~19.4K.
+"""
+import time
+
+from benchmarks.common import emit
+from repro.core import (SystemConfig, ThroughputModel, Workload,
+                        paper_h20_profile, paper_h200_profile)
+
+
+def main():
+    t0 = time.time()
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc_opt, _, _ = tm.grid_search(4, 8, 100e9 / 8)
+
+    # (a) sweep N_p/N_d at fixed t*
+    best = (None, -1.0)
+    for n_p in range(1, 8):
+        sc = SystemConfig(4, n_p, 8 - n_p, 100e9 / 8, sc_opt.threshold)
+        lam = tm.lambda_max(sc)
+        if lam > best[1]:
+            best = (n_p, lam)
+        emit(f"fig5a/np{n_p}_nd{8-n_p}", (time.time() - t0) * 1e6,
+             f"lambda={lam:.2f}")
+    emit("fig5a/peak", 0.0,
+         f"N_p={best[0]} paper=3 "
+         f"claim={'REPRODUCED' if best[0] == 3 else 'NOT-REPRODUCED'}")
+
+    # (b) sweep t at N_p=3, N_d=5: the two stage curves cross at t*
+    cross_t = None
+    prev = None
+    for tk in range(2, 65):
+        t = tk * 1024.0
+        sc = SystemConfig(4, 3, 5, 100e9 / 8, t)
+        p = w.lengths.p_gt(t)
+        a = tm.theta_prfaas(sc) / p
+        b = tm.theta_pdp(sc) / (1 - p)
+        if prev is not None and (prev < 0) != ((a - b) < 0):
+            cross_t = t
+        prev = a - b
+        if tk in (4, 8, 16, 19, 20, 24, 32, 48, 64):
+            emit(f"fig5b/t{tk}k", 0.0,
+                 f"prfaas_over_p={a:.2f} pdp_over_1mp={b:.2f}")
+    emit("fig5b/crossing", 0.0,
+         f"t*={cross_t/1000:.0f}K paper=19.4K "
+         f"claim={'REPRODUCED' if cross_t and abs(cross_t-19400) < 2500 else 'NOT-REPRODUCED'}")
+    return cross_t
+
+
+if __name__ == "__main__":
+    main()

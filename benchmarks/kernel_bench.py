@@ -1,0 +1,70 @@
+"""Kernel micro-bench: us/call of the lowerable serving-path implementations
+(the Pallas kernels target TPU; on this CPU container we time the jnp
+chunked/banded forms that the dry-run compiles, plus interpret-mode kernel
+calls at small shapes for correctness-path coverage) + derived FLOPs.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+from repro.models import chunked_attention as chk
+
+RNG = np.random.default_rng(0)
+
+
+def mk(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def main():
+    B, H, S, D = 1, 8, 2048, 128
+    q, k, v = mk(B, H, S, D), mk(B, H, S, D), mk(B, H, S, D)
+
+    f = jax.jit(lambda q, k, v: chk.flash_chunked(q, k, v, causal=True))
+    us = time_fn(f, q, k, v)
+    flops = 4 * B * H * S * S * D / 2
+    emit("kernel/flash_chunked_2k", us,
+         f"{flops/us*1e-3:.1f}GFLOP/s flops={flops:.2e}")
+
+    f = jax.jit(lambda q, k, v: chk.swa_banded(q, k, v, window=512))
+    us = time_fn(f, q, k, v)
+    flops = 4 * B * H * S * (512 + 512) * D
+    emit("kernel/swa_banded_2k_w512", us, f"{flops/us*1e-3:.1f}GFLOP/s")
+
+    la = -0.1 * jnp.abs(mk(B, H, S))
+    s0 = jnp.zeros((B, H, D, D))
+    f = jax.jit(lambda *a: chk.gla_chunked_jnp(*a, chunk=64)[0])
+    us = time_fn(f, q, k, v, la, s0)
+    flops = 4 * B * H * S * D * D
+    emit("kernel/gla_chunked_2k", us, f"{flops/us*1e-3:.1f}GFLOP/s")
+
+    beta = jnp.asarray(RNG.uniform(0.1, 1, (B, H, S)).astype(np.float32))
+    kn = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    f = jax.jit(lambda *a: chk.delta_chunked_jnp(*a, chunk=64)[0])
+    us = time_fn(f, q, kn, v, la, beta, s0)
+    emit("kernel/delta_chunked_2k", us, f"{flops/us*1e-3:.1f}GFLOP/s")
+
+    # decode over a long cache (the ref einsum path used in serve_step)
+    qd, kc, vc = mk(4, H, D), mk(4, H, 8192, D), mk(4, H, 8192, D)
+    lens = jnp.full((4,), 8192, jnp.int32)
+    f = jax.jit(lambda *a: ops.decode_attention(*a, use_kernel=False))
+    us = time_fn(f, qd, kc, vc, lens)
+    emit("kernel/decode_ref_8k_cache", us,
+         f"bytes={4*H*8192*D*2*4:.2e}")
+
+    # Pallas interpret-mode correctness-path timing (small shapes)
+    qs, ks, vs = mk(1, 2, 256, 64), mk(1, 2, 256, 64), mk(1, 2, 256, 64)
+    from repro.kernels.flash_attn import flash_attention
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                interpret=True))
+    us = time_fn(f, qs, ks, vs, iters=3, warmup=1)
+    emit("kernel/pallas_flash_interpret_256", us, "correctness-path")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table6]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig5_gridsearch, kernel_bench, sim_ttft,
+                        table3_kv_throughput, table5_profile,
+                        table6_deployment)
+
+MODULES = {
+    "table3": table3_kv_throughput,    # Table 3 / Figure 2 (Φ_kv by model)
+    "table5": table5_profile,          # Table 5 (1T hybrid profile)
+    "table6": table6_deployment,       # Table 6 (deployment comparison)
+    "fig5": fig5_gridsearch,           # Figure 5 (grid search slices)
+    "sim": sim_ttft,                   # §4.3 TTFT/egress via simulator
+    "kernels": kernel_bench,           # supporting kernel micro-bench
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            MODULES[name].main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Table 6: PrfaaS-PD vs homogeneous PD vs naive heterogeneous PD.
+
+The faithful reproduction: paper Table 5 profile -> our throughput model
+(Eqs. 1-8) + grid search -> the paper's deployment comparison. Every paper
+number is asserted side by side.
+"""
+import math
+import time
+
+from benchmarks.common import emit
+from repro.core import (SystemConfig, ThroughputModel, Workload,
+                        paper_h20_profile, paper_h200_profile)
+
+PAPER = {
+    "prfaas": {"t": 19_400, "n": (4, 3, 5), "theta": (1.61, 1.64, 3.91),
+               "lam": 3.24},
+    "homog": {"n": (0, 9, 3), "theta": (None, 2.11, 2.35), "lam": 2.11},
+    "naive": {"n": (4, 0, 8), "theta": (2.45, None, 6.25), "lam": 2.45},
+    "ratio": (1.54, 1.16), "egress_gbps": 13.0, "offload": 0.496,
+    "l_long": 44_000,
+}
+
+
+def main():
+    t0 = time.time()
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+
+    sc, lam, _ = tm.grid_search(4, 8, 100e9 / 8)
+    us = (time.time() - t0) * 1e6
+    p = w.lengths.p_gt(sc.threshold)
+    emit("table6/prfaas_pd/threshold", us,
+         f"t={sc.threshold/1000:.1f}K paper={PAPER['prfaas']['t']/1000:.1f}K")
+    emit("table6/prfaas_pd/alloc", us,
+         f"N={sc.n_prfaas}/{sc.n_p}/{sc.n_d} paper=4/3/5")
+    emit("table6/prfaas_pd/thetas", us,
+         f"{tm.theta_prfaas(sc):.2f}/{tm.theta_pdp(sc):.2f}/"
+         f"{tm.theta_pdd(sc):.2f} paper=1.61/1.64/3.91")
+    emit("table6/prfaas_pd/lambda_max", us, f"{lam:.2f} paper=3.24")
+    emit("table6/prfaas_pd/offload_frac", us,
+         f"{p:.3f} paper={PAPER['offload']}")
+    emit("table6/prfaas_pd/l_long", us,
+         f"{w.lengths.mean_above(sc.threshold)/1000:.1f}K paper=44K")
+    emit("table6/prfaas_pd/egress", us,
+         f"{tm.egress_load(sc)*8/1e9:.1f}Gbps paper=~13Gbps")
+
+    tm_h = ThroughputModel(None, paper_h20_profile(), w)
+    sc_h, lam_h, _ = tm_h.grid_search(0, 12, 0)
+    emit("table6/homogeneous/alloc", us,
+         f"N=-/{sc_h.n_p}/{sc_h.n_d} paper=-/9/3")
+    emit("table6/homogeneous/lambda_max", us, f"{lam_h:.2f} paper=2.11")
+
+    sc_n = SystemConfig(4, 0, 8, 100e9 / 8, 0.0)
+    lam_n = tm.lambda_max(sc_n)
+    emit("table6/naive_hetero/lambda_max", us, f"{lam_n:.2f} paper=2.45")
+
+    r1, r2 = lam / lam_h, lam_n / lam_h
+    ok = abs(r1 - 1.54) < 0.08 and abs(r2 - 1.16) < 0.06
+    emit("table6/ratios", us,
+         f"prfaas={r1:.2f}x naive={r2:.2f}x paper=1.54x/1.16x "
+         f"claim={'REPRODUCED' if ok else 'NOT-REPRODUCED'}")
+
+    # beyond-paper: int8 KV on the wire (paper §5 points at KIVI/CacheGen).
+    # In the paper's 100 Gbps setup PrfaaS is compute-bound (no change);
+    # in a bandwidth-bound deployment (8 PrfaaS instances, 10 Gbps link)
+    # halving wire bytes re-opens the egress ceiling.
+    sc_bw, lam_bw, _ = tm.grid_search(8, 8, 10e9 / 8)
+    sc_bc, lam_bc, _ = tm.grid_search(8, 8, 10e9 / 8, kv_wire_compression=2.0)
+    emit("table6/beyond_paper/kv_wire_int8", us,
+         f"bandwidth-bound lam {lam_bw:.2f}->{lam_bc:.2f} "
+         f"(+{(lam_bc/lam_bw-1)*100:.0f}%) t {sc_bw.threshold/1000:.1f}K->"
+         f"{sc_bc.threshold/1000:.1f}K")
+
+    # equal-cost variant (paper §4.4: ~15% gain at equal cost).
+    # H200:H20 street-price ratio ~2:1 -> 32 H200 ~ 64 H20-equivalents;
+    # compare against a 128-H20 homogeneous cluster (16 instances).
+    sc_eq, lam_eq, _ = tm_h.grid_search(0, 16, 0)
+    gain = lam / lam_eq
+    emit("table6/equal_cost_gain", us,
+         f"{(gain-1)*100:.0f}% paper=~15% (2:1 price ratio assumption)")
+    return r1, r2
+
+
+if __name__ == "__main__":
+    main()

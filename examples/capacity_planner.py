@@ -1,0 +1,48 @@
+"""Capacity planner: use the paper's throughput model + simulator to size a
+PrfaaS-PD deployment for YOUR traffic — the operator-facing workflow the
+paper's §3.4/§4 enables.
+
+Sweeps PrfaaS cluster size and link bandwidth, reports achievable req/s,
+optimal threshold, and egress demand; then validates the chosen point under
+bursty traffic with the discrete-event simulator.
+
+    PYTHONPATH=src python examples/capacity_planner.py
+"""
+from repro.core import (PrfaasSimulator, SimConfig, ThroughputModel,
+                        Workload, paper_h20_profile, paper_h200_profile)
+
+w = Workload()
+tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+
+print("PrfaaS-PD capacity plan (PD cluster fixed at 8 instances)")
+print(f"{'N_prfaas':>9} {'link':>9} {'t*':>8} {'Np/Nd':>6} {'req/s':>7} "
+      f"{'egress':>9} {'vs_none':>8}")
+_, base, _ = ThroughputModel(None, paper_h20_profile(), w).grid_search(0, 8, 0)
+best = None
+for n_prfaas in (0, 2, 4, 8):
+    for gbps in (10, 100, 400):
+        if n_prfaas == 0 and gbps > 10:
+            continue
+        sc, lam, _ = tm.grid_search(n_prfaas, 8, gbps * 1e9 / 8) \
+            if n_prfaas else ThroughputModel(
+                None, paper_h20_profile(), w).grid_search(0, 8, 0)
+        egress = tm.egress_load(sc) * 8 / 1e9 if n_prfaas else 0.0
+        print(f"{n_prfaas:>9} {gbps:>7}Gb {sc.threshold/1000:>7.1f}K "
+              f"{sc.n_p}/{sc.n_d:>4} {lam:>7.2f} {egress:>8.1f}Gb "
+              f"{lam/base:>7.2f}x")
+        if best is None or lam > best[1]:
+            best = (sc, lam, gbps)
+
+sc, lam, gbps = best
+print(f"\nvalidating best plan under bursty traffic "
+      f"(burst_factor=1.6, link fluctuation 20%):")
+wb = Workload(burst_factor=1.6, burst_period_s=120.0, session_prob=0.3)
+sim = PrfaasSimulator(tm, sc, wb, SimConfig(
+    arrival_rate=0.85 * lam, sim_time=600, dt=0.05, seed=0,
+    link_gbps=gbps, link_fluctuation=0.2, autoscale=True))
+m = sim.run()
+print(f"  sustained {m['throughput_rps']:.2f} req/s "
+      f"(offered {0.85*lam:.2f}), TTFT p90 {m['ttft_p90']:.2f}s, "
+      f"egress {m['egress_gbps']:.1f} Gbps, "
+      f"router adjustments {m['router_adjustments']}, "
+      f"threshold now {m['threshold']/1000:.1f}K")

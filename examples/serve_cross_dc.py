@@ -1,0 +1,59 @@
+"""End-to-end driver (deliverable): serve a small hybrid model with batched
+requests through the full two-cluster PrfaaS-PD deployment — length-based
+routing, real prefill on the "PrfaaS cluster", byte-accurate KV transfer
+over a simulated Ethernet link (layer-wise pipelined), continuous-batching
+decode on the "PD cluster", prefix-cache hits on follow-up turns.
+
+    PYTHONPATH=src python examples/serve_cross_dc.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.serving import CrossDCDeployment, DeploymentConfig, Request
+
+ARCH = "kimi-linear-1t"          # the paper's case-study family
+
+cfg = get_smoke_config(ARCH)
+model = Model(cfg, use_kernels=False)
+params = model.init(jax.random.PRNGKey(0))
+dep = CrossDCDeployment(
+    model, params,
+    DeploymentConfig(threshold=64,       # offload prefills > 64 new tokens
+                     link_gbps=0.05,     # deliberately skinny inter-DC link
+                     decode_slots=8, capacity=512, block_tokens=16))
+
+rng = np.random.default_rng(0)
+print(f"serving {ARCH} (smoke scale): threshold=64 tok, link=0.05 Gbps\n")
+
+# --- turn 1: a mixed batch of short and long prompts -----------------------
+prompts = {i: rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+           for i, L in enumerate([24, 48, 150, 230, 90, 300])}
+reqs = [Request(rid=i, tokens=p, max_new_tokens=12)
+        for i, p in prompts.items()]
+out = dep.submit_batch(reqs)
+print("turn 1 (cold caches):")
+for r in reqs:
+    print(f"  req {r.rid}: len={len(r.tokens):4d} -> {r.route:7s} "
+          f"cached={r.cached_tokens:4d} kv={r.kv_bytes:8d}B "
+          f"prefill={r.prefill_s*1e3:7.1f}ms transfer={r.transfer_s*1e3:7.1f}ms")
+
+# --- turn 2: agentic follow-ups (same prefix + new tokens) ------------------
+follow = []
+for i, p in list(prompts.items())[:4]:
+    grown = np.concatenate([p, rng.integers(0, cfg.vocab_size, (40,))
+                            .astype(np.int32)])
+    follow.append(Request(rid=100 + i, tokens=grown, max_new_tokens=8))
+dep.submit_batch(follow)
+print("\nturn 2 (incremental prefills after prefix-cache hits):")
+for r in follow:
+    print(f"  req {r.rid}: len={len(r.tokens):4d} -> {r.route:7s} "
+          f"cached={r.cached_tokens:4d} (incremental "
+          f"{len(r.tokens)-r.cached_tokens})")
+
+m = dep.metrics()
+print(f"\nsummary: {m['requests']} requests, {m['offloaded']} offloaded, "
+      f"mean TTFT {m['ttft_mean_s']*1e3:.1f} ms, "
+      f"cross-DC KV {m['kv_bytes_total']} bytes, "
+      f"hit rates {m['cache_hit_rate']}")

@@ -1,0 +1,84 @@
+"""Train a hybrid LM (KDA:MLA 3:1 — the paper's architecture family) with
+the full production training stack: AdamW, remat, gradient accumulation,
+async atomic checkpointing, straggler detection, crash-resume.
+
+Two scales:
+  * --scale 8m   (default) — CPU-feasible demo (~60 steps, loss visibly
+    drops in a few minutes on this container);
+  * --scale 100m — the real recipe (~100M params, a few hundred steps);
+    sized for accelerators, runs unchanged there via the same entry point.
+
+    PYTHONPATH=src python examples/train_100m.py
+    PYTHONPATH=src python examples/train_100m.py --scale 100m --steps 300
+"""
+import argparse
+import shutil
+
+import jax
+
+from repro.configs.base import (AttentionSpec, BlockSpec, FFNSpec, GroupSpec,
+                                LinearSpec, ModelConfig)
+from repro.models import Model
+from repro.training import (AdamWConfig, DataConfig, SyntheticLM,
+                            TrainConfig, TrainLoop, init_opt_state)
+
+
+def hybrid_lm(scale: str) -> ModelConfig:
+    if scale == "100m":
+        d, dk, heads, dff, vocab, reps = 512, 64, 8, 2048, 8192, 3
+    else:                                    # ~8M (1-core friendly)
+        d, dk, heads, dff, vocab, reps = 256, 32, 4, 1024, 4096, 2
+    kda = LinearSpec(kind="kda", heads=heads, key_dim=dk, value_dim=dk,
+                     conv_kernel=4)
+    mla = AttentionSpec(kind="mla", q_heads=heads, kv_heads=heads,
+                        head_dim=dk, mla_kv_rank=2 * dk, mla_rope_dim=dk // 2)
+    ffn = FFNSpec(kind="dense", d_ff=dff, activation="swiglu")
+    return ModelConfig(
+        name=f"hybrid-{scale}", family="hybrid", d_model=d, vocab_size=vocab,
+        groups=(GroupSpec(blocks=(BlockSpec(kda, ffn), BlockSpec(kda, ffn),
+                                  BlockSpec(kda, ffn), BlockSpec(mla, ffn)),
+                          repeats=reps),),
+        tie_embeddings=True, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="8m", choices=["8m", "100m"])
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    args = ap.parse_args()
+    steps = args.steps or (60 if args.scale == "8m" else 300)
+    batch = args.batch or (4 if args.scale == "8m" else 32)
+    seq = args.seq or (128 if args.scale == "8m" else 1024)
+
+    cfg = hybrid_lm(args.scale)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.n_layers} layers (KDA:MLA 3:1), "
+          f"{steps} steps x {batch}x{seq} tokens")
+    model = Model(cfg, use_kernels=False, remat=True)
+    params = model.init(jax.random.PRNGKey(0))
+
+    ckpt = f"/tmp/repro_{cfg.name}_ckpt"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    stragglers = []
+    tc = TrainConfig(
+        microbatches=2, remat=True,
+        adamw=AdamWConfig(lr=1e-3, warmup_steps=max(5, steps // 15),
+                          total_steps=steps),
+        checkpoint_every=max(20, steps // 4), checkpoint_dir=ckpt)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                  global_batch=batch))
+    loop = TrainLoop(model, tc, data,
+                     on_straggler=lambda s, r: stragglers.append((s, r)))
+    _, _, hist = loop.run(params, init_opt_state(params, tc), steps)
+
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over "
+          f"{len(hist)} steps "
+          f"({sum(h['time_s'] for h in hist)/len(hist)*1e3:.0f} ms/step)")
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3, "training failed"
+    print(f"straggler flags: {len(stragglers)}; checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

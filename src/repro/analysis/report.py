@@ -1,0 +1,130 @@
+"""Assemble the §Roofline table: dry-run compile artifacts (memory,
+collective schedule, compile proof) x cost-fit predictions (trip-count-exact
+FLOPs/bytes/collective-bytes) -> three roofline terms per cell.
+
+    PYTHONPATH=src python -m repro.analysis.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.analysis import costfit
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.configs import SHAPES, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts")
+DRYRUN = os.path.join(ART, "dryrun")
+FITS = os.path.join(ART, "costfit")
+
+CHIPS_SINGLE = 256
+TRAIN_MB = {"train_4k": 16}
+
+
+def load_fit(arch: str, kind: str):
+    path = os.path.join(FITS, f"fit__{arch}__{kind}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_report(arch: str, shape_name: str, variant: str = "baseline"):
+    """Merge full-compile artifact + fitted costs into one roofline row."""
+    tag = f"{arch}__{shape_name}__single"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    path = os.path.join(DRYRUN, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        full = json.load(f)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    fit = load_fit(arch, kind)
+    mb = TRAIN_MB.get(shape_name, 1) if kind == "train" else 1
+    if fit is not None:
+        pred = costfit.predict(fit, cfg, kind, shape.global_batch,
+                               shape.seq_len, mb)
+        flops_dev, bytes_dev, coll_dev = (max(pred["flops"], 0.0),
+                                          max(pred["bytes"], 0.0),
+                                          max(pred["coll"], 0.0))
+        source = "costfit"
+    else:  # fall back to raw (loop-undercounted) compile numbers
+        c = full["cost_analysis"]
+        flops_dev = c.get("flops", 0.0)
+        bytes_dev = c.get("bytes accessed", 0.0)
+        coll_dev = full["roofline"]["coll_bytes"] / full["chips"]
+        source = "raw-hlo (loop bodies counted once)"
+
+    chips = CHIPS_SINGLE
+    t_c = flops_dev / PEAK_FLOPS            # per-device flops / per-chip peak
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    tokens = (shape.seq_len * shape.global_batch if kind != "decode"
+              else shape.global_batch)
+    mult = 6.0 if kind == "train" else 2.0
+    model_flops = mult * cfg.active_param_count() * tokens
+    hlo_flops_global = flops_dev * chips
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    achievable = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "kind": kind, "chips": chips, "cost_source": source,
+        "hlo_flops_global": hlo_flops_global,
+        "hlo_bytes_global": bytes_dev * chips,
+        "coll_bytes_global": coll_dev * chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "roofline_frac": ideal / achievable if achievable else 0.0,
+        "compile_s": full["compile_s"],
+        "memory_analysis": full.get("memory_analysis", {}),
+        "collective_schedule": full["roofline"].get("collective_detail", {}),
+    }
+
+
+def all_cells(variant: str = "baseline"):
+    out = []
+    for fn in sorted(os.listdir(DRYRUN)):
+        if not fn.endswith("__single.json"):
+            continue
+        arch, shape_name, _ = fn[:-5].split("__")
+        rep = cell_report(arch, shape_name, variant)
+        if rep:
+            out.append(rep)
+    return out
+
+
+def markdown_table(cells):
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for c in cells:
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {c['t_compute_s']:.4f} | {c['t_memory_s']:.4f} "
+            f"| {c['t_collective_s']:.4f} | **{c['dominant']}** "
+            f"| {c['useful_flops_frac']:.2f} | {c['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    cells = all_cells()
+    out = os.path.join(ART, "roofline_baseline.json")
+    with open(out, "w") as f:
+        json.dump(cells, f, indent=1)
+    print(markdown_table(cells))
+    print(f"\n{len(cells)} cells -> {out}")
+
+
+if __name__ == "__main__":
+    main()

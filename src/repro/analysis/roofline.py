@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device
+program — multiplied back to global). collective_bytes is parsed from the
+compiled HLO text: the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction (per-device
+wire-byte approximation), times the device count for the global figure.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes by collective kind, from result shapes."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match " = <shape> <kind>(" — result side only
+            marker = f" {kind}("
+            if marker in stripped and "=" in stripped:
+                result_part = stripped.split(marker)[0]
+                result_part = result_part.split("=", 1)[1]
+                out[kind] += _shape_bytes(result_part)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # global quantities
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    useful_flops_frac: float = 0.0
+    roofline_frac: float = 0.0
+    peak_memory_bytes: float = 0.0
+    collective_detail: dict = field(default_factory=dict)
+
+    def finalize(self):
+        self.t_compute = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.hlo_bytes / (self.chips * HBM_BW)
+        self.t_collective = self.coll_bytes / (self.chips * ICI_BW)
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        self.useful_flops_frac = (self.model_flops / self.hlo_flops
+                                  if self.hlo_flops else 0.0)
+        # fraction of roofline: ideal time (compute at peak with useful
+        # flops) over achievable time (max of the three terms)
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        achievable = max(terms.values())
+        self.roofline_frac = ideal / achievable if achievable else 0.0
+        return self
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    train: bool) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd-only)."""
+    n = cfg.active_param_count()
+    tokens = seq_len * global_batch if shape_kind != "decode" else global_batch
+    mult = 6.0 if train else 2.0
+    return mult * n * tokens
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, cfg, shape, kind: str,
+            memory_stats=None) -> RooflineReport:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_dev * chips,
+        hlo_bytes=bytes_dev * chips,
+        coll_bytes=float(coll["total"]) * chips,
+        model_flops=model_flops_for(cfg, kind, shape.seq_len,
+                                    shape.global_batch, kind == "train"),
+        collective_detail=coll,
+        peak_memory_bytes=float(memory_stats or 0.0),
+    )
+    return rep.finalize()

@@ -1,0 +1,34 @@
+# The paper's primary contribution: cross-datacenter PrfaaS-PD serving —
+# hybrid prefix cache pool, global KV manager, bandwidth/cache-aware
+# dual-timescale scheduling, throughput model (Eqs. 1-8), link transfer
+# engine, and the cross-DC cluster simulator.
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig, StageTelemetry
+from repro.core.blockpool import PREFIX, TRANSFER, Block, BlockPool
+from repro.core.hardware import (CHIPS, AnalyticProfile, ChipSpec,
+                                 PaperProfile, Profile, paper_h20_profile,
+                                 paper_h200_profile)
+from repro.core.kv_manager import GlobalKVManager, MatchInfo
+from repro.core.prefix_cache import (FullAttnGroup, HybridPrefixCache,
+                                     LinearStateGroup, token_block_hashes)
+from repro.core.router import (PD, PRFAAS, Router, RouterConfig,
+                               RoutingDecision)
+from repro.core.simulator import PrfaasSimulator, Request, SimConfig
+from repro.core.throughput_model import (SystemConfig, ThroughputModel,
+                                         egress_bandwidth, kv_throughput)
+from repro.core.transfer import Flow, Link, layerwise_release
+from repro.core.workload import LogNormalLengths, Workload
+
+__all__ = [
+    "Autoscaler", "AutoscalerConfig", "StageTelemetry",
+    "Block", "BlockPool", "PREFIX", "TRANSFER",
+    "CHIPS", "ChipSpec", "Profile", "PaperProfile", "AnalyticProfile",
+    "paper_h200_profile", "paper_h20_profile",
+    "GlobalKVManager", "MatchInfo",
+    "FullAttnGroup", "HybridPrefixCache", "LinearStateGroup",
+    "token_block_hashes",
+    "Router", "RouterConfig", "RoutingDecision", "PD", "PRFAAS",
+    "PrfaasSimulator", "Request", "SimConfig",
+    "SystemConfig", "ThroughputModel", "egress_bandwidth", "kv_throughput",
+    "Flow", "Link", "layerwise_release",
+    "LogNormalLengths", "Workload",
+]

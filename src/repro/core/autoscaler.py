@@ -1,0 +1,67 @@
+"""Long-term scheduling: traffic-driven allocation re-optimization
+(paper §3.4.3, long-term loop).
+
+Monitors stage utilization / queue depth over minutes, detects persistent
+producer/consumer imbalance (Theta_prfaas + Theta_pdp vs Theta_pdd, Eq. 8)
+and converts PD nodes between prefill and decode roles; after each
+conversion the routing threshold t is re-optimized (Eq. 7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.router import Router
+from repro.core.throughput_model import SystemConfig, ThroughputModel
+
+
+@dataclass
+class StageTelemetry:
+    prefill_queue: int = 0
+    decode_queue: int = 0
+    prefill_util: float = 0.0
+    decode_util: float = 0.0
+
+
+@dataclass
+class AutoscalerConfig:
+    period_s: float = 300.0          # re-evaluation period
+    imbalance_ratio: float = 1.25    # hysteresis on producer/consumer ratio
+    min_p: int = 1
+    min_d: int = 1
+
+
+class Autoscaler:
+    def __init__(self, model: ThroughputModel, router: Router,
+                 system: SystemConfig, cfg: AutoscalerConfig = AutoscalerConfig()):
+        self.model = model
+        self.router = router
+        self.system = system
+        self.cfg = cfg
+        self._last_eval = 0.0
+        self.conversions: List[tuple] = []
+
+    def maybe_rebalance(self, now: float, tel: StageTelemetry) -> Optional[SystemConfig]:
+        if now - self._last_eval < self.cfg.period_s:
+            return None
+        self._last_eval = now
+        sc = self.system
+        producer = self.model.theta_prfaas(sc) + self.model.theta_pdp(sc)
+        consumer = self.model.theta_pdd(sc)
+        new_p, new_d = sc.n_p, sc.n_d
+        # queue evidence + model evidence must agree (avoid flapping)
+        if (producer > consumer * self.cfg.imbalance_ratio
+                and tel.decode_queue > tel.prefill_queue
+                and sc.n_p > self.cfg.min_p):
+            new_p, new_d = sc.n_p - 1, sc.n_d + 1          # P -> D
+        elif (consumer > producer * self.cfg.imbalance_ratio
+                and tel.prefill_queue > tel.decode_queue
+                and sc.n_d > self.cfg.min_d):
+            new_p, new_d = sc.n_p + 1, sc.n_d - 1          # D -> P
+        if (new_p, new_d) == (sc.n_p, sc.n_d):
+            return None
+        self.system = SystemConfig(sc.n_prfaas, new_p, new_d, sc.b_out,
+                                   self.router.threshold)
+        self.router.reoptimize(sc.n_prfaas, new_p, new_d, sc.b_out)
+        self.conversions.append((now, new_p, new_d))
+        return self.system

@@ -1,0 +1,158 @@
+"""Hardware model: chip classes, instance profiles, T_prefill / S_kv sources.
+
+Two profile kinds feed the throughput model (paper Eq. 1):
+  * ``PaperProfile`` — the paper's measured Table 5 for the internal 1T
+    hybrid on an 8xH200 instance, with log-log (power-law) interpolation.
+    This is the *faithful-reproduction* input: feeding it into our
+    throughput model must reproduce Table 6 (validated in benchmarks).
+  * ``AnalyticProfile`` — derived from any ``ModelConfig`` + chip spec via a
+    FLOPs/bytes roofline with an MFU(l) saturation curve; used for the
+    assigned architectures where no measured profile exists.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+MIB = 2 ** 20
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    flops_bf16: float          # peak FLOP/s
+    hbm_bw: float              # bytes/s
+    hbm_bytes: float
+
+    def prefill_time(self, flops: float, bytes_moved: float,
+                     mfu: float = 0.5, chips: int = 1) -> float:
+        return max(flops / (chips * self.flops_bf16 * mfu),
+                   bytes_moved / (chips * self.hbm_bw * 0.8))
+
+
+CHIPS = {
+    "h200": ChipSpec("h200", 989e12, 4.8e12, 141e9),
+    "h20": ChipSpec("h20", 148e12, 4.0e12, 96e9),
+    "tpu-v5e": ChipSpec("tpu-v5e", 197e12, 819e9, 16e9),
+    "tpu-v5p": ChipSpec("tpu-v5p", 459e12, 2.77e12, 95e9),
+}
+
+
+def _loglog_interp(xs, ys, x):
+    """Piecewise power-law interpolation (extrapolates end slopes)."""
+    lx = [math.log(v) for v in xs]
+    ly = [math.log(v) for v in ys]
+    q = math.log(x)
+    if q <= lx[0]:
+        i = 0
+    elif q >= lx[-1]:
+        i = len(lx) - 2
+    else:
+        i = max(j for j in range(len(lx) - 1) if lx[j] <= q)
+    slope = (ly[i + 1] - ly[i]) / (lx[i + 1] - lx[i])
+    return math.exp(ly[i] + slope * (q - lx[i]))
+
+
+class Profile:
+    """Per-instance profile: S_kv(l) bytes, T_prefill(l) seconds."""
+
+    def s_kv(self, l: int) -> float:
+        raise NotImplementedError
+
+    def t_prefill(self, l: int) -> float:
+        raise NotImplementedError
+
+    def kv_throughput(self, l: int) -> float:
+        """Paper Eq. 1: Φ_kv(l) in bytes/s."""
+        return self.s_kv(l) / self.t_prefill(l)
+
+
+# Paper Table 5 (1T hybrid model, 8xH200, in-house vLLM).
+PAPER_TABLE5_LENS = (1024, 8192, 32768, 131072)
+PAPER_TABLE5_SKV_MIB = (190.8, 308.9, 701.3, 2316.3)
+PAPER_TABLE5_TPREFILL = (0.44, 0.72, 1.84, 7.40)
+
+
+class PaperProfile(Profile):
+    """The paper's measured Table 5 with power-law interpolation.
+
+    ``slowdown(l)`` maps the 8xH200 profile onto other hardware; the H20
+    factor is calibrated from the paper's own Table 6 operating points
+    (T_H20(10.2K)=1.83s, T_H20(27.3K)=4.27s -> kappa(l) ~= 2.19*(l/10222)^0.188).
+    """
+
+    def __init__(self, slowdown_base: float = 1.0, slowdown_exp: float = 0.0,
+                 slowdown_ref_len: float = 10222.0):
+        self.slowdown_base = slowdown_base
+        self.slowdown_exp = slowdown_exp
+        self.slowdown_ref_len = slowdown_ref_len
+
+    def s_kv(self, l: int) -> float:
+        return _loglog_interp(PAPER_TABLE5_LENS,
+                              [v * MIB for v in PAPER_TABLE5_SKV_MIB], l)
+
+    def t_prefill(self, l: int) -> float:
+        base = _loglog_interp(PAPER_TABLE5_LENS, PAPER_TABLE5_TPREFILL, l)
+        kappa = self.slowdown_base * (l / self.slowdown_ref_len) ** self.slowdown_exp
+        return base * kappa
+
+
+def paper_h200_profile() -> PaperProfile:
+    return PaperProfile()
+
+
+def paper_h20_profile() -> PaperProfile:
+    # calibrated vs Table 6 (see module docstring)
+    return PaperProfile(slowdown_base=2.187, slowdown_exp=0.1876,
+                        slowdown_ref_len=10222.0)
+
+
+class AnalyticProfile(Profile):
+    """Roofline-derived profile for an arbitrary ModelConfig.
+
+    T_prefill(l) = max(compute, HBM) with a length-dependent MFU saturation
+    curve mfu(l) = mfu_max * l / (l + l_half): short prefills are launch/
+    memory-bound (low utilization), long prefills approach peak — matching
+    the shape of the paper's Figure 2 / Table 5.
+    """
+
+    def __init__(self, cfg: ModelConfig, chip: ChipSpec, chips_per_instance: int,
+                 mfu_max: float = 0.55, l_half: float = 2048.0,
+                 kv_dtype_bytes: int = 2):
+        self.cfg = cfg
+        self.chip = chip
+        self.chips = chips_per_instance
+        self.mfu_max = mfu_max
+        self.l_half = l_half
+        self.kv_dtype_bytes = kv_dtype_bytes
+
+    def s_kv(self, l: int) -> float:
+        return float(self.cfg.kv_cache_bytes(l, self.kv_dtype_bytes))
+
+    def prefill_flops(self, l: int) -> float:
+        """2*N_active*l matmul + attention quadratic terms."""
+        cfg = self.cfg
+        f = 2.0 * cfg.active_param_count() * l
+        for *_, b in cfg.iter_blocks():
+            m = b.mixer
+            if hasattr(m, "q_heads"):        # AttentionSpec
+                eff = min(l, m.window) if m.window else l
+                # q@k^T + p@v over causal half
+                f += 2.0 * 2.0 * m.q_heads * m.head_dim * l * eff / 2.0
+            else:                            # linear mixer: chunked scan
+                f += 2.0 * 2.0 * m.heads * m.key_dim * m.value_dim * l
+        return f
+
+    def prefill_bytes(self, l: int) -> float:
+        cfg = self.cfg
+        w = cfg.active_param_count() * 2.0   # weights once (big-batch amortized)
+        act = 12.0 * l * cfg.d_model * cfg.n_layers * 2.0
+        return w + act
+
+    def t_prefill(self, l: int) -> float:
+        mfu = self.mfu_max * l / (l + self.l_half)
+        t_c = self.prefill_flops(l) / (self.chips * self.chip.flops_bf16 * mfu)
+        t_m = self.prefill_bytes(l) / (self.chips * self.chip.hbm_bw * 0.8)
+        return max(t_c, t_m)

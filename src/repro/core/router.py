@@ -1,0 +1,125 @@
+"""Short-term scheduling: bandwidth- and cache-aware request routing
+(paper §3.4.3, short-term loop).
+
+Decision per request (incremental uncached length l after prefix matching):
+  * l > t      -> PrfaaS cluster (remote long-context prefill)
+  * l <= t     -> local PD-P
+with the paper's two cache-aware regimes:
+  * bandwidth SCARCE  -> evaluate each cluster's prefix independently:
+       if l_total - l_pd <= t : prefill locally (use PD's own cache)
+       else                   : offload (use PrfaaS's own cache)
+  * bandwidth ABUNDANT -> use the best cache anywhere
+       l_prefix = max(l_prfaas, l_pd); route on l_total - l_prefix and
+       cross-transfer the cache if the owning cluster differs.
+
+The threshold t is re-derived from the live profile whenever the congestion
+monitor triggers (egress utilization / queue depth), which is the paper's
+"short-term routing adjustment".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.throughput_model import SystemConfig, ThroughputModel
+
+PRFAAS = "prfaas"
+PD = "pd"
+
+
+@dataclass
+class RoutingDecision:
+    target: str                  # "prfaas" | "pd"
+    cached_tokens: int           # reused prefix at the chosen cluster
+    incremental: int             # tokens actually prefibled
+    cache_cluster: str           # where the reused prefix lives
+    cross_cache_transfer: bool = False
+
+
+@dataclass
+class RouterConfig:
+    util_high: float = 0.90      # egress-utilization trigger
+    queue_high_bytes: float = 2e9
+    util_abundant: float = 0.50  # below this, bandwidth is "abundant"
+    threshold_boost: float = 1.35  # raise t when congested
+    min_threshold: float = 512.0
+
+
+class Router:
+    def __init__(self, model: ThroughputModel, system: SystemConfig,
+                 cfg: RouterConfig = RouterConfig()):
+        self.model = model
+        self.system = system
+        self.cfg = cfg
+        self.threshold = system.threshold
+        self.base_threshold = system.threshold
+        self.adjustments = 0
+        self.decisions = {PRFAAS: 0, PD: 0}
+        self.cross_transfers = 0
+
+    # ----------------------------------------------------- congestion loop
+    def observe_congestion(self, signal: dict):
+        """Short-term adjustment: raise t near the bandwidth ceiling (longer
+        requests => lower per-request KV throughput), relax it when clear."""
+        congested = (signal.get("util", 0.0) > self.cfg.util_high
+                     or signal.get("queue_bytes", 0.0) > self.cfg.queue_high_bytes)
+        if congested:
+            self.threshold = min(self.threshold * self.cfg.threshold_boost,
+                                 self.model.workload.lengths.hi)
+            self.adjustments += 1
+        elif self.threshold > self.base_threshold:
+            self.threshold = max(self.base_threshold,
+                                 self.threshold / self.cfg.threshold_boost)
+
+    def reoptimize(self, n_prfaas: int, n_p: int, n_d: int, b_out: float):
+        """Re-derive t for new instance counts (called by the autoscaler)."""
+        best, _, _ = self.model.grid_search(n_prfaas, n_p + n_d, b_out)
+        if best is not None:
+            # keep the searched split only for t; N allocation is the
+            # autoscaler's decision
+            self.base_threshold = best.threshold
+            self.threshold = best.threshold
+
+    # --------------------------------------------------------------- route
+    def route(self, l_total: int, matches: Dict[str, int],
+              bandwidth_signal: Optional[dict] = None) -> RoutingDecision:
+        l_pd = matches.get(PD, 0)
+        l_prfaas = matches.get(PRFAAS, 0)
+        signal = bandwidth_signal or {}
+        abundant = signal.get("util", 0.0) < self.cfg.util_abundant
+        t = self.threshold
+
+        if abundant:
+            # compute is scarce: use the best cache across all clusters
+            l_prefix = max(l_prfaas, l_pd)
+            incr = l_total - l_prefix
+            if incr <= t:
+                target, cache_cluster = PD, (PD if l_pd >= l_prfaas else PRFAAS)
+            else:
+                target, cache_cluster = PRFAAS, (PRFAAS if l_prfaas >= l_pd
+                                                 else PD)
+            cross = cache_cluster != target and l_prefix > 0
+            cached = l_prefix
+        else:
+            # bandwidth is scarce: evaluate clusters independently
+            if l_total - l_pd <= t:
+                target, cached, cache_cluster, cross = PD, l_pd, PD, False
+            else:
+                target, cached, cache_cluster, cross = \
+                    PRFAAS, l_prfaas, PRFAAS, False
+            incr = l_total - cached
+
+        if self.system.n_prfaas == 0:
+            target, cached, cache_cluster, cross = PD, l_pd, PD, False
+            incr = l_total - cached
+        elif self.system.n_p == 0:          # naive hetero: no local prefill
+            target, cached, cache_cluster, cross = PRFAAS, l_prfaas, PRFAAS, False
+            incr = l_total - cached
+        self.decisions[target] += 1
+        if cross:
+            self.cross_transfers += 1
+        return RoutingDecision(target=target, cached_tokens=cached,
+                               incremental=max(0, incr),
+                               cache_cluster=cache_cluster,
+                               cross_cache_transfer=cross)

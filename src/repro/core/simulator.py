@@ -1,0 +1,285 @@
+"""Cross-datacenter PrfaaS-PD cluster simulator (fluid/discrete-event).
+
+Ties every core component together under a realistic workload: bursty
+(MMPP-modulated Poisson) arrivals, truncated log-normal lengths, agentic
+sessions producing prefix-cache hits, a fluctuating inter-DC Ethernet link
+with layer-wise pipelined KV flows, the dual-timescale scheduler, and the
+hybrid prefix cache pools.
+
+Produces the paper's §4.3 observables: throughput, mean/P90 TTFT, egress
+bandwidth, offload fraction, cache hit rates, queue depths.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.blockpool import BlockPool
+from repro.core.hardware import Profile
+from repro.core.kv_manager import GlobalKVManager
+from repro.core.prefix_cache import HybridPrefixCache
+from repro.core.router import PD, PRFAAS, Router, RouterConfig, RoutingDecision
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig, StageTelemetry
+from repro.core.throughput_model import SystemConfig, ThroughputModel
+from repro.core.transfer import Link, layerwise_release
+from repro.core.workload import Workload
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    total_len: int
+    session: int
+    # filled by routing / execution
+    decision: Optional[RoutingDecision] = None
+    prefill_start: float = -1.0
+    prefill_done: float = -1.0
+    transfer_done: float = -1.0
+    decode_start: float = -1.0
+    first_token: float = -1.0
+    done: float = -1.0
+
+    def block_hashes(self, block_tokens: int) -> List[int]:
+        n = self.total_len // block_tokens
+        sid = self.session
+        return [hash((sid, i)) & 0x7FFFFFFFFFFFFFFF for i in range(n)]
+
+
+class InstancePool:
+    """N identical single-request servers with one FIFO queue."""
+
+    def __init__(self, n: int):
+        self.capacity = n
+        self.busy: List[float] = []          # end times
+        self.queue: List[tuple] = []         # (req, service_time)
+        self.busy_time = 0.0
+
+    def submit(self, req, service_time: float):
+        self.queue.append((req, service_time))
+
+    def tick(self, now: float, dt: float, on_start):
+        self.busy = [t for t in self.busy if t > now]
+        while self.queue and len(self.busy) < self.capacity:
+            req, st = self.queue.pop(0)
+            self.busy.append(now + st)
+            on_start(req, now, now + st)
+        self.busy_time += dt * len(self.busy)
+
+    def utilization(self, elapsed: float) -> float:
+        return self.busy_time / max(1e-9, elapsed * max(1, self.capacity))
+
+
+class DecodePool:
+    """n_d instances x BS_max slots; a request holds a slot for its decode."""
+
+    def __init__(self, slots: int):
+        self.capacity = slots
+        self.busy: List[float] = []
+        self.queue: List[tuple] = []
+        self.busy_time = 0.0
+
+    def submit(self, req, service_time: float):
+        self.queue.append((req, service_time))
+
+    def tick(self, now: float, dt: float, on_start):
+        self.busy = [t for t in self.busy if t > now]
+        while self.queue and len(self.busy) < self.capacity:
+            req, st = self.queue.pop(0)
+            self.busy.append(now + st)
+            on_start(req, now, now + st)
+        self.busy_time += dt * len(self.busy)
+
+
+@dataclass
+class SimConfig:
+    arrival_rate: float                 # req/s offered
+    sim_time: float = 1800.0
+    dt: float = 0.02
+    seed: int = 0
+    link_gbps: float = 100.0
+    link_fluctuation: float = 0.0
+    pool_blocks: int = 200_000          # per-cluster prefix pool blocks
+    block_tokens: int = 64
+    autoscale: bool = False
+    warmup_frac: float = 0.1            # exclude from metrics
+
+
+class PrfaasSimulator:
+    def __init__(self, model: ThroughputModel, system: SystemConfig,
+                 workload: Workload, sim: SimConfig,
+                 router_cfg: RouterConfig = RouterConfig()):
+        self.model = model
+        self.system = system
+        self.w = workload
+        self.sim = sim
+        self.rng = np.random.default_rng(sim.seed)
+
+        self.router = Router(model, system, router_cfg)
+        self.kv = GlobalKVManager()
+        for name in (PRFAAS, PD):
+            pool = BlockPool(sim.pool_blocks, sim.block_tokens,
+                             block_bytes=1 << 20)
+            self.kv.register_cluster(
+                name, HybridPrefixCache(pool, 0, 1 << 20))
+        self.link = Link(sim.link_gbps * 1e9,
+                         fluctuation=sim.link_fluctuation, seed=sim.seed)
+        self.prfaas_pool = InstancePool(system.n_prfaas)
+        self.pdp_pool = InstancePool(system.n_p)
+        self.decode_pool = DecodePool(system.n_d * workload.bs_max)
+        self.autoscaler = Autoscaler(model, self.router, system) \
+            if sim.autoscale else None
+
+        self.completed: List[Request] = []
+        self.all_requests: List[Request] = []
+        self._next_rid = 0
+        self._next_session = 0
+        self._open_sessions: List[tuple] = []   # (session_id, cur_len)
+
+    # ------------------------------------------------------------- arrivals
+    def _arrival_rate(self, now: float) -> float:
+        bf = self.w.burst_factor
+        if bf <= 1.0:
+            return self.sim.arrival_rate
+        # square-wave MMPP: alternate high/low phases, mean preserved
+        phase = (now % self.w.burst_period_s) < self.w.burst_period_s / 2
+        return self.sim.arrival_rate * (bf if phase else max(0.0, 2.0 - bf))
+
+    def _spawn_arrivals(self, now: float, dt: float) -> List[Request]:
+        lam = self._arrival_rate(now) * dt
+        n = self.rng.poisson(lam)
+        out = []
+        for _ in range(n):
+            if (self._open_sessions
+                    and self.rng.random() < self.w.session_prob):
+                i = self.rng.integers(len(self._open_sessions))
+                sid, cur = self._open_sessions[i]
+                grow = int(self.rng.exponential(self.w.session_growth)) + 1
+                total = min(cur + grow, int(self.w.lengths.hi))
+                self._open_sessions[i] = (sid, total)
+            else:
+                sid = self._next_session
+                self._next_session += 1
+                total = int(self.w.lengths.sample(self.rng, 1)[0])
+                self._open_sessions.append((sid, total))
+                if len(self._open_sessions) > 512:
+                    self._open_sessions.pop(0)
+            r = Request(self._next_rid, now, total, sid)
+            self._next_rid += 1
+            out.append(r)
+            self.all_requests.append(r)
+        return out
+
+    # ------------------------------------------------------------ execution
+    def _route_and_submit(self, req: Request, now: float):
+        hashes = req.block_hashes(self.sim.block_tokens)
+        matches = {name: c.match_hashes(hashes)
+                   for name, c in self.kv.clusters.items()}
+        decision = self.router.route(req.total_len, matches,
+                                     self.link.congestion_signal())
+        req.decision = decision
+        incr = max(decision.incremental, 1)
+        if decision.target == PRFAAS:
+            st = self.model.prfaas_profile.t_prefill(incr)
+            self.prfaas_pool.submit(req, st)
+        else:
+            st = self.model.pd_profile.t_prefill(incr)
+            self.pdp_pool.submit(req, st)
+
+    def _on_prefill_start(self, cluster: str):
+        def cb(req: Request, now: float, done: float):
+            req.prefill_start = now
+            req.prefill_done = done
+            self._inflight.append(req)
+            if cluster == PRFAAS:
+                incr = max(req.decision.incremental, 1)
+                nbytes = self.model.prfaas_profile.s_kv(req.total_len) \
+                    - (self.model.prfaas_profile.s_kv(req.decision.cached_tokens)
+                       if req.decision.cached_tokens else 0.0)
+                nbytes = max(nbytes, 1.0)
+                rel = layerwise_release(now, done - now, nbytes)
+
+                def on_done(t, _req=req):
+                    _req.transfer_done = t
+
+                self.link.submit(nbytes, now, release=rel, on_done=on_done)
+            else:
+                req.transfer_done = done      # intra-cluster RDMA: free
+        return cb
+
+    def _on_decode_start(self, req: Request, now: float, done: float):
+        req.decode_start = now
+        req.first_token = now + self.w.t_decode
+        req.done = done
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> dict:
+        sim, w = self.sim, self.w
+        now = 0.0
+        self._inflight: List[Request] = []
+        decode_time = w.output_len * w.t_decode
+        steps = int(sim.sim_time / sim.dt)
+        for step in range(steps):
+            now = step * sim.dt
+            for req in self._spawn_arrivals(now, sim.dt):
+                self._route_and_submit(req, now)
+            self.prfaas_pool.tick(now, sim.dt, self._on_prefill_start(PRFAAS))
+            self.pdp_pool.tick(now, sim.dt, self._on_prefill_start(PD))
+            self.link.tick(now, sim.dt)
+            # prefill+transfer complete -> decode queue (+cache insert)
+            still = []
+            for req in self._inflight:
+                ready = (req.prefill_done <= now
+                         and 0 <= req.transfer_done <= now)
+                if ready:
+                    cluster = req.decision.target
+                    self.kv.clusters[cluster].insert_hashes(
+                        req.block_hashes(sim.block_tokens))
+                    self.decode_pool.submit(req, decode_time)
+                else:
+                    still.append(req)
+            self._inflight = still
+            self.decode_pool.tick(now, sim.dt, self._on_decode_start)
+            self.router.observe_congestion(self.link.congestion_signal())
+            if self.autoscaler is not None:
+                tel = StageTelemetry(
+                    prefill_queue=len(self.prfaas_pool.queue)
+                    + len(self.pdp_pool.queue),
+                    decode_queue=len(self.decode_pool.queue))
+                new_sys = self.autoscaler.maybe_rebalance(now, tel)
+                if new_sys is not None:
+                    self.pdp_pool.capacity = new_sys.n_p
+                    self.decode_pool.capacity = new_sys.n_d * w.bs_max
+        return self.metrics()
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        sim = self.sim
+        horizon = sim.sim_time
+        t0 = horizon * sim.warmup_frac
+        done = [r for r in self.all_requests if r.done >= 0 and r.arrival >= t0]
+        ttft = np.array([r.first_token - r.arrival for r in done
+                         if r.first_token > 0])
+        thr = len(done) / max(1e-9, horizon - t0)
+        offload = sum(1 for r in self.all_requests
+                      if r.decision and r.decision.target == PRFAAS)
+        routed = sum(1 for r in self.all_requests if r.decision)
+        return {
+            "throughput_rps": thr,
+            "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
+            "ttft_p50": float(np.percentile(ttft, 50)) if len(ttft) else float("nan"),
+            "ttft_p90": float(np.percentile(ttft, 90)) if len(ttft) else float("nan"),
+            "ttft_p99": float(np.percentile(ttft, 99)) if len(ttft) else float("nan"),
+            "completed": len(done),
+            "offload_frac": offload / max(1, routed),
+            "egress_gbps": self.link.sent_bytes * 8 / 1e9 / max(1e-9, horizon),
+            "link_util": self.link.util_ewma,
+            "router_adjustments": self.router.adjustments,
+            "prefill_queue": len(self.prfaas_pool.queue) + len(self.pdp_pool.queue),
+            "decode_queue": len(self.decode_pool.queue),
+            "cache": self.kv.stats(),
+            "threshold": self.router.threshold,
+        }

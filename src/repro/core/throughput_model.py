@@ -1,0 +1,138 @@
+"""The paper's analytical throughput model (§3.4, Eqs. 1-8) + grid search.
+
+Roles: PrfaaS prefill (N_prfaas instances), PD-P (N_p), PD-D (N_d).
+A fraction p = P(L > t) of requests offload to PrfaaS; Eq. 6 gives
+
+    Lambda_max = min(Theta_prfaas / p, Theta_pdp / (1-p), Theta_pdd)
+
+with Theta_prfaas bandwidth-clipped by B_out (Eq. 3). ``grid_search``
+solves the two decision variables (t, N_p/N_d) exactly as §3.4.2/§4.2.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.hardware import Profile
+from repro.core.workload import Workload
+
+
+def kv_throughput(profile: Profile, l: float) -> float:
+    """Eq. 1: Φ_kv(l) = S_kv(l) / T_prefill(l), bytes/s."""
+    return profile.s_kv(int(l)) / profile.t_prefill(int(l))
+
+
+def egress_bandwidth(n_gpus: int, gpus_per_instance: int, profile: Profile,
+                     l_avg: float) -> float:
+    """Eq. 2: minimum egress bandwidth of an N-GPU prefill cluster, bytes/s."""
+    return (n_gpus / gpus_per_instance) * kv_throughput(profile, l_avg)
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    n_prfaas: int                 # PrfaaS prefill instances
+    n_p: int                      # PD prefill instances
+    n_d: int                      # PD decode instances
+    b_out: float                  # PrfaaS egress bandwidth (bytes/s)
+    threshold: float              # routing threshold t (tokens); inf => no offload
+    # beyond-paper: int8 KV quantization on the inter-DC wire (KIVI/CacheGen
+    # family, paper §5) — halves S_kv on the link, doubling the bandwidth-
+    # bound Θ_prfaas ceiling. 1.0 = off (paper-faithful).
+    kv_wire_compression: float = 1.0
+
+
+@dataclass
+class ThroughputModel:
+    prfaas_profile: Optional[Profile]   # None => no PrfaaS cluster
+    pd_profile: Profile
+    workload: Workload
+
+    # -- stage throughputs (req/s) ------------------------------------------
+    def theta_prfaas(self, sc: SystemConfig) -> float:
+        """Eq. 3: min(compute rate, egress rate) with layer-wise pipelining."""
+        if sc.n_prfaas == 0 or self.prfaas_profile is None:
+            return 0.0
+        if self.workload.lengths.p_gt(sc.threshold) <= 0.0:
+            return math.inf
+        l_long = self.workload.lengths.mean_above(sc.threshold)
+        compute = sc.n_prfaas / self.prfaas_profile.t_prefill(int(l_long))
+        wire_bytes = self.prfaas_profile.s_kv(int(l_long)) \
+            / max(sc.kv_wire_compression, 1e-9)
+        egress = sc.b_out / wire_bytes
+        return min(compute, egress)
+
+    def theta_pdp(self, sc: SystemConfig) -> float:
+        """Eq. 4 (RDMA intra-cluster: compute bound only)."""
+        if sc.n_p == 0:
+            return 0.0
+        frac_long = self.workload.lengths.p_gt(sc.threshold)
+        if sc.n_prfaas == 0 or frac_long >= 1.0:
+            l_short = self.workload.lengths.mean()
+        elif frac_long <= 0.0:
+            l_short = self.workload.lengths.mean()
+        else:
+            l_short = self.workload.lengths.mean_below(sc.threshold)
+        return sc.n_p / self.pd_profile.t_prefill(int(l_short))
+
+    def theta_pdd(self, sc: SystemConfig) -> float:
+        """Eq. 5: N_d * BS_max / (T_decode * L_out)."""
+        w = self.workload
+        return sc.n_d * w.bs_max / (w.t_decode * w.output_len)
+
+    # -- Eq. 6 ----------------------------------------------------------------
+    def lambda_max(self, sc: SystemConfig) -> float:
+        p = self.workload.lengths.p_gt(sc.threshold) if sc.n_prfaas else 0.0
+        terms = [self.theta_pdd(sc)]
+        if p > 0:
+            terms.append(self.theta_prfaas(sc) / p)
+        if p < 1:
+            terms.append(self.theta_pdp(sc) / (1.0 - p))
+        elif sc.n_p == 0 and p < 1:
+            return 0.0
+        return min(terms)
+
+    def egress_load(self, sc: SystemConfig, rate: Optional[float] = None) -> float:
+        """Average egress bytes/s at offered rate (default: Λ_max)."""
+        if sc.n_prfaas == 0:
+            return 0.0
+        rate = self.lambda_max(sc) if rate is None else rate
+        p = self.workload.lengths.p_gt(sc.threshold)
+        l_long = self.workload.lengths.mean_above(sc.threshold)
+        return rate * p * self.prfaas_profile.s_kv(int(l_long)) \
+            / max(sc.kv_wire_compression, 1e-9)
+
+    # -- §3.4.2: grid search over (t, N_p/N_d) --------------------------------
+    def grid_search(self, n_prfaas: int, n_pd_total: int, b_out: float,
+                    thresholds=None, kv_wire_compression: float = 1.0):
+        """Exhaustive 2-D search maximizing Λ_max (paper Fig. 5).
+
+        Returns (best SystemConfig, Λ_max, search trace).
+        """
+        lo = math.log(max(self.workload.lengths.lo, 256))
+        hi = math.log(self.workload.lengths.hi)
+        if thresholds is None:
+            thresholds = [math.exp(lo + (hi - lo) * i / 400)
+                          for i in range(401)]
+        if n_prfaas == 0:
+            thresholds = [math.inf]
+        best, best_rate, trace = None, -1.0, []
+        for n_p in range(0 if n_prfaas else 1, n_pd_total):
+            n_d = n_pd_total - n_p
+            for t in thresholds:
+                sc = SystemConfig(n_prfaas, n_p, n_d, b_out, t,
+                                  kv_wire_compression=kv_wire_compression)
+                rate = self.lambda_max(sc)
+                trace.append((n_p, n_d, t, rate))
+                if rate > best_rate:
+                    best, best_rate = sc, rate
+        return best, best_rate, trace
+
+    # -- §3.4.2 optimality residuals (Eqs. 7-8), for tests/analysis ----------
+    def balance_residuals(self, sc: SystemConfig):
+        p = self.workload.lengths.p_gt(sc.threshold)
+        eq7 = None
+        if 0 < p < 1:
+            eq7 = (self.theta_prfaas(sc) / p) - (self.theta_pdp(sc) / (1 - p))
+        eq8 = (self.theta_prfaas(sc) + self.theta_pdp(sc)) - self.theta_pdd(sc)
+        return eq7, eq8

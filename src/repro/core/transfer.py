@@ -1,0 +1,141 @@
+"""Cross-datacenter KV transfer engine (paper §3.3): flow-level model of the
+commodity-Ethernet inter-cluster link.
+
+Models the three mechanisms the paper combines:
+  * layer-wise prefill pipelining — a flow may start while its prefill is
+    still computing (release curve = prefill progress), so transfer overlaps
+    compute and only the tail is exposed;
+  * multi-connection TCP — flows share the link by processor sharing
+    (max-min fair); per-flow parallelism is folded into the fair share;
+  * congestion monitoring — utilization / queue-depth / drop signals are
+    exported each tick for the scheduler (§3.4.3 short-term loop).
+
+Fluid simulation with fixed ticks; bandwidth fluctuation is an OU-like
+mean-reverting multiplicative process (bursty links), seedable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Flow:
+    flow_id: int
+    total_bytes: float
+    # layer-wise pipelining: bytes eligible for the wire at time t
+    release: Callable[[float], float]
+    on_done: Optional[Callable[[float], None]] = None
+    sent: float = 0.0
+    start_time: float = 0.0
+    done_time: Optional[float] = None
+
+    def backlog(self, now: float) -> float:
+        return max(0.0, min(self.release(now), self.total_bytes) - self.sent)
+
+
+class Link:
+    """Fluid fair-share link with fluctuating capacity."""
+
+    def __init__(self, capacity_bps: float, fluctuation: float = 0.0,
+                 revert: float = 0.2, seed: int = 0):
+        self.capacity_bps = capacity_bps          # bits/s nominal
+        self.fluctuation = fluctuation            # rel. std of capacity
+        self.revert = revert
+        self._mult = 1.0
+        self._rng = np.random.default_rng(seed)
+        self.flows: Dict[int, Flow] = {}
+        self._next_id = 0
+        # telemetry for the scheduler
+        self.util_ewma = 0.0
+        self.queue_bytes = 0.0
+        self.drops = 0
+        self.sent_bytes = 0.0
+        self.busy_time = 0.0
+
+    # -------------------------------------------------------------- control
+    def current_capacity(self) -> float:
+        """bytes/s after fluctuation."""
+        return self.capacity_bps * self._mult / 8.0
+
+    def submit(self, total_bytes: float, now: float,
+               release: Optional[Callable[[float], float]] = None,
+               on_done: Optional[Callable[[float], None]] = None) -> Flow:
+        if release is None:
+            release = lambda t: total_bytes          # eager (no pipelining)
+        f = Flow(self._next_id, total_bytes, release, on_done,
+                 start_time=now)
+        self._next_id += 1
+        self.flows[f.flow_id] = f
+        return f
+
+    # ----------------------------------------------------------------- tick
+    def tick(self, now: float, dt: float):
+        # capacity fluctuation (mean-reverting log process)
+        if self.fluctuation > 0:
+            z = self._rng.standard_normal()
+            logm = math.log(self._mult)
+            logm += -self.revert * logm * dt \
+                + self.fluctuation * math.sqrt(dt) * z
+            self._mult = min(max(math.exp(logm), 0.3), 1.5)
+        cap = self.current_capacity() * dt                   # bytes this tick
+        active = [f for f in self.flows.values() if f.backlog(now) > 0]
+        total_backlog = sum(f.backlog(now) for f in active)
+        sent_this_tick = 0.0
+        # processor sharing with redistribution of unused shares
+        remaining = cap
+        while active and remaining > 1e-9:
+            share = remaining / len(active)
+            nxt = []
+            used = 0.0
+            for f in active:
+                take = min(f.backlog(now), share)
+                f.sent += take
+                used += take
+                if f.backlog(now) > 0:
+                    nxt.append(f)
+            remaining -= used
+            sent_this_tick += used
+            if used <= 1e-12:
+                break
+            active = nxt
+        # completions
+        done = [f for f in self.flows.values()
+                if f.sent >= f.total_bytes - 1e-6]
+        for f in done:
+            f.done_time = now + dt
+            del self.flows[f.flow_id]
+            if f.on_done:
+                f.on_done(now + dt)
+        # telemetry
+        self.sent_bytes += sent_this_tick
+        util = sent_this_tick / max(cap, 1e-9)
+        self.util_ewma = 0.98 * self.util_ewma + 0.02 * util
+        self.queue_bytes = max(0.0, total_backlog - sent_this_tick)
+        if util > 0.999 and self.queue_bytes > 0:
+            self.drops += 1                                  # congestion signal
+        self.busy_time += dt * min(util, 1.0)
+
+    # ------------------------------------------------------------ telemetry
+    def congestion_signal(self) -> dict:
+        return {"util": self.util_ewma, "queue_bytes": self.queue_bytes,
+                "drops": self.drops,
+                "inflight": len(self.flows)}
+
+
+def layerwise_release(prefill_start: float, prefill_time: float,
+                      total_bytes: float, n_layers: int = 64):
+    """Release curve for layer-wise pipelined prefill: layer i's KV becomes
+    wire-eligible when its compute finishes (staircase, ~linear ramp)."""
+
+    def release(t: float) -> float:
+        if prefill_time <= 0:
+            return total_bytes
+        frac = (t - prefill_start) / prefill_time
+        steps = math.floor(max(0.0, min(1.0, frac)) * n_layers)
+        return total_bytes * steps / n_layers
+
+    return release

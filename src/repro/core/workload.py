@@ -1,0 +1,97 @@
+"""Workload model: truncated log-normal request lengths (paper §4.1).
+
+All conditional moments needed by the throughput model — p(t) = P(L > t),
+l_long(t) = E[L | L > t], l_short(t) = E[L | L <= t] — are computed in closed
+form from the truncated log-normal (no scipy; erf from math).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def _phi(z: float) -> float:
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+@dataclass(frozen=True)
+class LogNormalLengths:
+    mu: float = 9.90
+    sigma: float = 1.00
+    lo: float = 128.0
+    hi: float = 131072.0
+
+    # -- closed-form moments -------------------------------------------------
+    def _z(self, x: float) -> float:
+        return (math.log(x) - self.mu) / self.sigma
+
+    @property
+    def _norm(self) -> float:
+        return _phi(self._z(self.hi)) - _phi(self._z(self.lo))
+
+    def p_gt(self, t: float) -> float:
+        """P(L > t) under truncation."""
+        t = min(max(t, self.lo), self.hi)
+        return (_phi(self._z(self.hi)) - _phi(self._z(t))) / self._norm
+
+    def _partial_mean(self, a: float, b: float) -> float:
+        """E[L ; a < L <= b] (unnormalized partial expectation)."""
+        m = math.exp(self.mu + 0.5 * self.sigma ** 2)
+        return m * (_phi(self._z(b) - self.sigma)
+                    - _phi(self._z(a) - self.sigma)) / self._norm
+
+    def mean(self) -> float:
+        return self._partial_mean(self.lo, self.hi)
+
+    def mean_above(self, t: float) -> float:
+        """E[L | L > t]."""
+        t = min(max(t, self.lo), self.hi)
+        p = self.p_gt(t)
+        if p <= 0:
+            return self.hi
+        return self._partial_mean(t, self.hi) / p
+
+    def mean_below(self, t: float) -> float:
+        """E[L | L <= t]."""
+        t = min(max(t, self.lo), self.hi)
+        p = 1.0 - self.p_gt(t)
+        if p <= 0:
+            return self.lo
+        return self._partial_mean(self.lo, t) / p
+
+    # -- sampling ------------------------------------------------------------
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """True truncation (rejection), matching the analytic moments —
+        clipping would put a point mass at the bounds."""
+        out = np.empty(n, np.float64)
+        filled = 0
+        while filled < n:
+            x = rng.lognormal(self.mu, self.sigma, size=max(n - filled, 64))
+            x = x[(x >= self.lo) & (x <= self.hi)]
+            take = min(len(x), n - filled)
+            out[filled:filled + take] = x[:take]
+            filled += take
+        return out.astype(np.int64)
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Full serving workload (paper §4.1 defaults)."""
+
+    lengths: LogNormalLengths = LogNormalLengths()
+    output_len: int = 1024
+    decode_tps_slo: float = 40.0          # tokens/s per stream (SLO)
+    bs_max: int = 20                      # decode slots per instance
+    # request arrival burstiness (MMPP 2-state modulation of Poisson rate)
+    burst_factor: float = 1.0             # 1.0 = plain Poisson
+    burst_period_s: float = 60.0
+    # prefix caching behaviour (agentic multi-turn sessions)
+    session_prob: float = 0.0             # P(request continues a session)
+    session_growth: float = 4096.0        # mean new tokens per turn
+
+    @property
+    def t_decode(self) -> float:
+        return 1.0 / self.decode_tps_slo

@@ -1,0 +1,13 @@
+from repro.distributed.collectives import (compress_grads_with_feedback,
+                                           dequantize_int8, global_norm,
+                                           quantize_int8,
+                                           zeros_like_residuals)
+from repro.distributed.sharding import (batch_pspec, batch_shardings,
+                                        cache_shardings, param_pspec,
+                                        params_shardings)
+
+__all__ = [
+    "batch_pspec", "batch_shardings", "cache_shardings", "param_pspec",
+    "params_shardings", "quantize_int8", "dequantize_int8", "global_norm",
+    "compress_grads_with_feedback", "zeros_like_residuals",
+]

@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import (attention, decode_attention, delta,
+                               delta_step, gla, gla_step)
+
+__all__ = ["ops", "ref", "attention", "decode_attention", "delta",
+           "delta_step", "gla", "gla_step"]

@@ -1,0 +1,115 @@
+"""Chunked gated linear attention for TPU (Pallas).
+
+Covers Mamba2/SSD (scalar per-head decay), Lightning/simple linear attention
+(decay = 1), GLA, and mLSTM (via the caller augmenting v with a normalizer
+column). Recurrence:
+
+    S_t = a_t * S_{t-1} + k_t v_t^T ,   o_t = q_t S_t ,   a_t = exp(log_a_t)
+
+TPU-native chunking: the chunk axis is a sequential grid dimension; the
+(dk x dv) fp32 state is carried in VMEM scratch. All decay factors are
+expressed as exp(differences of log-decay cumsums) with non-positive
+exponents, so every scaling factor is <= 1 (numerically safe for strong
+decay — no 1/gamma anywhere).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, la_ref, s0_ref, o_ref, sT_ref, state,
+                *, chunk, num_chunks):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)                    # (C, dk)
+    k = k_ref[0].astype(jnp.float32)                    # (C, dk)
+    v = v_ref[0].astype(jnp.float32)                    # (C, dv)
+    la = la_ref[0].astype(jnp.float32)                  # (C,)
+
+    csum = jnp.cumsum(la)                               # inclusive
+    gamma = jnp.exp(csum)[:, None]                      # (C, 1), <= 1
+    S = state[...]
+
+    # intra-chunk: A[t,s] = (q_t . k_s) * exp(csum_t - csum_s), s <= t
+    diff = csum[:, None] - csum[None, :]                # <= 0 on lower tri
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    incl = col <= row
+    decay = jnp.where(incl, jnp.exp(jnp.where(incl, diff, 0.0)), 0.0)
+    A = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * decay
+    o = jax.lax.dot(A, v) + jax.lax.dot(q * gamma, S)
+
+    # state update: S <- gamma_C * S + sum_s (gamma_C / gamma_s) k_s v_s^T
+    g_c = jnp.exp(csum[-1])
+    kscale = jnp.exp(csum[-1] - csum)[:, None]          # <= 1
+    state[...] = g_c * S + jax.lax.dot_general(
+        k * kscale, v, (((0,), (0,)), ((), ())))
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(c == num_chunks - 1)
+    def _finish():
+        sT_ref[0] = state[...]
+
+
+def gla_chunked(q, k, v, log_a, initial_state=None, *, chunk: int = 64,
+                interpret: bool = False):
+    """q,k: (B,H,S,dk); v: (B,H,S,dv); log_a: (B,H,S) (<=0).
+
+    Returns (o: (B,H,S,dv), final_state: (B,H,dk,dv) float32).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        # padded tokens: k = 0 (no state write), log_a = 0 (no decay)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    qr = q.reshape(B * H, Sp, dk)
+    kr = k.reshape(B * H, Sp, dk)
+    vr = v.reshape(B * H, Sp, dv)
+    lar = log_a.reshape(B * H, Sp)
+    s0 = initial_state.reshape(B * H, dk, dv)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk, num_chunks=nc)
+    o, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, dv), q.dtype),
+            jax.ShapeDtypeStruct((B * H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, lar, s0)
+    o = o.reshape(B, H, Sp, dv)[:, :, :S]
+    return o, sT.reshape(B, H, dk, dv)

@@ -1,0 +1,216 @@
+"""Public kernel ops: jit-friendly dispatch wrappers.
+
+Each op:
+  * runs the Pallas kernel on TPU, or in ``interpret=True`` mode on CPU
+    (the kernel body executes in Python — bit-accurate vs the TPU lowering
+    semantics, used by the test suite);
+  * is differentiable via ``jax.custom_vjp`` whose backward pass is the VJP
+    of the pure-jnp oracle with recomputation (flash-attention-style: store
+    only the inputs, recompute the forward in the backward). Gradients are
+    therefore oracle-exact while the forward stays on the kernel.
+  * can be forced onto the oracle with ``use_kernel=False`` (or globally via
+    ``repro.kernels.ops.FORCE_REF`` for debugging).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attn as _decode
+from repro.kernels import delta as _delta
+from repro.kernels import flash_attn as _flash
+from repro.kernels import gla as _gla
+from repro.kernels import ref
+
+FORCE_REF = False
+
+# lowerable memory-efficient paths (used when the TPU kernel is unavailable
+# -- CPU tests and the dry-run -- and as the kernels' backward recompute)
+from repro.models import chunked_attention as chk
+
+# below this many KV tokens the plain quadratic oracle is cheapest
+SMALL_SEQ = 1024
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _use_kernel(flag):
+    if FORCE_REF:
+        return False
+    return flag
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_vjp(causal, window, scale, q_offset, block_q, block_k, interpret):
+    @jax.custom_vjp
+    def op(q, k, v):
+        return _flash.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, block_q=block_q, block_k=block_k,
+            interpret=interpret)
+
+    def fwd(q, k, v):
+        return op(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        # memory-safe recompute backward (flash-style)
+        _, vjp = jax.vjp(
+            lambda q, k, v: _attention_jnp(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset),
+            q, k, v)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def _attention_jnp(q, k, v, *, causal=True, window=0, scale=None,
+                   q_offset=0):
+    """Shape-adaptive lowerable path: banded (SWA) / checkpointed-MEA
+    (long full attention) / quadratic oracle (short)."""
+    from repro.models.perf_flags import FLAGS, shard_hint
+    if FLAGS.shard_attention:
+        q = shard_hint(q, ("pod", "data"), "model", None, None)
+        k = shard_hint(k, ("pod", "data"),
+                       "model" if k.shape[1] % 16 == 0 else None, None, None)
+        v = shard_hint(v, ("pod", "data"),
+                       "model" if v.shape[1] % 16 == 0 else None, None, None)
+    Sk = k.shape[2]
+    if Sk <= SMALL_SEQ:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale, q_offset=q_offset)
+    if (window > 0 and causal and q.shape[2] == Sk
+            and Sk >= 2 * window):
+        return chk.swa_banded(q, k, v, window=window, scale=scale)
+    return chk.mea_attention(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset)
+
+
+def attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+              block_q=128, block_k=128, use_kernel=True):
+    """Full attention (GQA/MQA/MHA/SWA). q:(B,Hq,S,D) k,v:(B,Hkv,S,D)."""
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(k.shape[2]):
+        return _attention_jnp(q, k, v, causal=causal, window=window,
+                              scale=scale, q_offset=q_offset)
+    op = _flash_vjp(causal, window, scale, q_offset, block_q, block_k,
+                    _on_cpu())
+    return op(q, k, v)
+
+
+# tests set this to exercise the ops->Pallas dispatch on CPU explicitly
+FORCE_KERNEL_ON_CPU = False
+
+
+def _on_cpu_lowering(seq: int) -> bool:
+    """On CPU the jnp paths are used for ALL model lowering: interpret-mode
+    Pallas executes the grid as a Python-semantics loop whose HLO cost
+    profile is meaningless (and seq-dependent dispatch would make the cost
+    probes measure different programs at different probe points). The
+    kernels are TPU-target; on CPU they are validated by the dedicated
+    kernel tests (interpret=True) and via FORCE_KERNEL_ON_CPU."""
+    return _on_cpu() and not FORCE_KERNEL_ON_CPU
+
+
+# ---------------------------------------------------------------------------
+# gated linear attention (Mamba2 / GLA / Lightning / mLSTM)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _gla_vjp(chunk, interpret):
+    @jax.custom_vjp
+    def op(q, k, v, log_a, s0):
+        return _gla.gla_chunked(q, k, v, log_a, s0, chunk=chunk,
+                                interpret=interpret)
+
+    def fwd(q, k, v, log_a, s0):
+        return op(q, k, v, log_a, s0), (q, k, v, log_a, s0)
+
+    def bwd(res, g):
+        q, k, v, log_a, s0 = res
+        _, vjp = jax.vjp(lambda *a: chk.gla_chunked_jnp(*a), q, k, v, log_a,
+                         s0)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def gla(q, k, v, log_a, initial_state=None, *, chunk=64, use_kernel=True):
+    """Gated linear attention. Returns (o, final_state)."""
+    B, H, _, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(q.shape[2]):
+        return chk.gla_chunked_jnp(q, k, v, log_a, initial_state, chunk=chunk)
+    return _gla_vjp(chunk, _on_cpu())(q, k, v, log_a, initial_state)
+
+
+# ---------------------------------------------------------------------------
+# (gated) delta rule (DeltaNet / GDN / KDA)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _delta_vjp(chunk, interpret):
+    @jax.custom_vjp
+    def op(q, k, v, log_a, beta, s0):
+        return _delta.delta_chunked(q, k, v, log_a, beta, s0, chunk=chunk,
+                                    interpret=interpret)
+
+    def fwd(q, k, v, log_a, beta, s0):
+        return op(q, k, v, log_a, beta, s0), (q, k, v, log_a, beta, s0)
+
+    def bwd(res, g):
+        q, k, v, log_a, beta, s0 = res
+        _, vjp = jax.vjp(lambda *a: chk.delta_chunked_jnp(*a), q, k, v,
+                         log_a, beta, s0)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def delta(q, k, v, log_a, beta, initial_state=None, *, chunk=64,
+          use_kernel=True):
+    """Gated delta rule. Returns (o, final_state)."""
+    B, H, _, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(q.shape[2]):
+        return chk.delta_chunked_jnp(q, k, v, log_a, beta, initial_state,
+                                     chunk=chunk)
+    return _delta_vjp(chunk, _on_cpu())(q, k, v, log_a, beta, initial_state)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (no grad path needed — serving only)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0, scale=None,
+                     block_k=512, use_kernel=True):
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(k_cache.shape[2]):
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths,
+                                        window=window, scale=scale)
+    return _decode.decode_attention(q, k_cache, v_cache, lengths,
+                                    window=window, scale=scale,
+                                    block_k=block_k, interpret=_on_cpu())
+
+
+# single-step recurrent updates are trivially jnp (no kernel needed)
+gla_step = ref.gla_step_ref
+delta_step = ref.delta_step_ref

@@ -1,0 +1,190 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+All oracles compute in float32 internally and cast back to the input dtype,
+matching the kernels' accumulation strategy. They are also the differentiable
+path: ``ops.py`` wires each kernel's backward pass to the VJP of its oracle
+(recompute-based), so training gradients are oracle-exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# Full attention (MHA / GQA / MQA / SWA): the T_prefill hot loop
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None, q_offset: int = 0):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, Hq, Sq, D).
+
+    ``q_offset``: global position of q row 0 minus position of k row 0
+    (used when continuing from a cached prefix; 0 for plain self-attention).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    dtype = q.dtype
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows produce NaN -> zero them (padded rows only)
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated linear attention (Mamba2 / GLA / Lightning / mLSTM): bounded state
+# ---------------------------------------------------------------------------
+
+
+def gla_ref(q, k, v, log_a, initial_state=None):
+    """Sequential oracle for S_t = a_t * S_{t-1} + k_t v_t^T ; o_t = q_t S_t.
+
+    q, k: (B, H, S, dk); v: (B, H, S, dv); log_a: (B, H, S) with log a <= 0.
+    Returns (o: (B, H, S, dv) in q.dtype, final_state: (B, H, dk, dv) f32).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    dtype = q.dtype
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def per_head(q_h, k_h, v_h, a_h, s0):
+        def step(S, inp):
+            qt, kt, vt, at = inp
+            S = jnp.exp(at) * S + jnp.outer(kt, vt)
+            return S, qt @ S
+
+        return jax.lax.scan(step, s0, (q_h.astype(jnp.float32),
+                                       k_h.astype(jnp.float32),
+                                       v_h.astype(jnp.float32),
+                                       a_h.astype(jnp.float32)))
+
+    fn = jax.vmap(jax.vmap(per_head))
+    final, o = fn(q, k, v, log_a, initial_state)
+    return o.astype(dtype), final
+
+
+# ---------------------------------------------------------------------------
+# (Gated) delta rule (DeltaNet / GDN / KDA): the paper's case-study mixer
+# ---------------------------------------------------------------------------
+
+
+def delta_ref(q, k, v, log_a, beta, initial_state=None):
+    """Sequential oracle for the gated delta rule:
+
+        S_t = a_t (I - beta_t k_t k_t^T) S_{t-1} + beta_t k_t v_t^T
+        o_t = q_t S_t
+
+    q, k: (B, H, S, dk); v: (B, H, S, dv); log_a, beta: (B, H, S).
+    ``log_a = 0`` recovers plain DeltaNet. Keys are expected L2-normalized by
+    the caller (required for the delta operator to be a contraction).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    dtype = q.dtype
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def per_head(q_h, k_h, v_h, a_h, b_h, s0):
+        def step(S, inp):
+            qt, kt, vt, at, bt = inp
+            S = jnp.exp(at) * (S - bt * jnp.outer(kt, kt @ S))
+            S = S + bt * jnp.outer(kt, vt)
+            return S, qt @ S
+
+        return jax.lax.scan(step, s0, (q_h.astype(jnp.float32),
+                                       k_h.astype(jnp.float32),
+                                       v_h.astype(jnp.float32),
+                                       a_h.astype(jnp.float32),
+                                       b_h.astype(jnp.float32)))
+
+    fn = jax.vmap(jax.vmap(per_head))
+    final, o = fn(q, k, v, log_a, beta, initial_state)
+    return o.astype(dtype), final
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (flash-decode): one new token vs a long KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
+                         scale: float | None = None):
+    """q: (B, Hq, D); k_cache, v_cache: (B, Hkv, S, D); lengths: (B,) int32.
+
+    Valid keys for request b are positions [max(0, L_b - window), L_b) where
+    L_b = lengths[b] (the cache already contains the current token's K/V).
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    dtype = q.dtype
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k_cache.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), group, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", qf, kf)
+    from repro.models.perf_flags import FLAGS, shard_hint
+    if FLAGS.shard_attention:
+        # keep decode scores batch-sharded: without this, GSPMD computes
+        # the (B, Hq, S) scores batch-replicated and all-reduces 16x more
+        # bytes than necessary when the cache head_dim is sharded
+        scores = shard_hint(scores, ("pod", "data"), None, None)
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask &= kpos >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.any(mask, -1)[:, None, None], probs, 0.0)
+    return jnp.einsum("bhk,bhkd->bhd", probs, vf).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single-step recurrent updates (decode path for linear mixers)
+# ---------------------------------------------------------------------------
+
+
+def gla_step_ref(q, k, v, log_a, state):
+    """One decode step. q,k: (B,H,dk); v: (B,H,dv); log_a: (B,H); state f32."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return o.astype(q.dtype), state
+
+
+def delta_step_ref(q, k, v, log_a, beta, state):
+    """One gated-delta decode step (shapes as gla_step_ref + beta: (B,H))."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    b = beta.astype(jnp.float32)[..., None, None]
+    kS = jnp.einsum("bhk,bhkv->bhv", kf, state)
+    state = a * (state - b * jnp.einsum("bhk,bhv->bhkv", kf, kS))
+    state = state + b * jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    o = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return o.astype(q.dtype), state

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis + collective bytes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The XLA_FLAGS line above MUST run before any jax import (device count is
+locked at first init). Artifacts land in benchmarks/artifacts/dryrun/ as one
+JSON per cell; existing artifacts are skipped (resumable) unless --force.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import analyze
+from repro.configs import SHAPES, all_configs, get_config
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        params_shardings)
+from repro.launch import input_specs as specs
+from repro.launch.mesh import make_production_mesh, mesh_fingerprint
+from repro.models import Model
+from repro.models.perf_flags import VARIANTS, use_variant
+from repro.training import TrainConfig, init_opt_state, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+# per-shape training knobs (activation-memory control)
+TRAIN_MICROBATCHES = {"train_4k": 16}
+DECODE_HEADROOM = 64
+
+
+def _memory_stats(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+    except Exception as e:  # pragma: no cover - backend specific
+        out["error"] = str(e)
+    return out
+
+
+def _cost(compiled):
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, list):
+            c = c[0]
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+# per-variant launcher knobs (model-side flags live in perf_flags.VARIANTS)
+VARIANT_KNOBS = {
+    "baseline":   dict(fsdp=True, headdim=False),
+    "moe_shard":  dict(fsdp=True, headdim=False),
+    "no_fsdp":    dict(fsdp=False, headdim=False),
+    "decode_opt": dict(fsdp=False, headdim=True),
+    "seqpar":     dict(fsdp=True, headdim=False),
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               perf_variant: str = "baseline"):
+    """Lower + compile one cell. Returns (report dict, compiled)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    model = Model(cfg, use_kernels=True, remat=True)
+    p_specs = specs.params_specs(cfg)
+    t0 = time.time()
+
+    # hillclimb knobs (see EXPERIMENTS.md §Perf)
+    base = perf_variant.split("+")[0]
+    knobs = VARIANT_KNOBS.get(base, VARIANT_KNOBS["baseline"])
+    fsdp = knobs["fsdp"]
+    mb = TRAIN_MICROBATCHES.get(shape_name, 1)
+    for part in perf_variant.split("+")[1:]:
+        if part.startswith("mb"):
+            mb = int(part[2:])
+
+    flags_name = base if base in VARIANTS else "baseline"
+    with use_variant(flags_name), mesh:
+        ps = params_shardings(p_specs, mesh, fsdp=fsdp)
+        if shape.kind == "train":
+            tc = TrainConfig(microbatches=mb, remat=True)
+            step = make_train_step(model, tc)
+            o_specs = jax.eval_shape(lambda p: init_opt_state(p, tc), p_specs)
+            os_ = params_shardings(
+                {"master": o_specs["master"], "mu": o_specs["mu"],
+                 "nu": o_specs["nu"]}, mesh, fsdp=fsdp)
+            opt_sh = {"step": NamedSharding(mesh, P()), **os_}
+            batch = specs.train_batch_specs(cfg, shape)
+            bs = batch_shardings(batch, mesh)
+            fn = jax.jit(step, in_shardings=(ps, opt_sh, bs),
+                         out_shardings=(ps, opt_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_specs, o_specs, batch)
+        elif shape.kind == "prefill":
+            batch = specs.prefill_batch_specs(cfg, shape)
+            bs = batch_shardings(batch, mesh)
+            out_caches = jax.eval_shape(model.prefill, p_specs, batch)[1]
+            ocs = cache_shardings(out_caches, mesh)
+            fn = jax.jit(model.prefill, in_shardings=(ps, bs),
+                         out_shardings=(None, ocs))
+            lowered = fn.lower(p_specs, batch)
+        else:  # decode
+            model_d = Model(cfg, use_kernels=True)
+            B = shape.global_batch
+            capacity = shape.seq_len + DECODE_HEADROOM
+            enc_len = shape.seq_len if cfg.encoder_groups is not None else 0
+            caches = jax.eval_shape(
+                lambda: model_d.init_cache(B, capacity, enc_len=enc_len))
+            cs = cache_shardings(caches, mesh,
+                                 shard_seq_over_data=(B == 1),
+                                 shard_headdim=knobs["headdim"])
+            tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+            lng = jax.ShapeDtypeStruct((B,), jnp.int32)
+            ts = batch_shardings({"t": tok}, mesh)["t"]
+            fn = jax.jit(model_d.decode_step,
+                         in_shardings=(ps, ts, cs, ts),
+                         out_shardings=(None, cs),
+                         donate_argnums=(2,))
+            lowered = fn.lower(p_specs, tok, caches, lng)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = _cost(compiled)
+    mem = _memory_stats(compiled)
+    hlo = compiled.as_text()
+    mesh_name = "multi" if multi_pod else "single"
+    rep = analyze(arch, shape_name, mesh_name, chips, cost, hlo, cfg, shape,
+                  shape.kind, memory_stats=mem.get("temp_size_in_bytes", 0))
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "perf_variant": perf_variant,
+        "chips": chips, "kind": shape.kind,
+        "mesh_fingerprint": mesh_fingerprint(mesh),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_analysis": cost, "memory_analysis": mem,
+        "roofline": rep.to_dict(),
+        "hlo_bytes_len": len(hlo),
+    }
+    return report, compiled
+
+
+def cell_list(archs=None, shapes=None, include_paper_model=False):
+    cfgs = all_configs(assigned_only=not include_paper_model)
+    out = []
+    for name, cfg in cfgs.items():
+        if archs and name not in archs:
+            continue
+        for sname, shape in SHAPES.items():
+            if shapes and sname not in shapes:
+                continue
+            if shape.sub_quadratic_only and not cfg.runs_long_context:
+                continue
+            if name == "kimi-linear-1t" and shape.kind == "train":
+                continue  # 1T training needs >512 v5e chips (documented)
+            out.append((name, sname))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--perf-variant", default="baseline")
+    ap.add_argument("--include-paper-model", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = cell_list([args.arch] if args.arch else None,
+                      [args.shape] if args.shape else None,
+                      include_paper_model=args.include_paper_model)
+    failures = []
+    for arch, sname in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            tag = f"{arch}__{sname}__{mesh_name}"
+            if args.perf_variant != "baseline":
+                tag += f"__{args.perf_variant}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {tag}")
+                continue
+            print(f"[run ] {tag} ...", flush=True)
+            try:
+                report, _ = lower_cell(arch, sname, multi,
+                                       args.perf_variant)
+                with open(path, "w") as f:
+                    json.dump(report, f, indent=1)
+                r = report["roofline"]
+                print(f"[ok  ] {tag}: compile={report['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"roofline={r['roofline_frac']:.3f} "
+                      f"(c={r['t_compute']:.4f}s m={r['t_memory']:.4f}s "
+                      f"x={r['t_collective']:.4f}s)", flush=True)
+            except Exception as e:
+                failures.append((tag, str(e)))
+                with open(path + ".fail", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}",
+                      flush=True)
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    if failures:
+        for t, e in failures:
+            print(" -", t, e[:120])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation anywhere: params/opt-state come from ``eval_shape`` of
+the init functions, batches are synthesized structs, and decode caches come
+from ``eval_shape`` of ``Model.init_cache``. Modality frontends are STUBS:
+VLM cells get precomputed patch embeddings, audio cells get precomputed
+frame embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.configs.base import ModelConfig
+from repro.models import Model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_extras(cfg: ModelConfig, batch: int, seq: int, specs: dict):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.num_image_patches:
+        specs["patches"] = _sds((batch, cfg.num_image_patches, cfg.d_model),
+                                dt)
+    if cfg.encoder_groups is not None:
+        specs["frames"] = _sds((batch, seq, cfg.encoder_input_dim), dt)
+    return specs
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    specs = {"tokens": _sds((shape.global_batch, shape.seq_len + 1),
+                            jnp.int32)}
+    return _frontend_extras(cfg, shape.global_batch, shape.seq_len, specs)
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    specs = {"tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32)}
+    return _frontend_extras(cfg, shape.global_batch, shape.seq_len, specs)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """(tokens, caches, lengths) structs for serve_step: one new token with
+    a KV cache of seq_len."""
+    model = Model(cfg, use_kernels=True)
+    B = shape.global_batch
+    capacity = shape.seq_len + 8            # decode headroom
+    enc_len = shape.seq_len if cfg.encoder_groups is not None else 0
+    caches = jax.eval_shape(
+        lambda: model.init_cache(B, capacity, enc_len=enc_len))
+    tokens = _sds((B,), jnp.int32)
+    lengths = _sds((B,), jnp.int32)
+    return tokens, caches, lengths
+
+
+def params_specs(cfg: ModelConfig):
+    model = Model(cfg, use_kernels=True)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single-pod: (16, 16) -> ("data", "model")   = 256 chips (one v5e pod)
+Multi-pod : (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (device count is locked at first jax init — dryrun.py sets
+XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_fingerprint(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (tests/examples)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+On this CPU container use --smoke (reduced config). On real hardware the
+same entry point builds the production mesh and shards params/batch with
+the rules in repro.distributed.sharding.
+"""
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh, \
+    mesh_fingerprint
+from repro.models import Model
+from repro.training import (AdamWConfig, DataConfig, SyntheticLM,
+                            TrainConfig, TrainLoop, init_opt_state)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg, use_kernels=False, remat=True)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+    params = model.init(jax.random.PRNGKey(0))
+    tc = TrainConfig(
+        microbatches=args.microbatches, remat=True,
+        compress_grads=args.compress_grads,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                          total_steps=args.steps),
+        checkpoint_every=max(10, args.steps // 4),
+        checkpoint_dir=args.ckpt_dir)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch))
+    loop = TrainLoop(model, tc, data, mesh_fingerprint=mesh_fingerprint(mesh))
+    with mesh:
+        _, _, hist = loop.run(params, init_opt_state(params, tc), args.steps)
+    print(json.dumps({"first_loss": hist[0]["loss"],
+                      "final_loss": hist[-1]["loss"],
+                      "steps": len(hist),
+                      "mean_step_s": sum(h["time_s"] for h in hist)
+                      / len(hist)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (Model, extend_caches, prepare_decode_caches,
+                                sinusoidal_positions)
+
+__all__ = ["Model", "extend_caches", "prepare_decode_caches",
+           "sinusoidal_positions"]

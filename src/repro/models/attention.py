@@ -1,0 +1,245 @@
+"""Full-attention blocks: GQA / MQA / MHA / SWA / MLA (+ cross-attention).
+
+Three execution modes share one parameter set:
+  * train   — full-sequence, differentiable (kernel fwd + oracle-VJP bwd)
+  * prefill — full-sequence, returns the per-layer KVCache contribution
+              (the bytes PrfaaS ships across the inter-DC link)
+  * decode  — one token per request against a preallocated cache at
+              per-request lengths; MLA uses the absorbed (MQA-style) form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionSpec
+from repro.kernels import ops
+from repro.models.layers import apply_rope, init_linear, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, d_model: int, spec: AttentionSpec, dtype):
+    ks = jax.random.split(rng, 8)
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    if spec.kind == "mla":
+        R, Rp = spec.mla_kv_rank, spec.mla_rope_dim
+        p = {}
+        if spec.mla_q_rank:
+            p["wq_a"] = init_linear(ks[0], d_model, spec.mla_q_rank, dtype)
+            p["q_norm"] = jnp.ones((spec.mla_q_rank,), jnp.float32)
+            p["wq_b"] = init_linear(ks[1], spec.mla_q_rank, H * (D + Rp), dtype)
+        else:
+            p["wq"] = init_linear(ks[0], d_model, H * (D + Rp), dtype)
+        p["wkv_a"] = init_linear(ks[2], d_model, R + Rp, dtype)
+        p["kv_norm"] = jnp.ones((R,), jnp.float32)
+        p["wkv_b"] = init_linear(ks[3], R, Hkv * 2 * D, dtype)
+        p["wo"] = init_linear(ks[4], H * D, d_model, dtype)
+        return p
+    p = {
+        "wq": init_linear(ks[0], d_model, H * D, dtype, bias=spec.qkv_bias),
+        "wk": init_linear(ks[1], d_model, Hkv * D, dtype, bias=spec.qkv_bias),
+        "wv": init_linear(ks[2], d_model, Hkv * D, dtype, bias=spec.qkv_bias),
+        "wo": init_linear(ks[3], H * D, d_model, dtype),
+    }
+    return p
+
+
+def _lin(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def _split_heads(x, H, D):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, D).transpose(0, 2, 1, 3)      # (B,H,S,D)
+
+
+def _merge_heads(x):
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+# ---------------------------------------------------------------------------
+# GQA / SWA family
+# ---------------------------------------------------------------------------
+
+
+def gqa_forward(p, x, spec: AttentionSpec, positions, *, kv_source=None,
+                causal=True, use_kernels=True):
+    """Full-sequence attention. Returns (y, {"k","v"} cache contribution).
+
+    ``kv_source``: encoder output for cross-attention (keys/values from it).
+    ``causal=False`` for encoder (bidirectional) self-attention.
+    """
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    kv_in = x if kv_source is None else kv_source
+    q = _split_heads(_lin(p["wq"], x), H, D)
+    k = _split_heads(_lin(p["wk"], kv_in), Hkv, D)
+    v = _split_heads(_lin(p["wv"], kv_in), Hkv, D)
+    if spec.rope and not spec.is_cross:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    causal = causal and not spec.is_cross
+    o = ops.attention(q, k, v, causal=causal,
+                      window=spec.window if spec.kind == "swa" else 0,
+                      use_kernel=use_kernels)
+    y = _merge_heads(o) @ p["wo"]["w"]
+    # cache layout: (B, S, Hkv, D) — sequence-major for block-pool slicing
+    cache = {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+    return y, cache
+
+
+def gqa_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
+    """x: (B, 1, d); cache: {"k","v": (B, S_cap, Hkv, D)}; lengths: (B,).
+
+    Writes the new token's K/V at ``lengths`` then attends over
+    ``lengths + 1`` keys. Returns (y, updated cache).
+    """
+    B = x.shape[0]
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    q = _split_heads(_lin(p["wq"], x), H, D)                 # (B,H,1,D)
+    pos = lengths.astype(jnp.int32)[:, None]                 # (B,1)
+
+    if spec.is_cross:
+        # cross-attention: cache holds precomputed encoder K/V, length fixed
+        kc = cache["k"].transpose(0, 2, 1, 3)
+        vc = cache["v"].transpose(0, 2, 1, 3)
+        enc_len = jnp.full((B,), kc.shape[2], jnp.int32)
+        o = ops.decode_attention(q[:, :, 0], kc, vc, enc_len,
+                                 use_kernel=use_kernels)
+        return _merge_heads(o[:, :, None]) @ p["wo"]["w"], cache
+
+    k = _split_heads(_lin(p["wk"], x), Hkv, D)
+    v = _split_heads(_lin(p["wv"], x), Hkv, D)
+    if spec.rope:
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+
+    # SWA caches are window-sized ring buffers: slot = position % W_buf.
+    # Softmax is order-invariant and RoPE phases are baked in at write time,
+    # so ring placement preserves exact attention semantics while keeping
+    # the decode-side KV footprint at O(window) — this is what makes SWA
+    # archs "PrfaaS-friendly" on the decode cluster too.
+    w_buf = cache["k"].shape[1]
+    write_idx = jnp.mod(pos[:, 0], w_buf)
+    eff_len = jnp.minimum(lengths + 1, w_buf)
+
+    def upd(buf, new, idx):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (idx, 0, 0))
+
+    kbuf = jax.vmap(upd)(cache["k"], k.transpose(0, 2, 1, 3), write_idx)
+    vbuf = jax.vmap(upd)(cache["v"], v.transpose(0, 2, 1, 3), write_idx)
+    o = ops.decode_attention(
+        q[:, :, 0], kbuf.transpose(0, 2, 1, 3), vbuf.transpose(0, 2, 1, 3),
+        eff_len, use_kernel=use_kernels)
+    y = _merge_heads(o[:, :, None]) @ p["wo"]["w"]
+    return y, {"k": kbuf, "v": vbuf}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2-style latent KV)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p, x, spec: AttentionSpec):
+    H, D, Rp = spec.q_heads, spec.head_dim, spec.mla_rope_dim
+    if spec.mla_q_rank:
+        qa = rms_norm(_lin(p["wq_a"], x), p["q_norm"])
+        q = _lin(p["wq_b"], qa)
+    else:
+        q = _lin(p["wq"], x)
+    q = _split_heads(q, H, D + Rp)
+    return q[..., :D], q[..., D:]                            # nope, pe
+
+
+def mla_forward(p, x, spec: AttentionSpec, positions, *, use_kernels=True):
+    """Prefill/train MLA: decompress K/V (MHA form), cache only latents."""
+    B, S, _ = x.shape
+    H, D, R, Rp = spec.q_heads, spec.head_dim, spec.mla_kv_rank, spec.mla_rope_dim
+    q_nope, q_pe = _mla_q(p, x, spec)
+    kv_a = _lin(p["wkv_a"], x)                               # (B,S,R+Rp)
+    ckv = rms_norm(kv_a[..., :R], p["kv_norm"])
+    k_pe = kv_a[..., R:][:, None]                            # (B,1,S,Rp)
+    q_pe = apply_rope(q_pe, positions, spec.rope_theta)
+    k_pe = apply_rope(k_pe, positions, spec.rope_theta)
+
+    kv = _lin(p["wkv_b"], ckv)                               # (B,S,Hkv*2D)
+    kv = kv.reshape(B, S, spec.kv_heads, 2 * D).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :D], kv[..., D:]
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_pe, (B, spec.kv_heads, S, Rp))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    o = ops.attention(q, k, v, causal=True, scale=(D + Rp) ** -0.5,
+                      use_kernel=use_kernels)
+    y = _merge_heads(o) @ p["wo"]["w"]
+    cache = {"ckv": ckv, "kpe": k_pe[:, 0]}                  # (B,S,R), (B,S,Rp)
+    return y, cache
+
+
+def mla_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
+    """Absorbed MLA decode: MQA over the latent cache (Dk=R+Rp, Dv=R)."""
+    B = x.shape[0]
+    H, D, R, Rp = spec.q_heads, spec.head_dim, spec.mla_kv_rank, spec.mla_rope_dim
+    pos = lengths.astype(jnp.int32)[:, None]
+    q_nope, q_pe = _mla_q(p, x, spec)                        # (B,H,1,D/Rp)
+    q_pe = apply_rope(q_pe, pos, spec.rope_theta)
+
+    kv_a = _lin(p["wkv_a"], x)                               # (B,1,R+Rp)
+    ckv_new = rms_norm(kv_a[..., :R], p["kv_norm"])
+    kpe_new = apply_rope(kv_a[..., R:][:, None], pos, spec.rope_theta)[:, 0]
+
+    def upd(buf, new, idx):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (idx, 0))
+
+    ckv_buf = jax.vmap(upd)(cache["ckv"], ckv_new, pos[:, 0])
+    kpe_buf = jax.vmap(upd)(cache["kpe"], kpe_new, pos[:, 0])
+
+    # absorb W_uk into q: q_abs[h, r] = sum_d q_nope[h, d] * W_uk[r, h, d]
+    wkv_b = p["wkv_b"]["w"].reshape(R, spec.kv_heads, 2 * D)
+    w_uk, w_uv = wkv_b[..., :D], wkv_b[..., D:]              # (R,Hkv,D)
+    group = H // spec.kv_heads
+    w_uk_q = jnp.repeat(w_uk, group, axis=1)                 # (R,H,D)
+    w_uv_q = jnp.repeat(w_uv, group, axis=1)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk_q.astype(jnp.float32))           # (B,H,R)
+    q_eff = jnp.concatenate([q_abs, q_pe[:, :, 0].astype(jnp.float32)], -1)
+    k_eff = jnp.concatenate([ckv_buf, kpe_buf], -1)[:, None]  # (B,1,S,R+Rp)
+    v_eff = ckv_buf[:, None]                                  # (B,1,S,R)
+    o_lat = ops.decode_attention(q_eff.astype(x.dtype),
+                                 k_eff.astype(x.dtype),
+                                 v_eff.astype(x.dtype), lengths + 1,
+                                 scale=(D + Rp) ** -0.5,
+                                 use_kernel=use_kernels)     # (B,H,R)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(jnp.float32),
+                   w_uv_q.astype(jnp.float32)).astype(x.dtype)
+    y = o.reshape(B, 1, H * D) @ p["wo"]["w"]
+    return y, {"ckv": ckv_buf, "kpe": kpe_buf}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(p, x, spec: AttentionSpec, positions, *, kv_source=None,
+                      causal=True, use_kernels=True):
+    if spec.kind == "mla":
+        return mla_forward(p, x, spec, positions, use_kernels=use_kernels)
+    return gqa_forward(p, x, spec, positions, kv_source=kv_source,
+                       causal=causal, use_kernels=use_kernels)
+
+
+def attention_decode(p, x, spec: AttentionSpec, cache, lengths, *,
+                     use_kernels=True):
+    if spec.kind == "mla":
+        return mla_decode(p, x, spec, cache, lengths, use_kernels=use_kernels)
+    return gqa_decode(p, x, spec, cache, lengths, use_kernels=use_kernels)

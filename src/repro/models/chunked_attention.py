@@ -1,0 +1,311 @@
+"""Memory-efficient, XLA-lowerable attention/linear-mixer paths.
+
+These are the implementations the multi-pod dry-run compiles (Pallas TPU
+kernels validate in interpret mode but are opaque custom-calls to
+``cost_analysis``; these chunked jnp forms expose the same FLOPs/bytes
+structure to XLA):
+
+  * ``flash_chunked``  — online-softmax scan over KV blocks, O(S*block)
+    memory, GQA without head materialization;
+  * ``swa_banded``     — scan over Q blocks, each attending only its
+    (window + block) KV band -> *linear* FLOPs for sliding-window archs
+    (a full-mask scan would report quadratic HLO FLOPs for SWA);
+  * ``gla_chunked_jnp`` / ``delta_chunked_jnp`` — the same chunk math as
+    the Pallas kernels (decay-safe exp-of-differences, WY/Neumann inverse),
+    expressed as ``lax.scan`` over chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+# cost-probe mode: unroll inner scans so compiled.cost_analysis() counts
+# every iteration (XLA counts while bodies once). Set by analysis.costfit.
+UNROLL = False
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=True if UNROLL else 1)
+
+
+# ---------------------------------------------------------------------------
+# full attention, chunked over KV (online softmax)
+# ---------------------------------------------------------------------------
+
+
+def flash_chunked(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+                  block_k=512):
+    """q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,Dk/Dv). O(Sq*block_k) live memory."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if q_offset == 0 and causal and Sq != Sk:
+        q_offset = Sk - Sq
+    dtype = q.dtype
+
+    block_k = min(block_k, Sk)
+    pad = (-Sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (Sk + pad) // block_k
+
+    qf = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32) * scale
+    kc = k.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, nk, block_k, Dv).transpose(2, 0, 1, 3, 4)
+
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, j = inp                                # (B,Hkv,bk,D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb.astype(jnp.float32))
+        kpos = j * block_k + jnp.arange(block_k)[None, :]
+        mask = kpos < Sk
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        corr = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - safe))
+        p = jnp.where(s == NEG_INF, 0.0, jnp.exp(s - safe))
+        l = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                      vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = _scan(body, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).reshape(B, Hq, Sq, Dv)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# sliding-window attention, banded over Q (linear FLOPs)
+# ---------------------------------------------------------------------------
+
+
+def swa_banded(q, k, v, *, window, scale=None, block_q=512):
+    """Causal SWA: each Q block attends its (window + block_q) KV band.
+
+    FLOPs = O(S * (window + block_q)) — linear in S, matching what the SWA
+    Pallas kernel achieves on TPU via block skipping.
+    """
+    B, Hq, S, D = q.shape
+    _, Hkv, _, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    dtype = q.dtype
+
+    block_q = min(block_q, S)
+    pad = (-S) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = (S + pad) // block_q
+    band = window + block_q                            # KV span per q block
+    # left-pad K/V so every band slice is in range
+    kp = jnp.pad(k, ((0, 0), (0, 0), (band, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (band, pad), (0, 0)))
+
+    qf = q.reshape(B, Hkv, G, nq, block_q, D).astype(jnp.float32) * scale
+
+    def body(_, i):
+        qb = qf[:, :, :, i]                            # (B,Hkv,G,bq,D)
+        start = i * block_q                            # first q pos in block
+        kb = jax.lax.dynamic_slice_in_dim(kp, start + block_q, band, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start + block_q, band, axis=2)
+        # kb covers absolute positions [start - window, start + block_q)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb.astype(jnp.float32))
+        qpos = start + jnp.arange(block_q)[:, None]
+        kpos = start - window + jnp.arange(band)[None, :]
+        mask = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - window) \
+            & (kpos < S) & (qpos < S)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.any(mask, -1)[None, None, None][..., None], p, 0.0)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return None, o
+
+    body = jax.checkpoint(body)       # bwd recomputes per-band scores
+    _, blocks = _scan(body, None, jnp.arange(nq))
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, S + pad, Dv)
+    return out[:, :, :S].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# differentiable memory-efficient attention (checkpointed Q-block scan)
+# ---------------------------------------------------------------------------
+
+
+def mea_attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+                  block_q=512):
+    """Flash-style memory profile for *training*: scan over Q blocks, each
+    block's (bq x Sk) scores are checkpointed (recomputed in backward), so
+    the saved residuals are O(S*Dv) instead of O(S^2)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if q_offset == 0 and causal and Sq != Sk:
+        q_offset = Sk - Sq
+    dtype = q.dtype
+
+    block_q = min(block_q, Sq)
+    pad = (-Sq) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = (Sq + pad) // block_q
+    qf = (q.reshape(B, Hkv, G, nq, block_q, D)
+          .transpose(3, 0, 1, 2, 4, 5).astype(jnp.float32) * scale)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(Sk)[None, :]
+
+    def body(_, inp):
+        qb, i = inp                                    # (B,Hkv,G,bq,D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kf)
+        qpos = q_offset + i * block_q + jnp.arange(block_q)[:, None]
+        mask = (qpos - q_offset) < Sq
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.any(mask, -1)[None, None, None][..., None], p, 0.0)
+        return None, jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+
+    _, blocks = _scan(jax.checkpoint(body), None, (qf, jnp.arange(nq)))
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq + pad, Dv)
+    return out[:, :, :Sq].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated linear attention, chunk-scan (same math as the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def gla_chunked_jnp(q, k, v, log_a, initial_state, *, chunk=64):
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    dtype = q.dtype
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+
+    def split(x):
+        return x.reshape(B, H, nc, chunk, -1).transpose(2, 0, 1, 3, 4) \
+            .astype(jnp.float32)
+
+    qc, kc, vc = split(q), split(k), split(v)
+    lac = log_a.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3) \
+        .astype(jnp.float32)
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    incl = col <= row
+
+    def body(state, inp):
+        qb, kb, vb, la = inp
+        csum = jnp.cumsum(la, axis=-1)                  # (B,H,C)
+        gamma = jnp.exp(csum)[..., None]
+        diff = csum[..., :, None] - csum[..., None, :]
+        decay = jnp.where(incl, jnp.exp(jnp.where(incl, diff, 0.0)), 0.0)
+        A = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * decay
+        o = jnp.einsum("bhqk,bhkv->bhqv", A, vb) \
+            + jnp.einsum("bhqd,bhdv->bhqv", qb * gamma, state)
+        g_c = jnp.exp(csum[..., -1:])[..., None]
+        kscale = jnp.exp(csum[..., -1:] - csum)[..., None]
+        state = g_c * state + jnp.einsum("bhkd,bhkv->bhdv", kb * kscale, vb)
+        return state, o
+
+    state, os_ = _scan(body, initial_state.astype(jnp.float32),
+                       (qc, kc, vc, lac))
+    o = os_.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, dv)[:, :, :S]
+    return o.astype(dtype), state
+
+
+# ---------------------------------------------------------------------------
+# (gated) delta rule, chunk-scan (WY + Neumann, same math as kernel)
+# ---------------------------------------------------------------------------
+
+
+def delta_chunked_jnp(q, k, v, log_a, beta, initial_state, *, chunk=64):
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    dtype = q.dtype
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+        beta = jnp.pad(beta, ((0, 0), (0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+
+    def split(x):
+        return x.reshape(B, H, nc, chunk, -1).transpose(2, 0, 1, 3, 4) \
+            .astype(jnp.float32)
+
+    qc, kc, vc = split(q), split(k), split(v)
+    lac = log_a.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3) \
+        .astype(jnp.float32)
+    bc = beta.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3) \
+        .astype(jnp.float32)
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    strict = col < row
+    incl = col <= row
+    eye = jnp.eye(chunk, dtype=jnp.float32)
+    steps = max(1, (chunk - 1).bit_length())
+
+    def body(state, inp):
+        qb, kb, vb, la, bb = inp
+        csum = jnp.cumsum(la, axis=-1)
+        gamma = jnp.exp(csum)[..., None]
+        diff = csum[..., :, None] - csum[..., None, :]
+        dstrict = jnp.where(strict, jnp.exp(jnp.where(strict, diff, 0.0)), 0.0)
+        dincl = jnp.where(incl, jnp.exp(jnp.where(incl, diff, 0.0)), 0.0)
+        kkt = jnp.einsum("bhqd,bhkd->bhqk", kb, kb)
+        n = bb[..., :, None] * (kkt * dstrict)
+        m = -n
+        r = eye + m
+        for _ in range(steps - 1):
+            m = jnp.einsum("bhij,bhjk->bhik", m, m)
+            r = r + jnp.einsum("bhij,bhjk->bhik", r, m)
+        rhs = bb[..., None] * (vb - jnp.einsum("bhkd,bhdv->bhkv",
+                                               kb * gamma, state))
+        u = jnp.einsum("bhij,bhjv->bhiv", r, rhs)
+        qkt = jnp.einsum("bhqd,bhkd->bhqk", qb, kb)
+        o = jnp.einsum("bhqd,bhdv->bhqv", qb * gamma, state) \
+            + jnp.einsum("bhqk,bhkv->bhqv", qkt * dincl, u)
+        g_c = jnp.exp(csum[..., -1:])[..., None]
+        kscale = jnp.exp(csum[..., -1:] - csum)[..., None]
+        state = g_c * state + jnp.einsum("bhkd,bhkv->bhdv", kb * kscale, u)
+        return state, o
+
+    state, os_ = _scan(body, initial_state.astype(jnp.float32),
+                       (qc, kc, vc, lac, bc))
+    o = os_.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, dv)[:, :, :S]
+    return o.astype(dtype), state

@@ -1,0 +1,89 @@
+"""KVCache byte accounting + (de)serialization helpers for transfer.
+
+``kv_bytes`` / ``kv_bytes_per_token`` implement the paper's S_kv(l) exactly
+(Eq. 1 numerator): full-attn layers scale with min(l, window), MLA layers
+cache latents, linear/SSM layers contribute O(1) state. These numbers drive
+the throughput model, the router, and the link simulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def kv_bytes(cfg: ModelConfig, seq_len: int, dtype_bytes: int = 2) -> int:
+    """Total per-request KVCache+state bytes at context length seq_len."""
+    return cfg.kv_cache_bytes(seq_len, dtype_bytes)
+
+
+def kv_bytes_incremental(cfg: ModelConfig, cached_len: int, total_len: int,
+                         dtype_bytes: int = 2) -> int:
+    """Bytes produced by prefilling [cached_len, total_len) — what actually
+    crosses the inter-DC link for a prefix-cache-hit request. Linear-state
+    layers always resend their (fixed-size) state snapshot."""
+    full = kv_bytes(cfg, total_len, dtype_bytes)
+    prior = kv_bytes(cfg, cached_len, dtype_bytes) if cached_len else 0
+    # linear states are included in both -> add one state snapshot back
+    state = sum(b.mixer.state_bytes() for *_, b in cfg.iter_blocks()
+                if not hasattr(b.mixer, "q_heads"))
+    return max(full - prior, 0) + (state if cached_len else 0)
+
+
+def cache_num_bytes(caches) -> int:
+    """Actual byte size of a prefill cache pytree (for link simulation)."""
+    leaves = jax.tree.leaves(caches)
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in leaves))
+
+
+def flatten_cache_for_transfer(caches):
+    """Flatten a cache pytree to a list of (path, array) wire chunks, one per
+    layer tensor — the unit of layer-wise pipelined transfer (paper §3.3)."""
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append((name, leaf))
+    return out
+
+
+def quantize_cache_for_wire(caches):
+    """int8-quantize K/V/latent leaves for the inter-DC wire (KIVI-style
+    per-tensor symmetric). Recurrent fp32 states ship uncompressed (tiny,
+    numerically sensitive). Returns (wire pytree, bytes)."""
+    import jax.numpy as jnp
+    from repro.distributed.collectives import quantize_int8
+
+    def enc(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if leaf.dtype == jnp.bfloat16 and any(
+                k in name for k in ("'k'", "'v'", "'ckv'", "'kpe'")):
+            q, scale = quantize_int8(leaf.astype(jnp.float32))
+            return {"q": q, "scale": scale}
+        return leaf
+
+    wire = jax.tree_util.tree_map_with_path(enc, caches)
+    return wire, cache_num_bytes(wire)
+
+
+def dequantize_cache_from_wire(wire):
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed.collectives import dequantize_int8
+
+    def dec(leaf):
+        return leaf
+
+    def walk(node):
+        if isinstance(node, dict) and set(node) == {"q", "scale"}:
+            return dequantize_int8(node["q"], node["scale"]).astype(
+                jnp.bfloat16)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(wire)

@@ -1,0 +1,286 @@
+"""Shared layer primitives: norms, RoPE, FFN, sort-based dropless MoE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNSpec
+from repro.models.perf_flags import FLAGS, shard_hint
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, S, D); positions: (B, S) int32. Rotates pairs (2i, 2i+1)."""
+    B, H, S, D = x.shape
+    inv = rope_freqs(D, theta)                               # (D/2,)
+    ang = positions.astype(jnp.float32)[:, None, :, None] * inv  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32).reshape(B, H, S, D // 2, 2)
+    x0, x1 = xf[..., 0], xf[..., 1]
+    out = jnp.stack([x0 * cos - x1 * sin, x0 * sin + x1 * cos], axis=-1)
+    return out.reshape(B, H, S, D).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(rng, d_model: int, spec: FFNSpec, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    std_in = d_model ** -0.5
+    std_out = spec.d_ff ** -0.5
+    p = {"w1": jax.random.normal(k1, (d_model, spec.d_ff), dtype) * std_in,
+         "w2": jax.random.normal(k2, (spec.d_ff, d_model), dtype) * std_out}
+    if spec.activation in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k3, (d_model, spec.d_ff), dtype) * std_in
+    return p
+
+
+def apply_ffn(p, x, spec: FFNSpec):
+    h = x @ p["w1"]
+    if spec.activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif spec.activation == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based dropless-ish dispatch (gather/scatter, no TxExC einsum).
+#
+# Dense one-hot dispatch (GShard) costs O(T * E * C * d) matmul FLOPs, which
+# at 352 experts exceeds the expert FLOPs themselves; the sort-based form is
+# O(T*k log) index work + pure gathers, which XLA shards cleanly over the
+# "model" axis (expert weights sharded on d_ff).
+# ---------------------------------------------------------------------------
+
+
+def init_moe(rng, d_model: int, spec: FFNSpec, dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    E, F = spec.num_experts, spec.d_ff
+    std_in = d_model ** -0.5
+    std_out = F ** -0.5
+    p = {
+        "router": jax.random.normal(k1, (d_model, E), jnp.float32) * std_in,
+        "w1": jax.random.normal(k2, (E, d_model, F), dtype) * std_in,
+        "w2": jax.random.normal(k3, (E, F, d_model), dtype) * std_out,
+    }
+    if spec.activation in ("swiglu", "geglu"):
+        p["w3"] = jax.random.normal(k4, (E, d_model, F), dtype) * std_in
+    if spec.shared_experts:
+        shared = FFNSpec(kind="dense", d_ff=spec.d_ff * spec.shared_experts,
+                         activation=spec.activation)
+        p["shared"] = init_ffn(k5, d_model, shared, dtype)
+    return p
+
+
+def moe_capacity(T: int, spec: FFNSpec) -> int:
+    cap = int(T * spec.top_k * spec.capacity_factor / spec.num_experts) + 1
+    return max(8, min(cap, T))
+
+
+def apply_moe_dropless(p, x, spec: FFNSpec):
+    """Dropless MoE via ``lax.ragged_dot`` (MegaBlocks-style grouped GEMM).
+
+    Exact (no capacity drop) — used on the serving path so that
+    decode-from-cache reproduces prefill logits bit-for-bit. Training keeps
+    the capacity-based path below (standard GShard semantics + aux loss).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    E, k = spec.num_experts, spec.top_k
+
+    logits = x2.astype(jnp.float32) @ p["router"]
+    gate_logits, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gate_logits, axis=-1)
+
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(se, length=E).astype(jnp.int32)
+
+    xs = x2[st]                                              # (T*k, d)
+    if FLAGS.shard_moe_tokens:
+        xs = shard_hint(xs, ("pod", "data"), None)
+    h = jax.lax.ragged_dot(xs, p["w1"], counts)
+    if spec.activation == "swiglu":
+        h = jax.nn.silu(h) * jax.lax.ragged_dot(xs, p["w3"], counts)
+    elif spec.activation == "geglu":
+        h = jax.nn.gelu(h) * jax.lax.ragged_dot(xs, p["w3"], counts)
+    else:
+        h = jax.nn.gelu(h)
+    ys = jax.lax.ragged_dot(h, p["w2"], counts)              # (T*k, d)
+    if FLAGS.shard_moe_tokens:
+        ys = shard_hint(ys, ("pod", "data"), "model")
+    out = jnp.zeros((T, d), ys.dtype).at[st].add(
+        ys * sg[:, None].astype(ys.dtype))
+    if FLAGS.shard_moe_tokens:
+        out = shard_hint(out, ("pod", "data"), None)
+
+    if "shared" in p:
+        shared = FFNSpec(kind="dense", d_ff=spec.d_ff * spec.shared_experts,
+                         activation=spec.activation)
+        out = out + apply_ffn(p["shared"], x2, shared)
+    return out.reshape(orig_shape)
+
+
+def apply_moe(p, x, spec: FFNSpec, dropless: bool = False):
+    """x: (..., d) -> (..., d). Token-choice top-k with capacity drop.
+
+    When FLAGS.moe_chunk_tokens is set and the batch is large, tokens are
+    processed in a ``lax.scan`` over chunks: every dispatch/gather buffer is
+    bounded by (chunk * k, d) regardless of total tokens — the GSPMD gather
+    would otherwise replicate an (E*C, d) buffer across every device.
+    """
+    Q = FLAGS.moe_chunk_tokens
+    total = 1
+    for dim in x.shape[:-1]:
+        total *= dim
+    if Q and total > Q:
+        d = x.shape[-1]
+        x2 = x.reshape(-1, d)
+        pad = (-total) % Q
+        if pad:
+            x2 = jnp.concatenate(
+                [x2, jnp.zeros((pad, d), x2.dtype)], axis=0)
+        chunks = x2.reshape(-1, Q, d)
+
+        def body(_, xc):
+            return None, _apply_moe_flat(p, xc, spec, dropless)
+
+        _, out = jax.lax.scan(body, None, chunks)
+        out = out.reshape(-1, d)[:total]
+        return out.reshape(x.shape)
+    return _apply_moe_flat(p, x, spec, dropless)
+
+
+def _apply_moe_flat(p, x, spec: FFNSpec, dropless: bool = False):
+    if dropless:
+        return apply_moe_dropless(p, x, spec)
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    E, k = spec.num_experts, spec.top_k
+    C = moe_capacity(T, spec)
+
+    logits = (x2.astype(jnp.float32) @ p["router"])          # (T, E)
+    gate_logits, idx = jax.lax.top_k(logits, k)              # (T, k)
+    gates = jax.nn.softmax(gate_logits, axis=-1)             # (T, k)
+
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+
+    order = jnp.argsort(flat_e)                              # stable
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(se, length=E)                      # (E,)
+    seg_start = jnp.cumsum(counts) - counts                  # exclusive
+    pos_in_e = jnp.arange(T * k) - seg_start[se]
+    keep = pos_in_e < C
+    slot = se * C + jnp.where(keep, pos_in_e, 0)             # (T*k,)
+
+    # gather tokens into (E*C, d); empty slots read a zero row
+    buf_tok = jnp.full((E * C,), T, jnp.int32)
+    buf_tok = buf_tok.at[jnp.where(keep, slot, E * C)].set(
+        st.astype(jnp.int32), mode="drop")
+    x_pad = jnp.concatenate([x2, jnp.zeros((1, d), x2.dtype)], axis=0)
+    xs = x_pad[buf_tok].reshape(E, C, d)
+    if FLAGS.shard_moe_tokens:
+        xs = shard_hint(xs, None, ("pod", "data"), None)
+
+    h = jnp.einsum("ecd,edf->ecf", xs, p["w1"])
+    if spec.activation == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xs, p["w3"])
+    elif spec.activation == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("ecd,edf->ecf", xs, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    if FLAGS.shard_moe_tokens:
+        h = shard_hint(h, None, ("pod", "data"), "model")
+    ys = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(E * C, d)
+
+    # combine: each kept (token, expert) pair reads its slot, weighted scatter
+    contrib = ys[slot] * sg[:, None].astype(ys.dtype)        # (T*k, d)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    if FLAGS.shard_moe_tokens:
+        contrib = shard_hint(contrib, ("pod", "data"), "model")
+    out = jnp.zeros((T, d), ys.dtype).at[st].add(contrib, mode="drop")
+    if FLAGS.shard_moe_tokens:
+        out = shard_hint(out, ("pod", "data"), None)
+
+    if "shared" in p:
+        shared = FFNSpec(kind="dense", d_ff=spec.d_ff * spec.shared_experts,
+                         activation=spec.activation)
+        out = out + apply_ffn(p["shared"], x2, shared)
+    return out.reshape(orig_shape)
+
+
+def moe_aux_loss(p, x, spec: FFNSpec):
+    """Load-balancing auxiliary loss (Switch-style fraction*prob)."""
+    x2 = x.reshape(-1, x.shape[-1])
+    logits = x2.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, spec.top_k)
+    onehot = jax.nn.one_hot(idx, spec.num_experts).sum(1)    # (T, E)
+    frac = onehot.mean(0)
+    prob = probs.mean(0)
+    return spec.num_experts * jnp.sum(frac * prob)
+
+
+def init_linear(rng, d_in, d_out, dtype, bias=False):
+    w = jax.random.normal(rng, (d_in, d_out), dtype) * (d_in ** -0.5)
+    if bias:
+        return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def apply_linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def causal_conv1d(x, w, conv_state=None):
+    """Depthwise causal conv via K shifted multiply-adds. x: (B,S,C); w: (K,C).
+
+    Deliberately NOT lax.conv with feature_group_count=C: GSPMD cannot
+    partition large grouped convolutions and falls back to full
+    rematerialization (replicating the (B,S,3*H*dk) qkv buffer on every
+    device). K shifted elementwise FMAs shard trivially with the batch.
+    Returns (y, new_state) where new_state is the last K-1 inputs.
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        # tap k multiplies input shifted by (K-1-k) steps into the past
+        y = y + xp[:, k:k + S] * w[k].astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    return y, new_state

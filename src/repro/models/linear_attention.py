@@ -1,0 +1,307 @@
+"""Bounded-state sequence mixers: KDA / GDN / GLA / Mamba2 / mLSTM / sLSTM.
+
+These are the paper's "Type A" blocks: their recurrent state is O(1) in
+sequence length, which is what collapses S_kv(l) growth and makes
+cross-datacenter KVCache transfer plausible (paper §2.2).
+
+Implementation notes (TPU adaptation, see DESIGN.md §3/§7):
+  * kda/gdn -> chunked gated delta rule kernel (scalar per-head decay; KDA's
+    per-channel gate is proxied by the scalar gate — S_kv accounting, which
+    is what the paper measures, is identical).
+  * mamba2  -> GLA kernel (SSD is gated linear attention with scalar decay).
+  * mlstm   -> GLA kernel with sigmoid input/forget gates (xLSTM-7B variant)
+    and the normalizer computed via an augmented all-ones value column.
+  * slstm   -> true sequential recurrence (h feeds gates) — lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LinearSpec
+from repro.kernels import ops
+from repro.models.layers import causal_conv1d, init_linear, rms_norm
+
+
+def _heads(x, H, D):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+def _l2norm(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.sum(x.astype(jnp.float32) ** 2, -1,
+                                     keepdims=True) + eps).astype(x.dtype)
+
+
+def _per_head_norm(o, scale, eps=1e-5):
+    """RMSNorm over the value dim of (B,H,S,dv), scale (H*dv,)."""
+    B, H, S, dv = o.shape
+    of = o.astype(jnp.float32)
+    var = jnp.mean(of * of, axis=-1, keepdims=True)
+    of = of * jax.lax.rsqrt(var + eps)
+    return (of * scale.astype(jnp.float32).reshape(1, H, 1, dv)).astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_linear_mixer(rng, d_model: int, spec: LinearSpec, dtype):
+    ks = jax.random.split(rng, 12)
+    H, dk, dv = spec.heads, spec.key_dim, spec.value_dim
+    kind = spec.kind
+    if kind == "slstm":
+        p = {
+            "w_gates": init_linear(ks[0], d_model, 4 * H * dv, dtype),
+            "r_gates": jax.random.normal(ks[1], (H, dv, 4 * dv), dtype)
+                       * (dv ** -0.5),
+            "b_gates": jnp.zeros((4 * H * dv,), jnp.float32),
+            "wo": init_linear(ks[2], H * dv, d_model, dtype),
+            "g_norm": jnp.ones((H * dv,), jnp.float32),
+        }
+        return p
+    p = {
+        "wq": init_linear(ks[0], d_model, H * dk, dtype),
+        "wk": init_linear(ks[1], d_model, H * dk, dtype),
+        "wv": init_linear(ks[2], d_model, H * dv, dtype),
+        "wo": init_linear(ks[3], H * dv, d_model, dtype),
+        "g_proj": init_linear(ks[4], d_model, H * dv, dtype),
+        "g_norm": jnp.ones((H * dv,), jnp.float32),
+    }
+    if kind in ("kda", "gdn", "mamba2"):
+        p["a_proj"] = init_linear(ks[5], d_model, H, dtype)
+        p["A_log"] = jnp.zeros((H,), jnp.float32)            # exp(0)=1 rate
+        p["dt_bias"] = jnp.zeros((H,), jnp.float32)
+    if kind in ("kda", "gdn"):
+        p["b_proj"] = init_linear(ks[6], d_model, H, dtype)
+    if kind == "gla":
+        p["a_proj"] = init_linear(ks[5], d_model, H, dtype)
+    if kind == "mlstm":
+        p["i_proj"] = init_linear(ks[5], d_model, H, dtype)
+        p["f_proj"] = init_linear(ks[6], d_model, H, dtype)
+    if kind == "mamba2":
+        p["D_skip"] = jnp.zeros((H,), jnp.float32)
+    if spec.conv_kernel:
+        C = H * (2 * dk + dv)
+        p["conv_w"] = jax.random.normal(ks[7], (spec.conv_kernel, C), dtype) \
+            * (spec.conv_kernel ** -0.5)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared q/k/v path (projection + causal conv + activation)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, x, spec: LinearSpec, conv_state=None):
+    H, dk, dv = spec.heads, spec.key_dim, spec.value_dim
+    q = x @ p["wq"]["w"]
+    k = x @ p["wk"]["w"]
+    v = x @ p["wv"]["w"]
+    new_conv = None
+    if spec.conv_kernel:
+        qkv = jnp.concatenate([q, k, v], axis=-1)
+        qkv, new_conv = causal_conv1d(qkv, p["conv_w"], conv_state)
+        qkv = jax.nn.silu(qkv)
+        q = qkv[..., :H * dk]
+        k = qkv[..., H * dk:2 * H * dk]
+        v = qkv[..., 2 * H * dk:]
+    return _heads(q, H, dk), _heads(k, H, dk), _heads(v, H, dv), new_conv
+
+
+def _gates_full(p, x, spec: LinearSpec):
+    """Per-token per-head (log_a, beta) for the full-sequence path."""
+    kind = spec.kind
+    if kind in ("kda", "gdn", "mamba2"):
+        dt = jax.nn.softplus(x @ p["a_proj"]["w"]
+                             + p["dt_bias"].astype(x.dtype))
+        log_a = -jnp.exp(p["A_log"].astype(jnp.float32)) \
+            * dt.astype(jnp.float32)                         # (B,S,H) <= 0
+    elif kind == "gla":
+        log_a = jax.nn.log_sigmoid(
+            (x @ p["a_proj"]["w"]).astype(jnp.float32) + 4.0)
+    elif kind == "mlstm":
+        log_a = jax.nn.log_sigmoid((x @ p["f_proj"]["w"]).astype(jnp.float32)
+                                   + 4.0)
+    else:
+        raise ValueError(kind)
+    beta = None
+    if kind in ("kda", "gdn"):
+        beta = jax.nn.sigmoid((x @ p["b_proj"]["w"]).astype(jnp.float32))
+    return log_a.transpose(0, 2, 1), \
+        (beta.transpose(0, 2, 1) if beta is not None else None)  # (B,H,S)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def linear_forward(p, x, spec: LinearSpec, *, initial_state=None,
+                   conv_state=None, use_kernels=True):
+    """Returns (y, cache = {"state": (B,H,dk,dv) f32 [, "conv"]})."""
+    B, S, _ = x.shape
+    kind = spec.kind
+    if kind == "slstm":
+        return _slstm_forward(p, x, spec, initial_state=initial_state)
+
+    q, k, v, new_conv = _qkv(p, x, spec, conv_state)
+    log_a, beta = _gates_full(p, x, spec)
+
+    if kind in ("kda", "gdn"):
+        k = _l2norm(k)
+        q = _l2norm(q)
+        o, state = ops.delta(q, k, v, log_a, beta, initial_state,
+                             use_kernel=use_kernels)
+    elif kind == "mlstm":
+        i_gate = jax.nn.sigmoid((x @ p["i_proj"]["w"]).astype(jnp.float32))
+        k = (k.astype(jnp.float32)
+             * i_gate.transpose(0, 2, 1)[..., None]).astype(k.dtype)
+        k = k * (spec.key_dim ** -0.5)
+        ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+        v_aug = jnp.concatenate([v, ones], axis=-1)
+        o_aug, state = ops.gla(q, k, v_aug, log_a, initial_state,
+                               use_kernel=use_kernels)
+        num, den = o_aug[..., :-1], o_aug[..., -1:]
+        o = (num.astype(jnp.float32)
+             / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
+             ).astype(v.dtype)
+    else:  # gla / mamba2
+        if kind == "mamba2":
+            k = k * (spec.key_dim ** -0.5)
+        o, state = ops.gla(q, k, v, log_a, initial_state,
+                           use_kernel=use_kernels)
+        if kind == "mamba2":
+            o = o + p["D_skip"].astype(jnp.float32).reshape(1, -1, 1, 1) \
+                * v.astype(jnp.float32)
+
+    o = _per_head_norm(o.astype(x.dtype), p["g_norm"])
+    g = jax.nn.silu(x @ p["g_proj"]["w"])
+    y = (_unheads(o) * g) @ p["wo"]["w"]
+    cache = {"state": state}
+    if spec.conv_kernel:
+        cache["conv"] = new_conv
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+
+def linear_decode(p, x, spec: LinearSpec, cache, *, use_kernels=True):
+    """x: (B,1,d). cache: {"state" [, "conv"] ...}. Returns (y, cache)."""
+    if spec.kind == "slstm":
+        return _slstm_decode(p, x, spec, cache)
+    B = x.shape[0]
+    q, k, v, new_conv = _qkv(p, x, spec, cache.get("conv"))
+    log_a, beta = _gates_full(p, x, spec)
+    q1, k1, v1 = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    la1 = log_a[:, :, 0]
+    kind = spec.kind
+    state = cache["state"]
+    if kind in ("kda", "gdn"):
+        k1 = _l2norm(k1)
+        q1 = _l2norm(q1)
+        o, state = ops.delta_step(q1, k1, v1, la1, beta[:, :, 0], state)
+    elif kind == "mlstm":
+        i_gate = jax.nn.sigmoid(
+            (x @ p["i_proj"]["w"]).astype(jnp.float32))[:, 0]  # (B,H)
+        k1 = (k1.astype(jnp.float32) * i_gate[..., None]).astype(k1.dtype)
+        k1 = k1 * (spec.key_dim ** -0.5)
+        ones = jnp.ones(v1.shape[:-1] + (1,), v1.dtype)
+        o_aug, state = ops.gla_step(q1, k1, jnp.concatenate([v1, ones], -1),
+                                    la1, state)
+        num, den = o_aug[..., :-1], o_aug[..., -1:]
+        o = (num.astype(jnp.float32)
+             / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
+             ).astype(v1.dtype)
+    else:
+        if kind == "mamba2":
+            k1 = k1 * (spec.key_dim ** -0.5)
+        o, state = ops.gla_step(q1, k1, v1, la1, state)
+        if kind == "mamba2":
+            o = o + p["D_skip"].astype(jnp.float32).reshape(1, -1, 1) \
+                * v1.astype(jnp.float32)
+
+    o = _per_head_norm(o[:, :, None].astype(x.dtype), p["g_norm"])[:, :, 0]
+    g = jax.nn.silu(x[:, 0] @ p["g_proj"]["w"])
+    y = ((o.reshape(B, -1) * g) @ p["wo"]["w"])[:, None]
+    new_cache = {"state": state}
+    if spec.conv_kernel:
+        new_cache["conv"] = new_conv
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent gate feedback -> sequential scan)
+# ---------------------------------------------------------------------------
+
+
+def _slstm_gates(p, x_t, h_prev, spec: LinearSpec):
+    """x_t: (B, d); h_prev: (B, H, dv) -> four gates (B, H, dv)."""
+    H, dv = spec.heads, spec.value_dim
+    gx = x_t @ p["w_gates"]["w"]                             # (B, 4*H*dv)
+    gh = jnp.einsum("bhv,hvu->bhu", h_prev.astype(p["r_gates"].dtype),
+                    p["r_gates"])                            # (B,H,4*dv)
+    g = (gx.reshape(-1, H, 4 * dv) + gh).astype(jnp.float32) \
+        + p["b_gates"].reshape(H, 4 * dv)
+    i, f, z, o = jnp.split(g, 4, axis=-1)
+    return i, f, z, o
+
+
+def _slstm_step(p, spec, x_t, state):
+    c, n, m, h = state
+    i_t, f_t, z_t, o_t = _slstm_gates(p, x_t, h, spec)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(z_t)
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h)
+
+
+def slstm_init_state(B, spec: LinearSpec):
+    H, dv = spec.heads, spec.value_dim
+    z = jnp.zeros((B, H, dv), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+UNROLL = False
+
+
+def _slstm_forward(p, x, spec: LinearSpec, *, initial_state=None):
+    B, S, d = x.shape
+    if initial_state is None:
+        initial_state = slstm_init_state(B, spec)
+    st0 = (initial_state["c"], initial_state["n"], initial_state["m"],
+           initial_state["h"])
+
+    def step(state, x_t):
+        state = _slstm_step(p, spec, x_t, state)
+        return state, state[3]
+
+    (c, n, m, h), hs = jax.lax.scan(step, st0, x.transpose(1, 0, 2),
+                                    unroll=True if UNROLL else 1)
+    hs = hs.transpose(1, 0, 2, 3)                            # (B,S,H,dv)
+    o = rms_norm(hs.reshape(B, S, -1).astype(x.dtype), p["g_norm"])
+    y = o @ p["wo"]["w"]
+    return y, {"state": {"c": c, "n": n, "m": m, "h": h}}
+
+
+def _slstm_decode(p, x, spec: LinearSpec, cache):
+    B = x.shape[0]
+    s = cache["state"]
+    st = _slstm_step(p, spec, x[:, 0], (s["c"], s["n"], s["m"], s["h"]))
+    c, n, m, h = st
+    o = rms_norm(h.reshape(B, -1).astype(x.dtype), p["g_norm"])
+    y = (o @ p["wo"]["w"])[:, None]
+    return y, {"state": {"c": c, "n": n, "m": m, "h": h}}

@@ -1,0 +1,514 @@
+"""Unified Model API: init / train_loss / prefill / decode_step.
+
+Every architecture (dense, MoE, hybrid, SSM, VLM, enc-dec) is the same
+machine: a stack of repeated block groups applied with ``lax.scan`` over the
+repeats (stacked parameters), which keeps HLO size ~O(#distinct blocks)
+instead of O(#layers) — essential for 50+ layer dry-run compiles.
+
+Cache layout (what prefill produces and PrfaaS ships): a pytree mirroring
+the group structure; per block one of
+  * {"k","v"}:    (R, B, S, Hkv, D)      full attention
+  * {"ckv","kpe"}:(R, B, S, rank/rope)   MLA latent
+  * {"state"[, "conv"]}: O(1) recurrent state   linear mixers
+  * {"state": {c,n,m,h}}: sLSTM scalar cells
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AttentionSpec, BlockSpec, GroupSpec,
+                                LinearSpec, ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import linear_attention as lin_mod
+from repro.models.layers import (apply_ffn, apply_moe, init_ffn, init_linear,
+                                 init_moe, moe_aux_loss, rms_norm)
+from repro.models.perf_flags import FLAGS, shard_hint
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def sinusoidal_positions(positions, d_model):
+    """positions: (B, S) -> (B, S, d) float32 sinusoidal embedding."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class Model:
+    """Functional model wrapper; all methods are jit/shard-friendly."""
+
+    def __init__(self, cfg: ModelConfig, use_kernels: bool = True,
+                 remat: bool = False, moe_dropless_inference: bool = True):
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.remat = remat
+        # serving path uses exact (dropless) MoE so decode-from-cache
+        # reproduces prefill logits; training keeps capacity semantics
+        self.moe_dropless_inference = moe_dropless_inference
+        self._inference = False
+        self.unroll = False          # cost-probe mode (analysis.costfit)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_block(self, rng, spec: BlockSpec):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 6)
+        p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+        m = spec.mixer
+        if isinstance(m, AttentionSpec):
+            p["mixer"] = attn_mod.init_attention(ks[0], cfg.d_model, m, dt)
+        else:
+            p["mixer"] = lin_mod.init_linear_mixer(ks[0], cfg.d_model, m, dt)
+        if spec.cross is not None:
+            p["ln_cross"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["cross"] = attn_mod.init_attention(ks[1], cfg.d_model,
+                                                 spec.cross, dt)
+        if spec.ffn.kind == "dense":
+            p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["ffn"] = init_ffn(ks[2], cfg.d_model, spec.ffn, dt)
+        elif spec.ffn.kind == "moe":
+            p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["ffn"] = init_moe(ks[2], cfg.d_model, spec.ffn, dt)
+        return p
+
+    def _init_group(self, rng, g: GroupSpec):
+        """Stacked params (R, ...) for unshared blocks; single for shared."""
+        stacked, shared = {}, {}
+        for bi, b in enumerate(g.blocks):
+            key = jax.random.fold_in(rng, bi)
+            if b.shared:
+                shared[f"b{bi}"] = self._init_block(key, b)
+            else:
+                reps = [self._init_block(jax.random.fold_in(key, r), b)
+                        for r in range(g.repeats)]
+                stacked[f"b{bi}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *reps)
+        return {"stacked": stacked, "shared": shared}
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        ks = jax.random.split(rng, 8 + len(cfg.groups)
+                              + len(cfg.encoder_groups or ()))
+        p = {
+            "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                       dt) * 0.02,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "groups": [self._init_group(ks[8 + i], g)
+                       for i, g in enumerate(cfg.groups)],
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = jax.random.normal(
+                ks[1], (cfg.d_model, cfg.vocab_size), dt) * 0.02
+        if cfg.encoder_groups:
+            off = 8 + len(cfg.groups)
+            p["enc_groups"] = [self._init_group(ks[off + i], g)
+                               for i, g in enumerate(cfg.encoder_groups)]
+            p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+            if cfg.encoder_input_dim:
+                p["enc_proj"] = init_linear(ks[2], cfg.encoder_input_dim,
+                                            cfg.d_model, dt)
+        if cfg.num_image_patches:
+            p["patch_proj"] = init_linear(ks[3], cfg.d_model, cfg.d_model, dt)
+        return p
+
+    # ------------------------------------------------------- block dispatch
+
+    def _apply_block(self, spec: BlockSpec, p, x, positions, *, causal=True,
+                     enc_out=None, aux=None):
+        """Full-sequence (train/prefill). Returns (x, cache, aux)."""
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        m = spec.mixer
+        if isinstance(m, AttentionSpec):
+            y, cache = attn_mod.attention_forward(
+                p["mixer"], h, m, positions, causal=causal,
+                use_kernels=self.use_kernels)
+        else:
+            y, cache = lin_mod.linear_forward(p["mixer"], h, m,
+                                              use_kernels=self.use_kernels)
+        x = x + y
+        if spec.cross is not None:
+            h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            y, ccache = attn_mod.attention_forward(
+                p["cross"], h, spec.cross, positions, kv_source=enc_out,
+                use_kernels=self.use_kernels)
+            x = x + y
+            cache = {"self": cache, "cross": ccache}
+        if spec.ffn.kind == "dense":
+            x = x + apply_ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                              spec.ffn)
+        elif spec.ffn.kind == "moe":
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + apply_moe(p["ffn"], h, spec.ffn,
+                              dropless=self._moe_dropless(
+                                  h.shape[0] * h.shape[1]))
+            if aux is not None:
+                aux = aux + moe_aux_loss(p["ffn"], h, spec.ffn)
+        return x, cache, aux
+
+    def _moe_dropless(self, tokens: int):
+        return (self._inference and self.moe_dropless_inference
+                and tokens <= FLAGS.moe_dropless_max_tokens)
+
+    def _decode_block(self, spec: BlockSpec, p, x, cache, lengths):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        m = spec.mixer
+        own_cache = cache["self"] if spec.cross is not None else cache
+        if isinstance(m, AttentionSpec):
+            y, new_cache = attn_mod.attention_decode(
+                p["mixer"], h, m, own_cache, lengths,
+                use_kernels=self.use_kernels)
+        else:
+            y, new_cache = lin_mod.linear_decode(p["mixer"], h, m, own_cache,
+                                                 use_kernels=self.use_kernels)
+        x = x + y
+        if spec.cross is not None:
+            h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            y, _ = attn_mod.attention_decode(p["cross"], h, spec.cross,
+                                             cache["cross"], lengths,
+                                             use_kernels=self.use_kernels)
+            x = x + y
+            new_cache = {"self": new_cache, "cross": cache["cross"]}
+        if spec.ffn.kind == "dense":
+            x = x + apply_ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                              spec.ffn)
+        elif spec.ffn.kind == "moe":
+            x = x + apply_moe(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                              spec.ffn,
+                              dropless=self._moe_dropless(x.shape[0]))
+        return x, new_cache
+
+    # ------------------------------------------------------------ stacks
+
+    def _run_groups(self, groups, params_groups, x, positions, *, causal=True,
+                    enc_out=None, collect_aux=False):
+        """scan over repeats of each group. Returns (x, caches, aux)."""
+        aux_total = jnp.zeros((), jnp.float32) if collect_aux else None
+        all_caches = []
+        for g, gp in zip(groups, params_groups):
+            def body(carry, rep_params, _g=g, _gp=gp):
+                x, aux = carry
+                caches = {}
+                for bi, bspec in enumerate(_g.blocks):
+                    p = (_gp["shared"][f"b{bi}"] if bspec.shared
+                         else rep_params[f"b{bi}"])
+                    x, c, aux = self._apply_block(
+                        bspec, p, x, positions, causal=causal,
+                        enc_out=enc_out, aux=aux)
+                    caches[f"b{bi}"] = c
+                if FLAGS.sequence_parallel:
+                    x = shard_hint(x, ("pod", "data"), "model", None)
+                return (x, aux), caches
+
+            if self.remat:
+                body = jax.checkpoint(body)
+            if gp["stacked"]:
+                (x, aux_total), caches = jax.lax.scan(
+                    body, (x, aux_total), gp["stacked"],
+                    unroll=True if self.unroll else 1)
+            else:  # group of only-shared blocks
+                caches = []
+                for _ in range(g.repeats):
+                    (x, aux_total), c = body((x, aux_total), {})
+                    caches.append(c)
+                caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+            all_caches.append(caches)
+        return x, all_caches, aux_total
+
+    def _decode_groups(self, groups, params_groups, x, caches, lengths):
+        new_all = []
+        for g, gp, gc in zip(groups, params_groups, caches):
+            def body(x, xs, _g=g, _gp=gp):
+                rep_params, rep_caches = xs
+                new_caches = {}
+                for bi, bspec in enumerate(_g.blocks):
+                    p = (_gp["shared"][f"b{bi}"] if bspec.shared
+                         else rep_params[f"b{bi}"])
+                    x, c = self._decode_block(bspec, p, x,
+                                              rep_caches[f"b{bi}"], lengths)
+                    new_caches[f"b{bi}"] = c
+                return x, new_caches
+
+            x, new_caches = jax.lax.scan(body, x, (gp["stacked"], gc),
+                                         unroll=True if self.unroll else 1)
+            new_all.append(new_caches)
+        return x, new_all
+
+    # --------------------------------------------------------------- embeds
+
+    def _embed_tokens(self, params, tokens):
+        return params["embed"][tokens]
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            return x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+        return x.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+
+    def _encode(self, params, frames, positions):
+        cfg = self.cfg
+        x = frames
+        if cfg.encoder_input_dim:
+            x = x.astype(_dtype(cfg)) @ params["enc_proj"]["w"]
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        x, _, _ = self._run_groups(cfg.encoder_groups, params["enc_groups"],
+                                   x, positions, causal=False)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _decoder_input(self, params, batch):
+        """Embeds tokens (+ VLM patches, + sinusoidal pos for non-rope)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        n_prefix = 0
+        if cfg.num_image_patches:
+            patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]["w"]
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        if cfg.encoder_groups is not None:
+            x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        return x, positions, n_prefix
+
+    # ------------------------------------------------------------------ API
+
+    def train_loss(self, params, batch):
+        """batch: {"tokens": (B, S+1)} [+ "patches" | + "frames"].
+
+        Next-token CE over the token stream (VLM patch positions excluded).
+        Returns (loss, metrics dict).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs = {**batch, "tokens": tokens[:, :-1]}
+        labels = tokens[:, 1:]
+        x, positions, n_prefix = self._decoder_input(params, inputs)
+        enc_out = None
+        if cfg.encoder_groups is not None:
+            B, S_enc = batch["frames"].shape[:2]
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(S_enc, dtype=jnp.int32)[None], (B, S_enc))
+            enc_out = self._encode(params, batch["frames"], enc_pos)
+        x, _, aux = self._run_groups(cfg.groups, params["groups"], x,
+                                     positions, enc_out=enc_out,
+                                     collect_aux=True)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        loss = self._chunked_ce(params, x, labels)
+        total = loss + AUX_LOSS_WEIGHT * aux / max(1, cfg.n_layers)
+        return total, {"ce": loss, "aux": aux}
+
+    # chunk size for the CE scan: bounds the transient (B, C, V) logits —
+    # essential for huge-vocab archs (seamless V=256206 is not divisible by
+    # |model|, so full-sequence logits cannot shard over the model axis and
+    # would replicate ~62 GB f32 per device)
+    CE_CHUNK = 512
+
+    def _chunked_ce(self, params, x, labels):
+        """Exact mean next-token CE via a scan over sequence chunks; full
+        (B, S, V) logits are never materialized (log_softmax is per-position,
+        so chunking is semantics-preserving)."""
+        B, S, d = x.shape
+        C = min(self.CE_CHUNK, S)
+        pad = (-S) % C
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        nc = (S + pad) // C
+        xc = x.reshape(B, nc, C, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, nc, C).transpose(1, 0, 2)
+        valid = (jnp.arange(S + pad) < S).reshape(nc, C)
+
+        def body(acc, inp):
+            xb, lb, vb = inp
+            xb = shard_hint(xb, ("pod", "data"), None, None)
+            logits = self._logits(params, xb)                # (B, C, V) f32
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ll = jnp.take_along_axis(logp, lb[..., None], -1)[..., 0]
+            return acc + jnp.sum(ll * vb[None, :]), None
+
+        total, _ = jax.lax.scan(
+            jax.checkpoint(body),   # recompute chunk logits in backward
+            jnp.zeros((), jnp.float32), (xc, lc, valid),
+            unroll=True if self.unroll else 1)
+        return -total / (B * S)
+
+    def prefill(self, params, batch):
+        """Returns (last_logits (B, V) f32, caches). The caches are the
+        KVCache PrfaaS ships to the decode cluster."""
+        cfg = self.cfg
+        self._inference = True
+        x, positions, n_prefix = self._decoder_input(params, batch)
+        enc_out = None
+        enc_caches = None
+        if cfg.encoder_groups is not None:
+            B, S_enc = batch["frames"].shape[:2]
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(S_enc, dtype=jnp.int32)[None], (B, S_enc))
+            enc_out = self._encode(params, batch["frames"], enc_pos)
+        x, caches, _ = self._run_groups(cfg.groups, params["groups"], x,
+                                        positions, enc_out=enc_out)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        self._inference = False
+        return logits, {"groups": caches}
+
+    def decode_step(self, params, tokens, caches, lengths):
+        """tokens: (B,) int32; lengths: (B,) current context sizes.
+
+        Returns (logits (B, V) f32, updated caches).
+        """
+        cfg = self.cfg
+        self._inference = True
+        x = self._embed_tokens(params, tokens[:, None])
+        if cfg.encoder_groups is not None:
+            x = x + sinusoidal_positions(lengths[:, None],
+                                         cfg.d_model).astype(x.dtype)
+        x, new_caches = self._decode_groups(cfg.groups, params["groups"], x,
+                                            caches["groups"], lengths)
+        logits = self._logits(params, x)[:, 0]
+        self._inference = False
+        return logits, {"groups": new_caches}
+
+    # ------------------------------------------------------- cache builders
+
+    def init_cache(self, batch_size: int, capacity: int,
+                   enc_len: int = 0):
+        """Zeroed decode cache buffers with seq capacity ``capacity``.
+
+        Used (a) under eval_shape to build dry-run input specs, (b) by the
+        serving engine to allocate decode-side pools.
+        """
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        B = batch_size
+
+        def block_cache(bspec: BlockSpec):
+            m = bspec.mixer
+            if isinstance(m, AttentionSpec):
+                S = m.kv_cache_tokens(capacity) if m.kind == "swa" else capacity
+                c = {"k": jnp.zeros((B, S, m.kv_heads, m.head_dim), dt),
+                     "v": jnp.zeros((B, S, m.kv_heads, m.head_dim), dt)}
+                if m.kind == "mla":
+                    c = {"ckv": jnp.zeros((B, capacity, m.mla_kv_rank), dt),
+                         "kpe": jnp.zeros((B, capacity, m.mla_rope_dim), dt)}
+            elif m.kind == "slstm":
+                c = {"state": slstm_zero(B, m)}
+            else:
+                # mLSTM augments v with a normalizer column (dv + 1)
+                dv = m.value_dim + (1 if m.kind == "mlstm" else 0)
+                c = {"state": jnp.zeros((B, m.heads, m.key_dim, dv),
+                                        jnp.float32)}
+                if m.conv_kernel:
+                    C = m.heads * (2 * m.key_dim + m.value_dim)
+                    c["conv"] = jnp.zeros((B, m.conv_kernel - 1, C), dt)
+            if bspec.cross is not None:
+                cc = bspec.cross
+                c = {"self": c,
+                     "cross": {"k": jnp.zeros((B, enc_len, cc.kv_heads,
+                                               cc.head_dim), dt),
+                               "v": jnp.zeros((B, enc_len, cc.kv_heads,
+                                               cc.head_dim), dt)}}
+            return c
+
+        groups = []
+        for g in cfg.groups:
+            gc = {}
+            for bi, b in enumerate(g.blocks):
+                one = block_cache(b)
+                gc[f"b{bi}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (g.repeats,) + x.shape), one)
+            groups.append(gc)
+        return {"groups": groups}
+
+
+def slstm_zero(B, m: LinearSpec):
+    z = jnp.zeros((B, m.heads, m.value_dim), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def prepare_decode_caches(cfg: ModelConfig, caches, capacity: int):
+    """Place prefill-produced caches into decode buffers of ``capacity``.
+
+    This is the decode-cluster side of the PrfaaS KV transfer: full-attn K/V
+    and MLA latents are zero-padded to capacity; SWA layers keep only the
+    last ``window`` entries, ring-placed at slot = position % window.
+    """
+
+    def place_attn(spec: AttentionSpec, c):
+        if spec.kind == "mla":
+            def padseq(x):
+                pads = [(0, 0)] * x.ndim
+                pads[2] = (0, capacity - x.shape[2])
+                return jnp.pad(x, pads)
+            return {k: padseq(v) for k, v in c.items()}
+        S = c["k"].shape[2]
+        if spec.kind == "swa" and spec.window and capacity > spec.window:
+            W = min(spec.window, capacity)
+            start = max(0, S - W)
+            kept = min(S, W)
+            # slot for global position s is s % W
+            slots = (start + jnp.arange(kept)) % W
+            order = jnp.argsort(slots)
+
+            def ring(x):
+                tail = x[:, :, start:]                       # (R,B,kept,...)
+                buf = jnp.zeros(x.shape[:2] + (W,) + x.shape[3:], x.dtype)
+                return buf.at[:, :, slots[order]].set(tail[:, :, order])
+
+            return {k: ring(v) for k, v in c.items()}
+
+        def padseq(x):
+            pads = [(0, 0)] * x.ndim
+            pads[2] = (0, max(0, capacity - x.shape[2]))
+            return jnp.pad(x, pads)
+
+        return {k: padseq(v) for k, v in c.items()}
+
+    def place_block(bspec: BlockSpec, c):
+        m = bspec.mixer
+        if bspec.cross is not None:
+            inner = (place_attn(m, c["self"])
+                     if isinstance(m, AttentionSpec) else c["self"])
+            return {"self": inner, "cross": c["cross"]}
+        if isinstance(m, AttentionSpec):
+            return place_attn(m, c)
+        return c                                             # O(1) states
+
+    out_groups = []
+    for g, gc in zip(cfg.groups, caches["groups"]):
+        out_groups.append({f"b{bi}": place_block(b, gc[f"b{bi}"])
+                           for bi, b in enumerate(g.blocks)})
+    return {"groups": out_groups}
+
+
+def extend_caches(caches, extra: int):
+    """Grow the seq capacity of prefill-produced caches by ``extra`` slots
+    (zero-padded at the tail) so decode can append."""
+
+    def pad(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "ckv", "kpe"):
+            # (R, B, S, ...) -> pad axis 2
+            pads = [(0, 0)] * leaf.ndim
+            pads[2] = (0, extra)
+            return jnp.pad(leaf, pads)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, caches)

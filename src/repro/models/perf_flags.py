@@ -1,0 +1,77 @@
+"""Performance-iteration flags (EXPERIMENTS.md §Perf).
+
+Module-level so the dry-run / cost-probe launchers can flip variants without
+threading knobs through every layer. Defaults = paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+
+@dataclass
+class PerfFlags:
+    # shard MoE dispatch buffers (token/slot dim over "data") — fixes the
+    # replicated (E*C, d) gather buffers that dominate prefill/train memory
+    shard_moe_tokens: bool = False
+    # cap on token count for exact dropless MoE; larger prefills fall back
+    # to capacity dispatch (cf from the spec) — bounds the ragged gather
+    moe_dropless_max_tokens: int = 1 << 62
+    # activation sharding hint at block boundaries (sequence over "model")
+    sequence_parallel: bool = False
+    # pin (batch->data, heads->model) 2-D sharding at attention entry —
+    # GSPMD otherwise sometimes drops the batch dim when heads shard
+    shard_attention: bool = False
+    # scan MoE over token chunks of this size (0 = off): bounds the
+    # (chunk*k, d) dispatch/gather buffers that GSPMD cannot shard (gather
+    # across all token shards) — chunked-prefill-style FFN execution
+    moe_chunk_tokens: int = 0
+
+
+FLAGS = PerfFlags()
+
+VARIANTS = {
+    "baseline": PerfFlags(),
+    # iteration 1: shard MoE dispatch + gate dropless to decode-size batches
+    "moe_shard": PerfFlags(shard_moe_tokens=True,
+                moe_chunk_tokens=16384,
+                           moe_dropless_max_tokens=32768,
+                           shard_attention=True),
+    # iteration 2 (decode): moe_shard + no FSDP (set via dryrun --perf-variant
+    # plumbing: fsdp handled in the launcher, flags here for model-side)
+    "no_fsdp": PerfFlags(shard_moe_tokens=True,
+                moe_chunk_tokens=16384,
+                         moe_dropless_max_tokens=32768,
+                         shard_attention=True),
+    # iteration 3: + sequence-parallel activations
+    "seqpar": PerfFlags(shard_moe_tokens=True,
+                moe_chunk_tokens=16384,
+                        moe_dropless_max_tokens=32768,
+                        shard_attention=True,
+                        sequence_parallel=True),
+}
+
+
+@contextlib.contextmanager
+def use_variant(name: str):
+    """Mutates the FLAGS singleton in place — modules import the object
+    itself (``from ... import FLAGS``), so rebinding would not propagate."""
+    import dataclasses as _dc
+    old = _dc.replace(FLAGS)
+    for f in _dc.fields(PerfFlags):
+        setattr(FLAGS, f.name, getattr(VARIANTS[name], f.name))
+    try:
+        yield FLAGS
+    finally:
+        for f in _dc.fields(PerfFlags):
+            setattr(FLAGS, f.name, getattr(old, f.name))
+
+
+def shard_hint(x, *spec):
+    """with_sharding_constraint that no-ops outside a mesh context."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,7 @@
+from repro.serving.api import Request, Response
+from repro.serving.deployment import CrossDCDeployment, DeploymentConfig
+from repro.serving.engine import (DecodeEngine, PrefillEngine,
+                                  slice_request_cache)
+
+__all__ = ["Request", "Response", "CrossDCDeployment", "DeploymentConfig",
+           "DecodeEngine", "PrefillEngine", "slice_request_cache"]

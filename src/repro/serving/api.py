@@ -1,0 +1,29 @@
+"""Serving API types."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                 # prompt token ids (int32)
+    max_new_tokens: int = 32
+    # timeline (seconds; wall for compute, virtual for the inter-DC link)
+    arrival: float = 0.0
+    route: str = ""
+    cached_tokens: int = 0
+    prefill_s: float = 0.0
+    transfer_s: float = 0.0
+    kv_bytes: int = 0
+    ttft_s: float = 0.0
+
+
+@dataclass
+class Response:
+    rid: int
+    output_tokens: List[int] = field(default_factory=list)
+    finished: bool = False

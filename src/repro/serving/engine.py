@@ -1,0 +1,124 @@
+"""Prefill + continuous-batching decode engines (pure JAX).
+
+``PrefillEngine`` plays the PrfaaS / PD-P role: runs full-sequence prefill
+and emits the request's KVCache (the bytes that cross the inter-DC link).
+``DecodeEngine`` plays PD-D: a slot-based continuous-batching loop over a
+single jit'd ``decode_step`` — requests are admitted into free slots (their
+shipped KV placed into the engine's preallocated buffers), step() advances
+every active stream by one token, finished streams retire and free slots.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, prepare_decode_caches
+from repro.models.kvcache import cache_num_bytes
+from repro.serving.api import Request, Response
+
+
+class PrefillEngine:
+    def __init__(self, model: Model, params):
+        self.model = model
+        self.params = params
+        self._prefill = jax.jit(model.prefill)
+
+    def prefill(self, tokens: np.ndarray):
+        """tokens: (B, S). Returns (first_token (B,), caches, wall_s)."""
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        logits, caches = self._prefill(self.params, batch)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(first)
+        return np.asarray(first), caches, time.perf_counter() - t0
+
+
+class DecodeEngine:
+    """Slot-based continuous batching decode cluster."""
+
+    def __init__(self, model: Model, params, num_slots: int, capacity: int):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.capacity = capacity
+        self.caches = jax.jit(
+            lambda: model.init_cache(num_slots, capacity))()
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.tokens = np.zeros((num_slots,), np.int32)
+        self.active = np.zeros((num_slots,), bool)
+        self.budget = np.zeros((num_slots,), np.int32)
+        self.slot_req: List[Optional[int]] = [None] * num_slots
+        self.outputs: Dict[int, Response] = {}
+        self._step = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._place = jax.jit(self._place_impl, donate_argnums=(0,))
+
+    # ---------------------------------------------------------------- admit
+    @staticmethod
+    def _place_impl(caches, one_cache, slot):
+        def put(buf, new):
+            # write request cache (axis 1 = slot) at [slot]
+            idx = (0, slot) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                                idx)
+
+        return jax.tree.map(put, caches, one_cache)
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.num_slots) if not self.active[i]]
+
+    def admit(self, req: Request, first_token: int, one_cache, prompt_len: int):
+        """Place a request's shipped KV into a free slot."""
+        slots = self.free_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        placed = prepare_decode_caches(self.model.cfg, one_cache,
+                                       self.capacity)
+        self.caches = self._place(self.caches, placed, slot)
+        self.lengths[slot] = prompt_len
+        self.tokens[slot] = first_token
+        self.active[slot] = True
+        self.budget[slot] = req.max_new_tokens
+        self.slot_req[slot] = req.rid
+        self.outputs[req.rid] = Response(req.rid, [int(first_token)])
+        return True
+
+    # ----------------------------------------------------------------- step
+    def step(self):
+        """One decode iteration for all active slots. Returns #active."""
+        if not self.active.any():
+            return 0
+        logits, self.caches = self._step(
+            self.params, jnp.asarray(self.tokens),
+            self.caches, jnp.asarray(self.lengths))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        for i in range(self.num_slots):
+            if not self.active[i]:
+                continue
+            rid = self.slot_req[i]
+            self.outputs[rid].output_tokens.append(int(nxt[i]))
+            self.lengths[i] += 1
+            self.tokens[i] = nxt[i]
+            self.budget[i] -= 1
+            if self.budget[i] <= 0 or self.lengths[i] >= self.capacity - 1:
+                self.outputs[rid].finished = True
+                self.active[i] = False
+                self.slot_req[i] = None
+        return int(self.active.sum())
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        steps = 0
+        while self.active.any() and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+
+def slice_request_cache(caches, idx: int):
+    """Extract request ``idx`` from a batched prefill cache -> batch of 1."""
+    return jax.tree.map(lambda x: x[:, idx:idx + 1], caches)

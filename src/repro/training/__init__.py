@@ -1,0 +1,11 @@
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig, apply_updates, init_state
+from repro.training.train_loop import (TrainConfig, TrainLoop,
+                                       init_opt_state, make_train_step)
+
+__all__ = [
+    "CheckpointManager", "DataConfig", "SyntheticLM", "AdamWConfig",
+    "apply_updates", "init_state", "TrainConfig", "TrainLoop",
+    "init_opt_state", "make_train_step",
+]

@@ -1,0 +1,91 @@
+"""AdamW (from scratch — no optax dependency) with fp32 master state,
+global-norm clipping, and cosine/linear LR schedules.
+
+State layout: {"step", "mu", "nu", "master"} — master weights kept in fp32
+when params are bf16 (mixed-precision training standard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import global_norm
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # explicit copy: fp32 params would otherwise alias the master buffer,
+    # breaking donation (donate(params) + donate(master) of one buffer)
+    master = jax.tree.map(lambda p: jnp.array(p, dtype=jnp.float32,
+                                              copy=True), params)
+    return {"step": jnp.zeros((), jnp.int32), "mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros), "master": master}
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay to matrices only (not norms/biases/gates)."""
+    name = jax.tree_util.keystr(path)
+    return not any(k in name for k in ("norm", "ln", "bias", "b_gates",
+                                       "A_log", "dt_bias", "D_skip"))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    g_l = jax.tree.leaves(grads)
+    mu_l = jax.tree.leaves(state["mu"])
+    nu_l = jax.tree.leaves(state["nu"])
+    ma_l = jax.tree.leaves(state["master"])
+
+    new_p, new_mu, new_nu, new_ma = [], [], [], []
+    for (path, p), g, mu, nu, ma in zip(flat, g_l, mu_l, nu_l, ma_l):
+        gf = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * gf
+        nu = b2 * nu + (1 - b2) * gf * gf
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * ma
+        ma = ma - lr * upd
+        new_p.append(ma.astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_ma.append(ma)
+
+    unflatten = jax.tree_util.tree_structure(params).unflatten
+    new_params = unflatten(new_p)
+    new_state = {"step": step, "mu": unflatten(new_mu),
+                 "nu": unflatten(new_nu), "master": unflatten(new_ma)}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,78 @@
+"""Lowerable chunked/banded paths (what the dry-run compiles) vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models import chunked_attention as chk
+
+RNG = np.random.default_rng(4)
+
+
+def mk(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_chunked(causal):
+    q, k, v = mk(2, 4, 320, 32), mk(2, 2, 320, 32), mk(2, 2, 320, 32)
+    out = chk.flash_chunked(q, k, v, causal=causal, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_mea_attention_and_grad():
+    q, k, v = mk(1, 4, 256, 32), mk(1, 2, 256, 32), mk(1, 2, 256, 32)
+    out = chk.mea_attention(q, k, v, causal=True, block_q=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+    g = jax.grad(lambda q: jnp.sum(
+        chk.mea_attention(q, k, v, causal=True, block_q=64) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(
+        ref.flash_attention_ref(q, k, v, causal=True) ** 2))(q)
+    np.testing.assert_allclose(g, g2, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window,S", [(64, 320), (100, 512)])
+def test_swa_banded(window, S):
+    q, k, v = mk(1, 4, S, 32), mk(1, 2, S, 32), mk(1, 2, S, 32)
+    out = chk.swa_banded(q, k, v, window=window, block_q=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_gla_chunked_jnp_vs_oracle():
+    B, H, S, d = 2, 2, 200, 32
+    q, k, v = mk(B, H, S, d), mk(B, H, S, d), mk(B, H, S, d)
+    la = -0.3 * jnp.abs(mk(B, H, S))
+    s0 = jnp.zeros((B, H, d, d))
+    o, st = chk.gla_chunked_jnp(q, k, v, la, s0, chunk=64)
+    o2, st2 = ref.gla_ref(q, k, v, la, s0)
+    np.testing.assert_allclose(o, o2, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(st, st2, atol=5e-4, rtol=5e-4)
+
+
+def test_delta_chunked_jnp_vs_oracle():
+    B, H, S, d = 2, 2, 200, 32
+    q, k, v = mk(B, H, S, d), mk(B, H, S, d), mk(B, H, S, d)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    la = -0.2 * jnp.abs(mk(B, H, S))
+    beta = jnp.asarray(RNG.uniform(0.1, 1, (B, H, S)).astype(np.float32))
+    s0 = jnp.zeros((B, H, d, d))
+    o, st = chk.delta_chunked_jnp(q, k, v, la, beta, s0, chunk=64)
+    o2, st2 = ref.delta_ref(q, k, v, la, beta, s0)
+    np.testing.assert_allclose(o, o2, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(st, st2, atol=2e-4, rtol=2e-3)
+
+
+def test_unroll_flag_is_semantics_preserving():
+    """UNROLL=True (cost-probe mode) must not change results."""
+    q, k, v = mk(1, 2, 128, 16), mk(1, 2, 128, 16), mk(1, 2, 128, 16)
+    base = chk.flash_chunked(q, k, v, block_k=32)
+    chk.UNROLL = True
+    try:
+        unrolled = chk.flash_chunked(q, k, v, block_k=32)
+    finally:
+        chk.UNROLL = False
+    np.testing.assert_allclose(base, unrolled, atol=1e-6, rtol=1e-6)

@@ -1,0 +1,143 @@
+"""Link/transfer engine + end-to-end cluster simulator."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Link, PrfaasSimulator, SimConfig, SystemConfig,
+                        ThroughputModel, Workload, layerwise_release,
+                        paper_h20_profile, paper_h200_profile)
+
+
+def run_link(link, seconds, dt=0.01):
+    steps = int(seconds / dt)
+    for i in range(steps):
+        link.tick(i * dt, dt)
+    return steps * dt
+
+
+class TestLink:
+    def test_single_flow_takes_expected_time(self):
+        link = Link(8e9)                       # 1 GB/s
+        done = []
+        link.submit(2e9, 0.0, on_done=lambda t: done.append(t))
+        run_link(link, 3.0)
+        assert done and abs(done[0] - 2.0) < 0.05
+
+    def test_fair_share_two_flows(self):
+        link = Link(8e9)
+        done = []
+        link.submit(1e9, 0.0, on_done=lambda t: done.append(("a", t)))
+        link.submit(1e9, 0.0, on_done=lambda t: done.append(("b", t)))
+        run_link(link, 3.0)
+        # both share -> each finishes ~2s (processor sharing)
+        assert len(done) == 2
+        assert all(abs(t - 2.0) < 0.1 for _, t in done)
+
+    def test_conservation(self):
+        """Property: bytes sent can never exceed capacity x time."""
+        link = Link(8e9, fluctuation=0.0)
+        for i in range(5):
+            link.submit(5e8, 0.0)
+        elapsed = run_link(link, 1.5)
+        assert link.sent_bytes <= 1e9 * elapsed * 1.001
+
+    def test_layerwise_release_overlaps_compute(self):
+        """With pipelining the transfer tail beyond prefill is ~bytes/bw -
+        overlapped portion, vs full serialization without it."""
+        link = Link(8e9)
+        done = []
+        rel = layerwise_release(0.0, 2.0, 1e9, n_layers=10)
+        link.submit(1e9, 0.0, release=rel, on_done=lambda t: done.append(t))
+        run_link(link, 4.0)
+        # 1 GB at 1 GB/s with 2s compute: finishes ~max(2.0+tail, 1.0)
+        assert done and 2.0 <= done[0] < 2.5
+
+    def test_congestion_signal(self):
+        link = Link(1e9)                       # tiny link
+        for _ in range(10):
+            link.submit(1e9, 0.0)
+        run_link(link, 1.0)
+        sig = link.congestion_signal()
+        assert sig["util"] > 0.5 and sig["queue_bytes"] > 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.05, 0.4), st.integers(0, 100))
+    def test_fluctuating_capacity_bounded(self, fluct, seed):
+        link = Link(8e9, fluctuation=fluct, seed=seed)
+        for i in range(200):
+            link.tick(i * 0.05, 0.05)
+            assert 0.2 <= link._mult <= 1.6
+
+
+@pytest.fixture(scope="module")
+def table6_setup():
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, rate, _ = tm.grid_search(4, 8, 100e9 / 8)
+    return tm, sc, rate, w
+
+
+class TestSimulator:
+    def test_sim_tracks_analytic_capacity(self, table6_setup):
+        tm, sc, rate, w = table6_setup
+        sim = PrfaasSimulator(tm, sc, w,
+                              SimConfig(arrival_rate=0.85 * rate,
+                                        sim_time=400, dt=0.05, seed=0))
+        m = sim.run()
+        # sim throughput ~= offered (below capacity) and > 70% of it
+        assert m["throughput_rps"] > 0.7 * 0.85 * rate
+        assert m["ttft_mean"] > 0 and m["ttft_p90"] >= m["ttft_p50"]
+        assert m["offload_frac"] == pytest.approx(0.5, abs=0.12)
+
+    def test_overload_saturates_at_capacity(self, table6_setup):
+        tm, sc, rate, w = table6_setup
+        sim = PrfaasSimulator(tm, sc, w,
+                              SimConfig(arrival_rate=2.0 * rate,
+                                        sim_time=300, dt=0.05, seed=1))
+        m = sim.run()
+        assert m["throughput_rps"] < 1.25 * rate     # can't exceed capacity
+
+    def test_egress_stays_within_link(self, table6_setup):
+        tm, sc, rate, w = table6_setup
+        sim = PrfaasSimulator(tm, sc, w,
+                              SimConfig(arrival_rate=0.9 * rate,
+                                        sim_time=300, dt=0.05, seed=2,
+                                        link_gbps=100.0))
+        m = sim.run()
+        assert m["egress_gbps"] < 100.0
+        assert 5.0 < m["egress_gbps"] < 20.0          # paper: ~13 Gbps
+
+    def test_sessions_produce_cache_hits(self, table6_setup):
+        tm, sc, rate, w = table6_setup
+        w2 = Workload(session_prob=0.5)
+        sim = PrfaasSimulator(tm, sc, w2,
+                              SimConfig(arrival_rate=0.6 * rate,
+                                        sim_time=300, dt=0.05, seed=3,
+                                        pool_blocks=2_000_000))
+        m = sim.run()
+        hit = max(c["hit_rate"] for c in m["cache"].values())
+        assert hit > 0.15
+
+    def test_congestion_triggers_threshold_adjustments(self, table6_setup):
+        tm, sc, rate, w = table6_setup
+        sim = PrfaasSimulator(
+            tm, sc, w, SimConfig(arrival_rate=1.2 * rate, sim_time=240,
+                                 dt=0.05, seed=4, link_gbps=3.0,
+                                 link_fluctuation=0.2))
+        m = sim.run()
+        assert m["router_adjustments"] > 0            # short-term loop fired
+
+    def test_autoscaler_converts_nodes(self, table6_setup):
+        tm, _, rate, w = table6_setup
+        bad = SystemConfig(4, 6, 2, 100e9 / 8, 19_400.0)   # decode-starved
+        sim = PrfaasSimulator(tm, bad, w,
+                              SimConfig(arrival_rate=0.8 * rate,
+                                        sim_time=900, dt=0.05, seed=5,
+                                        autoscale=True))
+        m = sim.run()
+        assert sim.autoscaler.conversions, "autoscaler never rebalanced"
+        _, n_p, n_d = sim.autoscaler.conversions[-1]
+        assert n_d > 2

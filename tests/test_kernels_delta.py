@@ -1,0 +1,108 @@
+"""Chunked (gated) delta-rule Pallas kernel vs sequential oracle.
+
+Also unit-tests the Neumann-product unit-lower-triangular inverse that makes
+the WY transform MXU-friendly (DESIGN.md §3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.delta import _neumann_unit_lower_inverse, delta_chunked
+
+RNG = np.random.default_rng(2)
+
+
+def mk(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def inputs(B, H, S, dk, dv, gated=True):
+    q, k, v = mk(B, H, S, dk), mk(B, H, S, dk), mk(B, H, S, dv)
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    beta = jnp.asarray(RNG.uniform(0.1, 1.0, (B, H, S)).astype(np.float32))
+    la = (-0.1 * jnp.abs(mk(B, H, S))) if gated else jnp.zeros((B, H, S))
+    return q, k, v, la, beta
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 128])
+def test_neumann_inverse(n):
+    """Inverse in the delta rule's actual regime: N = diag(beta) *
+    (K K^T . strict-lower-decay) with L2-normalized keys and beta in (0,1]
+    — the operator is a contraction there (random N(0,1) triangles have
+    exponentially large inverses and are NOT the kernel's input domain)."""
+    k = RNG.standard_normal((n, 32)).astype(np.float32)
+    k /= np.linalg.norm(k, axis=-1, keepdims=True)
+    beta = RNG.uniform(0.1, 1.0, (n, 1)).astype(np.float32)
+    L = jnp.asarray(beta * np.tril(k @ k.T, -1))
+    inv = _neumann_unit_lower_inverse(L, n)
+    want = np.linalg.inv(np.eye(n) + np.asarray(L, np.float64))
+    np.testing.assert_allclose(np.asarray(inv), want, atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("B,H,S,dk,dv,chunk", [
+    (1, 2, 128, 32, 32, 64),
+    (2, 3, 130, 32, 48, 64),
+    (1, 1, 96, 16, 16, 32),
+])
+@pytest.mark.parametrize("gated", [True, False])
+def test_delta_matches_oracle(B, H, S, dk, dv, chunk, gated):
+    q, k, v, la, beta = inputs(B, H, S, dk, dv, gated)
+    o, st = delta_chunked(q, k, v, la, beta, chunk=chunk, interpret=True)
+    o2, st2 = ref.delta_ref(q, k, v, la, beta)
+    np.testing.assert_allclose(o, o2, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st, st2, atol=1e-4, rtol=1e-3)
+
+
+def test_delta_state_continuation():
+    B, H, S, d = 1, 2, 128, 32
+    q, k, v, la, beta = inputs(B, H, S, d, d)
+    o_full, st_full = delta_chunked(q, k, v, la, beta, chunk=32,
+                                    interpret=True)
+    h = S // 2
+    o1, st1 = delta_chunked(q[:, :, :h], k[:, :, :h], v[:, :, :h],
+                            la[:, :, :h], beta[:, :, :h], chunk=32,
+                            interpret=True)
+    o2, st2 = delta_chunked(q[:, :, h:], k[:, :, h:], v[:, :, h:],
+                            la[:, :, h:], beta[:, :, h:],
+                            initial_state=st1, chunk=32, interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 2), o_full,
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(st2, st_full, atol=2e-4, rtol=2e-3)
+
+
+def test_delta_memorizes_associations():
+    """Functional check: with beta=1, no decay, normalized distinct keys,
+    the delta state stores exact k->v associations (the delta rule's
+    defining property — what makes KDA expressive)."""
+    B, H, S, d = 1, 1, 8, 32
+    k = jnp.asarray(np.linalg.qr(RNG.standard_normal((d, d)))[0][:S]
+                    .astype(np.float32))[None, None]   # orthonormal keys
+    v = mk(B, H, S, 16)
+    q = k
+    beta = jnp.ones((B, H, S))
+    la = jnp.zeros((B, H, S))
+    o, st = delta_chunked(q, k, v, la, beta, chunk=8, interpret=True)
+    # querying with k_i after step i returns exactly v_i
+    np.testing.assert_allclose(o[:, :, -1],
+                               v[:, :, -1], atol=1e-4, rtol=1e-4)
+    recall = jnp.einsum("bhsk,bhkv->bhsv", k, st)
+    np.testing.assert_allclose(recall, v, atol=1e-4, rtol=1e-4)
+
+
+def test_delta_step_matches_scan():
+    from repro.kernels.ops import delta_step
+    B, H, d = 2, 2, 16
+    q, k, v, la, beta = inputs(B, H, 6, d, d)
+    state = jnp.zeros((B, H, d, d))
+    outs = []
+    for t in range(6):
+        o, state = delta_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                              la[:, :, t], beta[:, :, t], state)
+        outs.append(o)
+    o_ref, st_ref = ref.delta_ref(q, k, v, la, beta)
+    np.testing.assert_allclose(jnp.stack(outs, 2), o_ref, atol=1e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(state, st_ref, atol=1e-5, rtol=1e-4)
