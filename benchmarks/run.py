@@ -1,10 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table6]
+    PYTHONPATH=src python -m benchmarks.run [--only table6] [--smoke]
 
+``--smoke`` shortens simulator horizons so the whole harness finishes in
+seconds (CI / tier-1 verify); full runs reproduce the paper-scale numbers.
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -23,9 +26,18 @@ MODULES = {
 }
 
 
+def _call_main(mod, smoke: bool):
+    main = mod.main
+    if smoke and "smoke" in inspect.signature(main).parameters:
+        return main(smoke=True)
+    return main()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(MODULES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizons; finish the harness in seconds")
     args = ap.parse_args()
     names = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
@@ -34,7 +46,7 @@ def main() -> None:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            MODULES[name].main()
+            _call_main(MODULES[name], args.smoke)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -4,7 +4,15 @@ Runs the three Table 6 deployments through the discrete-event simulator at
 ~90% of each deployment's modeled capacity: PrfaaS-PD must beat homogeneous
 on mean AND P90 TTFT (paper: -50% / -64%), sustain higher throughput, and
 keep egress ~13 Gbps << the 100 Gbps link.
+
+    PYTHONPATH=src python -m benchmarks.sim_ttft [--smoke] [--compare-engines]
+
+``--compare-engines`` times the exact event engine against the legacy
+fixed-tick loop on the same scenario/seed and writes BENCH_sim_engine.json.
 """
+import argparse
+import json
+import os
 import time
 
 from benchmarks.common import emit
@@ -13,11 +21,12 @@ from repro.core import (PrfaasSimulator, SimConfig, SystemConfig,
                         paper_h200_profile)
 
 
-def run(tag, tm, sc, w, rate, link_gbps=100.0, fluct=0.1):
+def run(tag, tm, sc, w, rate, link_gbps=100.0, fluct=0.1, sim_time=900,
+        engine="event"):
     t0 = time.time()
     sim = PrfaasSimulator(tm, sc, w, SimConfig(
-        arrival_rate=rate, sim_time=900, dt=0.05, seed=7,
-        link_gbps=link_gbps, link_fluctuation=fluct))
+        arrival_rate=rate, sim_time=sim_time, dt=0.05, seed=7,
+        link_gbps=link_gbps, link_fluctuation=fluct, engine=engine))
     m = sim.run()
     us = (time.time() - t0) * 1e6
     emit(f"sim/{tag}/throughput", us, f"{m['throughput_rps']:.2f}rps")
@@ -30,7 +39,45 @@ def run(tag, tm, sc, w, rate, link_gbps=100.0, fluct=0.1):
     return m
 
 
-def main():
+def compare_engines(out_path="BENCH_sim_engine.json", sim_time=900):
+    """Time event vs tick engines on the identical scenario/arrival trace
+    and record the speedup + metric agreement."""
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, lam, _ = tm.grid_search(4, 8, 100e9 / 8)
+    out = {"scenario": {"sim_time_s": sim_time, "arrival_rate": 0.85 * lam,
+                        "seed": 0, "dt_tick": 0.02}}
+    metrics = {}
+    for engine in ("event", "tick"):
+        t0 = time.time()
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=0.85 * lam, sim_time=sim_time, dt=0.02, seed=0,
+            engine=engine))
+        m = sim.run()
+        wall = time.time() - t0
+        metrics[engine] = m
+        out[engine] = {"wall_s": round(wall, 4),
+                       "throughput_rps": round(m["throughput_rps"], 4),
+                       "ttft_mean_s": round(m["ttft_mean"], 4),
+                       "ttft_p90_s": round(m["ttft_p90"], 4),
+                       "egress_gbps": round(m["egress_gbps"], 4)}
+    out["speedup_x"] = round(out["tick"]["wall_s"]
+                             / max(out["event"]["wall_s"], 1e-9), 2)
+    out["ttft_mean_rel_err"] = round(
+        abs(metrics["event"]["ttft_mean"] / metrics["tick"]["ttft_mean"] - 1),
+        4)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    emit("sim/engine_compare", 0.0,
+         f"event={out['event']['wall_s']}s tick={out['tick']['wall_s']}s "
+         f"speedup={out['speedup_x']}x "
+         f"ttft_err={out['ttft_mean_rel_err']*100:.1f}%")
+    return out
+
+
+def main(smoke: bool = False):
+    sim_time = 240 if smoke else 900
     w = Workload()
     tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
     sc, lam, _ = tm.grid_search(4, 8, 100e9 / 8)
@@ -42,9 +89,9 @@ def main():
     # common offered load = 90% of the homogeneous baseline capacity, so the
     # TTFT comparison is apples-to-apples (same traffic on all systems)...
     common = 0.9 * lam_h
-    m_p = run("prfaas_pd@common", tm, sc, w, common)
-    m_h = run("homogeneous@common", tm_h, sc_h, w, common)
-    m_n = run("naive_hetero@common", tm, sc_n, w, common)
+    m_p = run("prfaas_pd@common", tm, sc, w, common, sim_time=sim_time)
+    m_h = run("homogeneous@common", tm_h, sc_h, w, common, sim_time=sim_time)
+    m_n = run("naive_hetero@common", tm, sc_n, w, common, sim_time=sim_time)
     mean_red = 1 - m_p["ttft_mean"] / m_h["ttft_mean"]
     p90_red = 1 - m_p["ttft_p90"] / m_h["ttft_p90"]
     emit("sim/ttft_reduction_vs_homog", 0.0,
@@ -53,9 +100,10 @@ def main():
          f"claim={'REPRODUCED' if mean_red > 0.25 and p90_red > 0.35 else 'PARTIAL'}")
 
     # ...and each system near its own capacity shows the throughput gap
-    m_p2 = run("prfaas_pd@own_cap", tm, sc, w, 0.95 * lam)
-    m_h2 = run("homogeneous@own_cap", tm_h, sc_h, w, 0.95 * lam_h)
-    m_n2 = run("naive@own_cap", tm, sc_n, w, 0.95 * lam_n)
+    m_p2 = run("prfaas_pd@own_cap", tm, sc, w, 0.95 * lam, sim_time=sim_time)
+    m_h2 = run("homogeneous@own_cap", tm_h, sc_h, w, 0.95 * lam_h,
+               sim_time=sim_time)
+    m_n2 = run("naive@own_cap", tm, sc_n, w, 0.95 * lam_n, sim_time=sim_time)
     r = m_p2["throughput_rps"] / max(m_h2["throughput_rps"], 1e-9)
     emit("sim/throughput_ratio_vs_homog", 0.0,
          f"{r:.2f}x paper=1.54x "
@@ -67,4 +115,13 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short sim horizon for CI")
+    ap.add_argument("--compare-engines", action="store_true",
+                    help="write BENCH_sim_engine.json (event vs tick)")
+    args = ap.parse_args()
+    if args.compare_engines:
+        compare_engines(sim_time=240 if args.smoke else 900)
+    else:
+        main(smoke=args.smoke)

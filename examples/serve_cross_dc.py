@@ -57,3 +57,8 @@ print(f"\nsummary: {m['requests']} requests, {m['offloaded']} offloaded, "
       f"mean TTFT {m['ttft_mean_s']*1e3:.1f} ms, "
       f"cross-DC KV {m['kv_bytes_total']} bytes, "
       f"hit rates {m['cache_hit_rate']}")
+# the deployment's inter-DC link is the same exact fair-share flow engine
+# the cluster simulator uses (core.transfer.Link): concurrent KV flows in a
+# prefill batch contend and are solved by progressive filling
+print(f"link: {dep.link.sent_bytes:.0f} bytes on the wire, "
+      f"busy {dep.link.busy_time*1e3:.1f} ms (virtual)")

@@ -12,11 +12,12 @@ from repro.core.prefix_cache import (FullAttnGroup, HybridPrefixCache,
                                      LinearStateGroup, token_block_hashes)
 from repro.core.router import (PD, PRFAAS, Router, RouterConfig,
                                RoutingDecision)
-from repro.core.simulator import PrfaasSimulator, Request, SimConfig
+from repro.core.simulator import (EventPool, PrfaasSimulator, Request,
+                                  SimConfig)
 from repro.core.throughput_model import (SystemConfig, ThroughputModel,
                                          egress_bandwidth, kv_throughput)
 from repro.core.transfer import Flow, Link, layerwise_release
-from repro.core.workload import LogNormalLengths, Workload
+from repro.core.workload import LogNormalLengths, Workload, mmpp_rate
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "StageTelemetry",
@@ -27,8 +28,8 @@ __all__ = [
     "FullAttnGroup", "HybridPrefixCache", "LinearStateGroup",
     "token_block_hashes",
     "Router", "RouterConfig", "RoutingDecision", "PD", "PRFAAS",
-    "PrfaasSimulator", "Request", "SimConfig",
+    "EventPool", "PrfaasSimulator", "Request", "SimConfig",
     "SystemConfig", "ThroughputModel", "egress_bandwidth", "kv_throughput",
     "Flow", "Link", "layerwise_release",
-    "LogNormalLengths", "Workload",
+    "LogNormalLengths", "Workload", "mmpp_rate",
 ]

@@ -30,9 +30,20 @@ PD = "pd"
 
 @dataclass
 class RoutingDecision:
+    """One routing verdict.
+
+    ``cross_cache_transfer`` is True when the reused prefix lives in a
+    DIFFERENT cluster than ``target`` (abundant-bandwidth regime only: the
+    router picks the best cache anywhere, and the cached-prefix KV must be
+    copied across the inter-DC link before prefill can reuse it).  The
+    simulator charges those ``S_kv(cached_tokens)`` bytes to the link as an
+    eager flow — the copy is already materialized, unlike the layer-wise
+    pipelined KV of the prefill itself — and decode admission waits for it.
+    """
+
     target: str                  # "prfaas" | "pd"
     cached_tokens: int           # reused prefix at the chosen cluster
-    incremental: int             # tokens actually prefibled
+    incremental: int             # tokens actually prefilled
     cache_cluster: str           # where the reused prefix lives
     cross_cache_transfer: bool = False
 

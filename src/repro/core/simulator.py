@@ -1,4 +1,4 @@
-"""Cross-datacenter PrfaaS-PD cluster simulator (fluid/discrete-event).
+"""Cross-datacenter PrfaaS-PD cluster simulator (discrete-event core).
 
 Ties every core component together under a realistic workload: bursty
 (MMPP-modulated Poisson) arrivals, truncated log-normal lengths, agentic
@@ -6,26 +6,56 @@ sessions producing prefix-cache hits, a fluctuating inter-DC Ethernet link
 with layer-wise pipelined KV flows, the dual-timescale scheduler, and the
 hybrid prefix cache pools.
 
+Event model (``SimConfig(engine="event")``, the default)
+--------------------------------------------------------
+A single priority-queue loop over exact event times — no fixed dt:
+
+  * ARRIVAL       — pre-generated exact MMPP arrival trace (thinning over the
+                    piecewise-constant rate, mean-preserving for any
+                    burst_factor); routes and submits to a prefill pool.
+  * PREFILL_DONE  — frees the prefill server, starts the next queued request,
+                    and (with all KV flows drained) admits the request to
+                    decode.
+  * LINK wake     — the fair-share link is solved *exactly* between events by
+                    progressive filling (``transfer.Link.advance``): flow
+                    completion / layer-release ramp end / OU bandwidth
+                    resample times are computed analytically.  KV flows
+                    release layer-wise while prefill computes (linear ramp),
+                    and cross-cache prefix copies are charged to the link.
+  * DECODE_DONE   — frees a decode slot (slot count = N_d x BS_max).
+  * CONTROL       — every ``control_dt``: the router's short-term congestion
+                    loop observes link telemetry, and the autoscaler's
+                    long-term loop may convert P<->D roles (epoch gating is
+                    the autoscaler's own ``period_s``).
+
+``SimConfig(engine="tick")`` keeps the legacy fixed-step fluid loop (fed the
+identical arrival trace) for apples-to-apples equivalence testing; the event
+engine reproduces its metrics within a few percent while running one to two
+orders of magnitude faster.
+
 Produces the paper's §4.3 observables: throughput, mean/P90 TTFT, egress
-bandwidth, offload fraction, cache hit rates, queue depths.
+bandwidth (including cross-cache transfer bytes), offload fraction, cache
+hit rates, queue depths.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.blockpool import BlockPool
 from repro.core.hardware import Profile
 from repro.core.kv_manager import GlobalKVManager
-from repro.core.prefix_cache import HybridPrefixCache
+from repro.core.sim_cache import SimPrefixCache
 from repro.core.router import PD, PRFAAS, Router, RouterConfig, RoutingDecision
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, StageTelemetry
 from repro.core.throughput_model import SystemConfig, ThroughputModel
-from repro.core.transfer import Link, layerwise_release
-from repro.core.workload import Workload
+from repro.core.transfer import Link
+from repro.core.workload import Workload, mmpp_rate
 
 
 @dataclass
@@ -42,15 +72,22 @@ class Request:
     decode_start: float = -1.0
     first_token: float = -1.0
     done: float = -1.0
+    flows_pending: int = 0        # in-flight link flows gating decode
+    _hashes: Optional[List[int]] = field(default=None, repr=False)
 
     def block_hashes(self, block_tokens: int) -> List[int]:
-        n = self.total_len // block_tokens
-        sid = self.session
-        return [hash((sid, i)) & 0x7FFFFFFFFFFFFFFF for i in range(n)]
+        if self._hashes is None:
+            n = self.total_len // block_tokens
+            # chained-hash stand-in: unique per (session, block index), no
+            # per-block tuple allocation (hot path: ~400 blocks/request)
+            base = (self.session * 0x9E3779B97F4A7C15) & 0x7FFFFFFFFFFFFFFF
+            self._hashes = [(base + i * 0x9E3779B1) & 0x7FFFFFFFFFFFFFFF
+                            for i in range(n)]
+        return self._hashes
 
 
 class InstancePool:
-    """N identical single-request servers with one FIFO queue."""
+    """N identical single-request servers with one FIFO queue (tick engine)."""
 
     def __init__(self, n: int):
         self.capacity = n
@@ -73,32 +110,66 @@ class InstancePool:
         return self.busy_time / max(1e-9, elapsed * max(1, self.capacity))
 
 
-class DecodePool:
+class DecodePool(InstancePool):
     """n_d instances x BS_max slots; a request holds a slot for its decode."""
 
-    def __init__(self, slots: int):
-        self.capacity = slots
-        self.busy: List[float] = []
-        self.queue: List[tuple] = []
+
+class EventPool:
+    """FIFO server pool for the event engine: exact start/finish times, no
+    per-tick scans.  ``submit`` returns True when the item starts now;
+    otherwise it queues until ``release`` or a capacity increase frees it."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.busy = 0
+        self.queue: deque = deque()
         self.busy_time = 0.0
+        self._last = 0.0
 
-    def submit(self, req, service_time: float):
-        self.queue.append((req, service_time))
+    def _integrate(self, now: float):
+        self.busy_time += (now - self._last) * self.busy
+        self._last = now
 
-    def tick(self, now: float, dt: float, on_start):
-        self.busy = [t for t in self.busy if t > now]
-        while self.queue and len(self.busy) < self.capacity:
-            req, st = self.queue.pop(0)
-            self.busy.append(now + st)
-            on_start(req, now, now + st)
-        self.busy_time += dt * len(self.busy)
+    def submit(self, item, now: float) -> bool:
+        self._integrate(now)
+        if self.busy < self.capacity:
+            self.busy += 1
+            return True
+        self.queue.append(item)
+        return False
+
+    def release(self, now: float):
+        """Free one server; returns the next queued item to start (or None)."""
+        self._integrate(now)
+        self.busy -= 1
+        if self.queue and self.busy < self.capacity:
+            self.busy += 1
+            return self.queue.popleft()
+        return None
+
+    def set_capacity(self, capacity: int, now: float) -> list:
+        """Resize; returns queued items that can start immediately."""
+        self._integrate(now)
+        self.capacity = capacity
+        started = []
+        while self.queue and self.busy < self.capacity:
+            self.busy += 1
+            started.append(self.queue.popleft())
+        return started
+
+    def utilization(self, elapsed: float) -> float:
+        """Busy fraction up to ``elapsed`` (== now; pools start at t=0).
+        Integrates pending busy time first so mid-interval reads are
+        current."""
+        self._integrate(elapsed)
+        return self.busy_time / max(1e-9, elapsed * max(1, self.capacity))
 
 
 @dataclass
 class SimConfig:
     arrival_rate: float                 # req/s offered
     sim_time: float = 1800.0
-    dt: float = 0.02
+    dt: float = 0.02                    # tick engine step
     seed: int = 0
     link_gbps: float = 100.0
     link_fluctuation: float = 0.0
@@ -106,6 +177,14 @@ class SimConfig:
     block_tokens: int = 64
     autoscale: bool = False
     warmup_frac: float = 0.1            # exclude from metrics
+    engine: str = "event"               # "event" (exact) | "tick" (legacy)
+    control_dt: float = 0.25            # event engine: telemetry/control loop
+    fluct_dt: float = 0.25              # event engine: OU resample period
+
+
+# event kinds, ordered so ties process deterministically
+_EV_ARRIVAL, _EV_PREFILL_DONE, _EV_DECODE_DONE, _EV_CONTROL, _EV_LINK = \
+    range(5)
 
 
 class PrfaasSimulator:
@@ -121,12 +200,11 @@ class PrfaasSimulator:
         self.router = Router(model, system, router_cfg)
         self.kv = GlobalKVManager()
         for name in (PRFAAS, PD):
-            pool = BlockPool(sim.pool_blocks, sim.block_tokens,
-                             block_bytes=1 << 20)
             self.kv.register_cluster(
-                name, HybridPrefixCache(pool, 0, 1 << 20))
+                name, SimPrefixCache(sim.pool_blocks, sim.block_tokens))
         self.link = Link(sim.link_gbps * 1e9,
-                         fluctuation=sim.link_fluctuation, seed=sim.seed)
+                         fluctuation=sim.link_fluctuation, seed=sim.seed,
+                         fluct_dt=sim.fluct_dt)
         self.prfaas_pool = InstancePool(system.n_prfaas)
         self.pdp_pool = InstancePool(system.n_p)
         self.decode_pool = DecodePool(system.n_d * workload.bs_max)
@@ -141,73 +219,128 @@ class PrfaasSimulator:
 
     # ------------------------------------------------------------- arrivals
     def _arrival_rate(self, now: float) -> float:
-        bf = self.w.burst_factor
-        if bf <= 1.0:
-            return self.sim.arrival_rate
-        # square-wave MMPP: alternate high/low phases, mean preserved
-        phase = (now % self.w.burst_period_s) < self.w.burst_period_s / 2
-        return self.sim.arrival_rate * (bf if phase else max(0.0, 2.0 - bf))
+        return mmpp_rate(self.sim.arrival_rate, self.w.burst_factor,
+                         self.w.burst_period_s, now)
 
-    def _spawn_arrivals(self, now: float, dt: float) -> List[Request]:
-        lam = self._arrival_rate(now) * dt
-        n = self.rng.poisson(lam)
-        out = []
-        for _ in range(n):
-            if (self._open_sessions
-                    and self.rng.random() < self.w.session_prob):
-                i = self.rng.integers(len(self._open_sessions))
-                sid, cur = self._open_sessions[i]
-                grow = int(self.rng.exponential(self.w.session_growth)) + 1
-                total = min(cur + grow, int(self.w.lengths.hi))
-                self._open_sessions[i] = (sid, total)
-            else:
-                sid = self._next_session
-                self._next_session += 1
-                total = int(self.w.lengths.sample(self.rng, 1)[0])
-                self._open_sessions.append((sid, total))
-                if len(self._open_sessions) > 512:
-                    self._open_sessions.pop(0)
-            r = Request(self._next_rid, now, total, sid)
-            self._next_rid += 1
-            out.append(r)
-            self.all_requests.append(r)
-        return out
+    def _new_request(self, now: float) -> Request:
+        if (self._open_sessions
+                and self.rng.random() < self.w.session_prob):
+            i = self.rng.integers(len(self._open_sessions))
+            sid, cur = self._open_sessions[i]
+            grow = int(self.rng.exponential(self.w.session_growth)) + 1
+            total = min(cur + grow, int(self.w.lengths.hi))
+            self._open_sessions[i] = (sid, total)
+        else:
+            sid = self._next_session
+            self._next_session += 1
+            total = int(self.w.lengths.sample(self.rng, 1)[0])
+            self._open_sessions.append((sid, total))
+            if len(self._open_sessions) > 512:
+                self._open_sessions.pop(0)
+        r = Request(self._next_rid, now, total, sid)
+        self._next_rid += 1
+        self.all_requests.append(r)
+        return r
 
-    # ------------------------------------------------------------ execution
-    def _route_and_submit(self, req: Request, now: float):
-        hashes = req.block_hashes(self.sim.block_tokens)
-        matches = {name: c.match_hashes(hashes)
+    def _generate_arrivals(self) -> List[Request]:
+        """Exact MMPP arrival trace via thinning over the piecewise-constant
+        rate — both engines consume the identical trace, so equivalence
+        differences come from time discretization only."""
+        sim, w = self.sim, self.w
+        out: List[Request] = []
+        lam_max = sim.arrival_rate * max(w.burst_factor, 1.0)
+        if lam_max <= 0:
+            return out
+        t = 0.0
+        while True:
+            t += self.rng.exponential(1.0 / lam_max)
+            if t >= sim.sim_time:
+                return out
+            lam = self._arrival_rate(t)
+            if lam < lam_max and self.rng.random() * lam_max > lam:
+                continue                             # thinned
+            out.append(self._new_request(t))
+
+    # ---------------------------------------------------- shared byte model
+    def _wire_profile(self) -> Profile:
+        return self.model.prfaas_profile or self.model.pd_profile
+
+    def _prefill_wire_bytes(self, req: Request) -> float:
+        """KV bytes for a PrfaaS-prefilled request crossing the link (the
+        already-cached prefix need not be resent)."""
+        prof = self._wire_profile()
+        nbytes = prof.s_kv(req.total_len)
+        if req.decision.cached_tokens:
+            nbytes -= prof.s_kv(req.decision.cached_tokens)
+        return max(nbytes, 1.0)
+
+    def _cross_cache_bytes(self, decision: RoutingDecision) -> float:
+        """Cached-prefix KV bytes copied between clusters when the router
+        reuses the best cache anywhere (abundant-bandwidth regime)."""
+        return max(self._wire_profile().s_kv(decision.cached_tokens), 1.0)
+
+    def _route(self, req: Request) -> Tuple[str, float]:
+        n_blocks = req.total_len // self.sim.block_tokens
+        matches = {name: c.match(req.session, n_blocks)
                    for name, c in self.kv.clusters.items()}
         decision = self.router.route(req.total_len, matches,
                                      self.link.congestion_signal())
         req.decision = decision
         incr = max(decision.incremental, 1)
         if decision.target == PRFAAS:
-            st = self.model.prfaas_profile.t_prefill(incr)
-            self.prfaas_pool.submit(req, st)
-        else:
-            st = self.model.pd_profile.t_prefill(incr)
-            self.pdp_pool.submit(req, st)
+            return PRFAAS, self.model.prfaas_profile.t_prefill(incr)
+        return PD, self.model.pd_profile.t_prefill(incr)
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> dict:
+        if self.sim.engine == "tick":
+            return self._run_tick()
+        if self.sim.engine != "event":
+            raise ValueError(f"unknown engine {self.sim.engine!r}; "
+                             "expected 'event' or 'tick'")
+        return self._run_event()
+
+    # ---------------------------------------------------------- tick engine
+    def _route_and_submit_tick(self, req: Request, now: float):
+        cluster, st = self._route(req)
+        pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
+        pool.submit(req, st)
+
+    def _submit_request_flows(self, req: Request, cluster: str, now: float,
+                              done: float, on_all_done=None):
+        """Submit this request's link flows (main KV + cross-cache copy) and
+        wire their completion into the request's readiness state.
+        ``on_all_done(req, tc)`` fires when the LAST flow drains, at its
+        exact completion time (event engine decode admission)."""
+        req.flows_pending = 0
+
+        def on_flow_done(tc: float, _req=req):
+            _req.flows_pending -= 1
+            _req.transfer_done = max(_req.transfer_done, tc)
+            if _req.flows_pending == 0 and on_all_done is not None:
+                on_all_done(_req, tc)
+
+        if cluster == PRFAAS:
+            # layer-wise pipelined KV flow: releases linearly while prefill
+            # computes (the fluid limit of the per-layer staircase)
+            self.link.submit(self._prefill_wire_bytes(req), now,
+                             ramp_end=done, on_done=on_flow_done)
+            req.flows_pending += 1
+        if req.decision.cross_cache_transfer and req.decision.cached_tokens:
+            # cached prefix lives in the other cluster: the copy is already
+            # materialized, so it is wire-eligible immediately (eager)
+            self.link.submit(self._cross_cache_bytes(req.decision), now,
+                             ramp_end=now, on_done=on_flow_done)
+            req.flows_pending += 1
+        if req.flows_pending == 0:
+            req.transfer_done = done      # intra-cluster RDMA: free
 
     def _on_prefill_start(self, cluster: str):
         def cb(req: Request, now: float, done: float):
             req.prefill_start = now
             req.prefill_done = done
             self._inflight.append(req)
-            if cluster == PRFAAS:
-                incr = max(req.decision.incremental, 1)
-                nbytes = self.model.prfaas_profile.s_kv(req.total_len) \
-                    - (self.model.prfaas_profile.s_kv(req.decision.cached_tokens)
-                       if req.decision.cached_tokens else 0.0)
-                nbytes = max(nbytes, 1.0)
-                rel = layerwise_release(now, done - now, nbytes)
-
-                def on_done(t, _req=req):
-                    _req.transfer_done = t
-
-                self.link.submit(nbytes, now, release=rel, on_done=on_done)
-            else:
-                req.transfer_done = done      # intra-cluster RDMA: free
+            self._submit_request_flows(req, cluster, now, done)
         return cb
 
     def _on_decode_start(self, req: Request, now: float, done: float):
@@ -215,29 +348,33 @@ class PrfaasSimulator:
         req.first_token = now + self.w.t_decode
         req.done = done
 
-    # ----------------------------------------------------------------- run
-    def run(self) -> dict:
+    def _run_tick(self) -> dict:
         sim, w = self.sim, self.w
+        trace = self._generate_arrivals()
+        idx = 0
         now = 0.0
         self._inflight: List[Request] = []
         decode_time = w.output_len * w.t_decode
         steps = int(sim.sim_time / sim.dt)
         for step in range(steps):
             now = step * sim.dt
-            for req in self._spawn_arrivals(now, sim.dt):
-                self._route_and_submit(req, now)
+            # process arrivals at the first tick AT or AFTER their exact
+            # arrival time, so prefill never starts before the request exists
+            while idx < len(trace) and trace[idx].arrival <= now:
+                self._route_and_submit_tick(trace[idx], now)
+                idx += 1
             self.prfaas_pool.tick(now, sim.dt, self._on_prefill_start(PRFAAS))
             self.pdp_pool.tick(now, sim.dt, self._on_prefill_start(PD))
             self.link.tick(now, sim.dt)
             # prefill+transfer complete -> decode queue (+cache insert)
             still = []
             for req in self._inflight:
-                ready = (req.prefill_done <= now
+                ready = (req.prefill_done <= now and req.flows_pending == 0
                          and 0 <= req.transfer_done <= now)
                 if ready:
                     cluster = req.decision.target
-                    self.kv.clusters[cluster].insert_hashes(
-                        req.block_hashes(sim.block_tokens))
+                    self.kv.clusters[cluster].insert(
+                        req.session, req.total_len // sim.block_tokens)
                     self.decode_pool.submit(req, decode_time)
                 else:
                     still.append(req)
@@ -253,6 +390,122 @@ class PrfaasSimulator:
                 if new_sys is not None:
                     self.pdp_pool.capacity = new_sys.n_p
                     self.decode_pool.capacity = new_sys.n_d * w.bs_max
+        return self.metrics()
+
+    # --------------------------------------------------------- event engine
+    def _push(self, t: float, kind: int, payload=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _wake_link(self, now: float):
+        nxt = self.link.next_event()
+        if not math.isfinite(nxt) or nxt > self.sim.sim_time:
+            return
+        nxt = max(nxt, now + 1e-9)
+        if nxt < self._link_wake - 1e-9:
+            self._link_wake = nxt
+            self._push(nxt, _EV_LINK)
+
+    def _start_prefill(self, req: Request, st: float, cluster: str,
+                       now: float):
+        req.prefill_start = now
+        done = now + st
+        req.prefill_done = done
+        self._submit_request_flows(req, cluster, now, done,
+                                   on_all_done=self._flows_done)
+        self._push(done, _EV_PREFILL_DONE, (req, cluster))
+
+    def _flows_done(self, req: Request, tc: float):
+        """All link flows drained at tc.  Only admit to decode if prefill is
+        also finished by then — otherwise the PREFILL_DONE event handles it
+        (never call pools with a timestamp in their future)."""
+        if req.prefill_done <= tc + 1e-9:
+            self._maybe_ready(req, tc)
+
+    def _maybe_ready(self, req: Request, t: float):
+        """Prefill finished and every link flow drained -> decode admission
+        (exact time), inserting the produced KV into the prefix cache."""
+        if req.rid in self._ready_seen:
+            return
+        if req.flows_pending > 0 or req.prefill_done > t + 1e-9:
+            return
+        self._ready_seen.add(req.rid)
+        self.kv.clusters[req.decision.target].insert(
+            req.session, req.total_len // self.sim.block_tokens)
+        if self.decode_pool.submit(req, t):
+            self._start_decode(req, t)
+
+    def _start_decode(self, req: Request, now: float):
+        req.decode_start = now
+        req.first_token = now + self.w.t_decode
+        req.done = now + self._decode_time
+        self._push(req.done, _EV_DECODE_DONE, req)
+
+    def _ev_arrival(self, req: Request, now: float):
+        cluster, st = self._route(req)
+        pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
+        if pool.submit((req, st), now):
+            self._start_prefill(req, st, cluster, now)
+
+    def _ev_control(self, now: float):
+        self.router.observe_congestion(self.link.congestion_signal())
+        if self.autoscaler is not None:
+            tel = StageTelemetry(
+                prefill_queue=len(self.prfaas_pool.queue)
+                + len(self.pdp_pool.queue),
+                decode_queue=len(self.decode_pool.queue),
+                prefill_util=self.pdp_pool.utilization(max(now, 1e-9)),
+                decode_util=self.decode_pool.utilization(max(now, 1e-9)))
+            new_sys = self.autoscaler.maybe_rebalance(now, tel)
+            if new_sys is not None:
+                for req, st in self.pdp_pool.set_capacity(new_sys.n_p, now):
+                    self._start_prefill(req, st, PD, now)
+                for req in self.decode_pool.set_capacity(
+                        new_sys.n_d * self.w.bs_max, now):
+                    self._start_decode(req, now)
+        nxt = now + self.sim.control_dt
+        if nxt <= self.sim.sim_time:
+            self._push(nxt, _EV_CONTROL)
+
+    def _run_event(self) -> dict:
+        sim, w = self.sim, self.w
+        self.prfaas_pool = EventPool(self.system.n_prfaas)
+        self.pdp_pool = EventPool(self.system.n_p)
+        self.decode_pool = EventPool(self.system.n_d * w.bs_max)
+        self._decode_time = w.output_len * w.t_decode
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self._link_wake = math.inf
+        self._ready_seen: set = set()
+        for req in self._generate_arrivals():
+            self._push(req.arrival, _EV_ARRIVAL, req)
+        if sim.control_dt > 0:
+            self._push(sim.control_dt, _EV_CONTROL)
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > sim.sim_time:
+                break
+            # solve the link exactly up to this event; flow completions fire
+            # at their exact times and may admit requests to decode
+            self.link.advance(t)
+            if kind == _EV_LINK and t >= self._link_wake - 1e-9:
+                self._link_wake = math.inf
+            if kind == _EV_ARRIVAL:
+                self._ev_arrival(payload, t)
+            elif kind == _EV_PREFILL_DONE:
+                req, cluster = payload
+                pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
+                nxt = pool.release(t)
+                if nxt is not None:
+                    self._start_prefill(nxt[0], nxt[1], cluster, t)
+                self._maybe_ready(req, t)
+            elif kind == _EV_DECODE_DONE:
+                nxt = self.decode_pool.release(t)
+                if nxt is not None:
+                    self._start_decode(nxt, t)
+            elif kind == _EV_CONTROL:
+                self._ev_control(t)
+            self._wake_link(t)
+        self.link.advance(sim.sim_time)
         return self.metrics()
 
     # -------------------------------------------------------------- metrics

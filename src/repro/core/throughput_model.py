@@ -116,16 +116,35 @@ class ThroughputModel:
                           for i in range(401)]
         if n_prfaas == 0:
             thresholds = [math.inf]
+        # The per-threshold workload moments (p_gt, conditional means, and
+        # the resulting per-instance stage rates) are independent of the
+        # N_p/N_d split, so hoist them out of the inner loop: O(T + T*N)
+        # cheap arithmetic instead of O(T*N) erf/interp evaluations.
+        decode_unit = self.theta_pdd(
+            SystemConfig(n_prfaas, 0, 1, b_out, 0.0))
+        per_t = []
+        for t in thresholds:
+            sc1 = SystemConfig(n_prfaas, 1, 1, b_out, t,
+                               kv_wire_compression=kv_wire_compression)
+            p = self.workload.lengths.p_gt(t) if n_prfaas else 0.0
+            per_t.append((t, p, self.theta_prfaas(sc1),
+                          self.theta_pdp(sc1)))
         best, best_rate, trace = None, -1.0, []
         for n_p in range(0 if n_prfaas else 1, n_pd_total):
             n_d = n_pd_total - n_p
-            for t in thresholds:
-                sc = SystemConfig(n_prfaas, n_p, n_d, b_out, t,
-                                  kv_wire_compression=kv_wire_compression)
-                rate = self.lambda_max(sc)
+            th_pdd = n_d * decode_unit
+            for t, p, th_prfaas, th_pdp_unit in per_t:
+                rate = th_pdd
+                if p > 0:
+                    rate = min(rate, th_prfaas / p)
+                if p < 1:
+                    rate = min(rate, n_p * th_pdp_unit / (1.0 - p))
                 trace.append((n_p, n_d, t, rate))
                 if rate > best_rate:
-                    best, best_rate = sc, rate
+                    best_rate = rate
+                    best = SystemConfig(
+                        n_prfaas, n_p, n_d, b_out, t,
+                        kv_wire_compression=kv_wire_compression)
         return best, best_rate, trace
 
     # -- §3.4.2 optimality residuals (Eqs. 7-8), for tests/analysis ----------

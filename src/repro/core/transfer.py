@@ -8,10 +8,19 @@ Models the three mechanisms the paper combines:
   * multi-connection TCP — flows share the link by processor sharing
     (max-min fair); per-flow parallelism is folded into the fair share;
   * congestion monitoring — utilization / queue-depth / drop signals are
-    exported each tick for the scheduler (§3.4.3 short-term loop).
+    exported for the scheduler (§3.4.3 short-term loop).
 
-Fluid simulation with fixed ticks; bandwidth fluctuation is an OU-like
-mean-reverting multiplicative process (bursty links), seedable.
+Two integration modes over the same ``Link`` state:
+  * ``tick(now, dt)`` — legacy fixed-step fluid draining (kept for the
+    apples-to-apples equivalence test against the event engine);
+  * ``advance(to)`` / ``next_event()`` — exact discrete-event solver.
+    Between structural events the max-min fair allocation is computed by
+    progressive filling (water-filling over per-flow release-rate caps),
+    all rates are constant, and the next flow drain / ramp end / capacity
+    resample time is found analytically — no bytes are drained per tick.
+    Bandwidth fluctuation (an OU-like mean-reverting multiplicative
+    process) is resampled on a coarse independent schedule (``fluct_dt``)
+    so capacity is piecewise constant and the solve stays exact.
 """
 from __future__ import annotations
 
@@ -21,38 +30,84 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+_EPS_T = 1e-9          # time epsilon (s)
+_EPS_B = 1e-6          # byte epsilon
+_DROP_WINDOW_S = 30.0  # congestion-drop signal decay window
+
 
 @dataclass
 class Flow:
     flow_id: int
     total_bytes: float
-    # layer-wise pipelining: bytes eligible for the wire at time t
-    release: Callable[[float], float]
+    # layer-wise pipelining: bytes eligible for the wire at time t.  Either a
+    # callable release curve (tick mode, arbitrary shape) or a linear ramp
+    # [start_time, ramp_end] (event mode, exactly solvable).
+    release: Optional[Callable[[float], float]] = None
     on_done: Optional[Callable[[float], None]] = None
     sent: float = 0.0
     start_time: float = 0.0
+    ramp_end: Optional[float] = None
     done_time: Optional[float] = None
 
+    def eligible(self, t: float) -> float:
+        """Bytes allowed on the wire by time t (monotone, <= total).
+        Nothing is eligible before the flow's start_time — a flow may be
+        submitted ahead of the link clock (e.g. the deployment's virtual
+        batches) and must not transfer bytes before it exists."""
+        if t < self.start_time:
+            return 0.0
+        if self.ramp_end is not None:
+            dur = self.ramp_end - self.start_time
+            if dur <= 0.0:
+                return self.total_bytes
+            frac = (t - self.start_time) / dur
+            return self.total_bytes * min(max(frac, 0.0), 1.0)
+        if self.release is not None:
+            return max(0.0, min(self.release(t), self.total_bytes))
+        return self.total_bytes
+
+    def release_rate(self, t: float) -> float:
+        """d(eligible)/dt at time t — nonzero only on a linear ramp."""
+        if self.ramp_end is None or t < self.start_time:
+            return 0.0
+        dur = self.ramp_end - self.start_time
+        if dur <= 0.0 or t >= self.ramp_end - _EPS_T:
+            return 0.0
+        return self.total_bytes / dur
+
     def backlog(self, now: float) -> float:
-        return max(0.0, min(self.release(now), self.total_bytes) - self.sent)
+        return max(0.0, self.eligible(now) - self.sent)
 
 
 class Link:
-    """Fluid fair-share link with fluctuating capacity."""
+    """Fair-share link with fluctuating capacity (fluid tick or exact event)."""
 
     def __init__(self, capacity_bps: float, fluctuation: float = 0.0,
-                 revert: float = 0.2, seed: int = 0):
+                 revert: float = 0.2, seed: int = 0, fluct_dt: float = 0.25):
         self.capacity_bps = capacity_bps          # bits/s nominal
         self.fluctuation = fluctuation            # rel. std of capacity
         self.revert = revert
+        self.fluct_dt = fluct_dt                  # event-mode resample period
         self._mult = 1.0
         self._rng = np.random.default_rng(seed)
         self.flows: Dict[int, Flow] = {}
         self._next_id = 0
+        # event-mode clock + cached segment solution (rates are piecewise
+        # constant between structural events, so absolute drain/completion
+        # times are invariant until a flow joins/leaves/resamples)
+        self.now = 0.0
+        self._fluct_t = 0.0                       # last resample time
+        self._seg_valid = False
+        self._seg_rates: Dict[int, float] = {}
+        self._seg_total = 0.0
+        self._seg_backlogged = False
+        self._seg_next = math.inf
+        self._queue_stale = False
         # telemetry for the scheduler
         self.util_ewma = 0.0
         self.queue_bytes = 0.0
-        self.drops = 0
+        self.drops_total = 0.0                    # cumulative congested "drops"
+        self._drops_w = 0.0                       # windowed (decaying) drops
         self.sent_bytes = 0.0
         self.busy_time = 0.0
 
@@ -61,26 +116,40 @@ class Link:
         """bytes/s after fluctuation."""
         return self.capacity_bps * self._mult / 8.0
 
+    @property
+    def drops(self) -> float:
+        """Windowed congestion-drop signal (decays over ~30 s) — NOT a
+        monotonically growing counter; see ``drops_total`` for cumulative."""
+        return self._drops_w
+
     def submit(self, total_bytes: float, now: float,
                release: Optional[Callable[[float], float]] = None,
-               on_done: Optional[Callable[[float], None]] = None) -> Flow:
-        if release is None:
-            release = lambda t: total_bytes          # eager (no pipelining)
+               on_done: Optional[Callable[[float], None]] = None,
+               ramp_end: Optional[float] = None) -> Flow:
         f = Flow(self._next_id, total_bytes, release, on_done,
-                 start_time=now)
+                 start_time=now, ramp_end=ramp_end)
         self._next_id += 1
         self.flows[f.flow_id] = f
+        self._seg_valid = False
         return f
+
+    def _record_drops(self, n: float, dt: float):
+        decay = math.exp(-dt / _DROP_WINDOW_S)
+        self._drops_w = self._drops_w * decay + n
+        self.drops_total += n
+
+    def _fluct_step(self, dt: float):
+        """One Euler step of the mean-reverting log-OU capacity multiplier."""
+        z = self._rng.standard_normal()
+        logm = math.log(self._mult)
+        logm += -self.revert * logm * dt + self.fluctuation * math.sqrt(dt) * z
+        self._mult = min(max(math.exp(logm), 0.3), 1.5)
 
     # ----------------------------------------------------------------- tick
     def tick(self, now: float, dt: float):
-        # capacity fluctuation (mean-reverting log process)
+        """Legacy fixed-step fluid drain (engine="tick")."""
         if self.fluctuation > 0:
-            z = self._rng.standard_normal()
-            logm = math.log(self._mult)
-            logm += -self.revert * logm * dt \
-                + self.fluctuation * math.sqrt(dt) * z
-            self._mult = min(max(math.exp(logm), 0.3), 1.5)
+            self._fluct_step(dt)
         cap = self.current_capacity() * dt                   # bytes this tick
         active = [f for f in self.flows.values() if f.backlog(now) > 0]
         total_backlog = sum(f.backlog(now) for f in active)
@@ -115,21 +184,169 @@ class Link:
         util = sent_this_tick / max(cap, 1e-9)
         self.util_ewma = 0.98 * self.util_ewma + 0.02 * util
         self.queue_bytes = max(0.0, total_backlog - sent_this_tick)
-        if util > 0.999 and self.queue_bytes > 0:
-            self.drops += 1                                  # congestion signal
+        congested = util > 0.999 and self.queue_bytes > 0
+        self._record_drops(1.0 if congested else 0.0, dt)
         self.busy_time += dt * min(util, 1.0)
+        self.now = now + dt
+
+    # ---------------------------------------------------------- event solve
+    def _fair_rates(self, t: float, cap_bps: float) -> Dict[int, float]:
+        """Max-min fair rates by progressive filling (water-filling).
+
+        Backlogged flows are greedy (uncapped); flows with no backlog but an
+        active release ramp are paced at their release rate (their cap), and
+        the unused share is redistributed to the rest.
+        """
+        entries = []
+        for f in self.flows.values():
+            backlog = f.eligible(t) - f.sent
+            if backlog > _EPS_B:
+                entries.append((math.inf, f))
+            else:
+                rr = f.release_rate(t)
+                if rr > 0.0:
+                    entries.append((rr, f))
+        if not entries:
+            return {}
+        entries.sort(key=lambda e: e[0])
+        rates: Dict[int, float] = {}
+        remaining = cap_bps
+        n = len(entries)
+        for i, (cap, f) in enumerate(entries):
+            share = remaining / (n - i)
+            r = min(cap, share)
+            rates[f.flow_id] = r
+            remaining -= r
+        return rates
+
+    def _recompute_segment(self):
+        """Solve the current fluid segment: fair rates at ``now`` plus the
+        absolute time of the next structural change (a flow drains its
+        eligible backlog and possibly completes, a release ramp ends, or
+        the capacity resamples).  Valid until a flow joins/leaves or the
+        structural time is reached."""
+        t0 = self.now
+        cap = self.current_capacity()
+        rates = self._fair_rates(t0, cap)
+        self._seg_rates = rates
+        self._seg_total = sum(rates.values())
+        self._seg_backlogged = False
+        t = math.inf
+        if self.fluctuation > 0:
+            t = self._fluct_t + self.fluct_dt
+        for f in self.flows.values():
+            if f.start_time > t0 + _EPS_T:
+                t = min(t, f.start_time)      # not-yet-started flow joins
+                continue
+            r = rates.get(f.flow_id, 0.0)
+            rr = f.release_rate(t0)
+            if f.ramp_end is not None and f.ramp_end > t0 + _EPS_T:
+                t = min(t, f.ramp_end)
+            backlog = f.eligible(t0) - f.sent
+            if backlog > _EPS_B:
+                self._seg_backlogged = True
+                if r > rr + _EPS_B:
+                    t = min(t, t0 + backlog / (r - rr))
+        self._seg_next = t
+        self._seg_valid = True
+
+    def next_event(self) -> float:
+        """Next time the event engine must wake the link (inf when idle)."""
+        if not self.flows:
+            return math.inf
+        if not self._seg_valid:
+            self._recompute_segment()
+        return self._seg_next
+
+    def advance(self, to: float):
+        """Exactly advance the fluid solution from ``self.now`` to ``to``,
+        firing flow on_done callbacks at their exact completion times."""
+        if to <= self.now + _EPS_T:
+            return
+        if not self.flows and self.fluctuation <= 0:
+            # idle fast path (telemetry decays toward zero)
+            self._telemetry_step(to - self.now, 0.0, congested=False)
+            self.now = to
+            return
+        while self.now < to - _EPS_T:
+            if self.fluctuation > 0:
+                boundary = self._fluct_t + self.fluct_dt
+                if boundary <= self.now + _EPS_T:
+                    self._fluct_step(self.fluct_dt)
+                    self._fluct_t = boundary
+                    self._seg_valid = False
+                    continue
+            if not self._seg_valid:
+                self._recompute_segment()
+            t_next = min(to, max(self._seg_next, self.now + _EPS_T))
+            dt = t_next - self.now
+            if self._seg_rates:
+                cap = self.current_capacity()
+                for fid, r in self._seg_rates.items():
+                    f = self.flows.get(fid)
+                    if f is not None and r > 0.0:
+                        f.sent = min(f.sent + r * dt, f.total_bytes)
+                self.sent_bytes += self._seg_total * dt
+                util = min(self._seg_total / max(cap, _EPS_B), 1.0)
+                self._telemetry_step(
+                    dt, util,
+                    congested=(util >= 0.999 and self._seg_backlogged))
+            else:
+                self._telemetry_step(dt, 0.0, congested=False)
+            self.now = t_next
+            if t_next < self._seg_next - _EPS_T:
+                break                 # mid-segment: solution still valid
+            # structural boundary: completions fire exactly here
+            self._seg_valid = False
+            done = [f for f in self.flows.values()
+                    if f.sent >= f.total_bytes - _EPS_B]
+            for f in done:
+                f.done_time = self.now
+                del self.flows[f.flow_id]
+            for f in done:
+                if f.on_done:
+                    f.on_done(self.now)
+        self.now = max(self.now, to)
+        self._queue_stale = True
+
+    def run_until_idle(self, max_time: float = math.inf) -> float:
+        """Drain all flows exactly; returns the time the link went idle."""
+        while self.flows:
+            t = self.next_event()
+            if not math.isfinite(t) or t > max_time:
+                break
+            self.advance(t)
+        return self.now
+
+    def _telemetry_step(self, dt: float, util: float, congested: bool):
+        # continuous-time EWMA with ~1 s time constant (the tick engine's
+        # 0.98-per-20ms decay) so the router sees comparable signals;
+        # congested fluid time converts to "drops" at the tick engine's
+        # reference rate of one per 20 ms tick
+        a = math.exp(-dt / 1.0)
+        self.util_ewma = util + (self.util_ewma - util) * a
+        self.busy_time += dt * util
+        self._record_drops(dt / 0.02 if congested else 0.0, dt)
 
     # ------------------------------------------------------------ telemetry
     def congestion_signal(self) -> dict:
+        if self._queue_stale:
+            now = self.now
+            self.queue_bytes = sum(f.backlog(now)
+                                   for f in self.flows.values())
+            self._queue_stale = False
         return {"util": self.util_ewma, "queue_bytes": self.queue_bytes,
-                "drops": self.drops,
+                "drops": self._drops_w, "drops_total": self.drops_total,
                 "inflight": len(self.flows)}
 
 
 def layerwise_release(prefill_start: float, prefill_time: float,
                       total_bytes: float, n_layers: int = 64):
     """Release curve for layer-wise pipelined prefill: layer i's KV becomes
-    wire-eligible when its compute finishes (staircase, ~linear ramp)."""
+    wire-eligible when its compute finishes (staircase, ~linear ramp).
+
+    The event engine instead passes ``ramp_end`` to ``Link.submit`` (the
+    fluid n_layers -> inf limit of this staircase), which solves exactly."""
 
     def release(t: float) -> float:
         if prefill_time <= 0:

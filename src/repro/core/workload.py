@@ -17,6 +17,31 @@ def _phi(z: float) -> float:
     return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
 
 
+def mmpp_rate(base_rate: float, burst_factor: float, period_s: float,
+              t: float) -> float:
+    """Square-wave 2-state MMPP modulation of a Poisson rate, preserving the
+    mean rate for ANY burst_factor bf >= 1:
+
+      * bf <= 2: 50% duty cycle with phase rates (bf, 2-bf) x base
+        -> mean = (bf + (2-bf))/2 = 1 x base
+      * bf  > 2: the low phase would go negative, so instead the duty cycle
+        shrinks to 1/bf with a silent low phase
+        -> mean = (1/bf)*bf + (1-1/bf)*0 = 1 x base
+
+    (The seed clamped the low phase at max(0, 2-bf) with a fixed 50% duty,
+    which inflated the offered load to bf/2 x base for bf > 2.)
+    """
+    bf = burst_factor
+    if bf <= 1.0 or period_s <= 0.0:
+        return base_rate
+    if bf <= 2.0:
+        duty, low = 0.5, 2.0 - bf
+    else:
+        duty, low = 1.0 / bf, 0.0
+    phase_high = (t % period_s) < duty * period_s
+    return base_rate * (bf if phase_high else low)
+
+
 @dataclass(frozen=True)
 class LogNormalLengths:
     mu: float = 9.90

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.blockpool import BlockPool
 from repro.core.prefix_cache import HybridPrefixCache
+from repro.core.transfer import Link
 from repro.models import Model
 from repro.models.kvcache import cache_num_bytes
 from repro.serving.api import Request, Response
@@ -58,7 +59,10 @@ class CrossDCDeployment:
                 BlockPool(cfg.pool_blocks, cfg.block_tokens, 1 << 16), 0, 1),
         }
         self.completed: List[Request] = []
-        self.link_busy_until = 0.0     # virtual link clock (serialized flows)
+        # exact fair-share flow model of the inter-DC link (virtual clock):
+        # concurrent transfers within a prefill batch contend for bandwidth
+        # and are solved by progressive filling, not serialized
+        self.link = Link(cfg.link_gbps * 1e9)
         self.virtual_now = 0.0
 
     # ------------------------------------------------------------- routing
@@ -89,27 +93,40 @@ class CrossDCDeployment:
             for i, r in enumerate(rs):
                 toks[i, :len(r.tokens)] = r.tokens   # left-aligned
             first, caches, wall = engine.prefill(toks)
+            self.link.advance(self.virtual_now)   # sync link clock to batch
+            flows = {}
             for i, r in enumerate(rs):
                 r.prefill_s = wall
                 one = slice_request_cache(caches, i)
                 r.kv_bytes = cache_num_bytes(one)
                 if cluster == "prfaas":
-                    bw = self.cfg.link_gbps * 1e9 / 8
-                    serial = r.kv_bytes / bw
-                    if self.cfg.layerwise_pipeline:
-                        # overlapped with prefill; only the tail layer is
-                        # exposed beyond compute time
-                        exposed = max(serial - r.prefill_s, serial
-                                      / max(1, self.model.cfg.n_layers))
-                    else:
-                        exposed = serial
-                    start = max(self.virtual_now, self.link_busy_until)
-                    self.link_busy_until = start + serial
-                    r.transfer_s = exposed
+                    # layer-wise pipelined: KV becomes wire-eligible as
+                    # prefill computes (linear ramp over the prefill);
+                    # unpipelined: the flow only starts once prefill ends.
+                    # Either way the batch's flows contend on the exact
+                    # fair-share link solver.
+                    start = (self.virtual_now if self.cfg.layerwise_pipeline
+                             else self.virtual_now + wall)
+                    flows[r.rid] = self.link.submit(
+                        max(r.kv_bytes, 1.0), start,
+                        ramp_end=self.virtual_now + wall)
                 else:
                     r.transfer_s = 0.0
                 self.caches[cluster].insert(list(map(int, r.tokens)))
                 self.decode.admit(r, int(first[i]), one, len(r.tokens))
+            if flows:
+                self.link.run_until_idle()
+                floor = 1.0 / max(1, self.model.cfg.n_layers)
+                for r in rs:
+                    f = flows.get(r.rid)
+                    if f is None:
+                        continue
+                    exposed = f.done_time - (self.virtual_now + wall)
+                    # the last layer's KV can never overlap its own compute
+                    serial_tail = f.total_bytes * floor \
+                        / self.link.current_capacity()
+                    r.transfer_s = max(exposed, serial_tail)
+            for r in rs:
                 r.ttft_s = r.prefill_s + r.transfer_s
             self.virtual_now += wall
         self.decode.run_until_drained()

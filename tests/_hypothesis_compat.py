@@ -1,0 +1,118 @@
+"""Fallback for the ``hypothesis`` property-testing API.
+
+The test-suite's property tests use a small subset of hypothesis
+(``given`` / ``settings`` / ``strategies as st``).  When hypothesis is
+installed (see requirements-dev.txt) this module re-exports it unchanged;
+otherwise it provides a deterministic fixed-corpus stand-in so the suite
+still *collects and runs* everywhere: each ``@given`` test is executed over
+a seeded pseudo-random example corpus (boundary values first), which keeps
+the property checks meaningful even if far less adversarial than real
+shrinking-based hypothesis runs.
+"""
+from __future__ import annotations
+
+try:                                    # real hypothesis when available
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # deterministic fallback corpus
+    import functools
+    import itertools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 25
+
+    class HealthCheck:                  # pragma: no cover - placeholder
+        all = staticmethod(lambda: [])
+        too_slow = data_too_large = filter_too_much = None
+
+    class _Strategy:
+        """Generates one example per draw from a shared seeded rng; the
+        first draws hit the boundary examples."""
+
+        def __init__(self, fn, boundaries=()):
+            self._fn = fn
+            self._boundaries = list(boundaries)
+            self._count = 0
+
+        def example_with(self, rng):
+            i = self._count
+            self._count += 1
+            if i < len(self._boundaries):
+                return self._boundaries[i]
+            return self._fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 31):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundaries=[min_value, max_value])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            span = max_value - min_value
+            return _Strategy(
+                lambda rng: float(min_value + span * rng.random()),
+                boundaries=[min_value, max_value])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             boundaries=[False, True])
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                             boundaries=seq[:1])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.example_with(rng)
+                                               for s in strategies))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def gen(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example_with(rng) for _ in range(n)]
+            return _Strategy(gen, boundaries=[[]] if min_size == 0 else [])
+
+    st = _Strategies()
+
+    def settings(*_a, **kw):
+        """Accepts (and mostly ignores) hypothesis settings; honours
+        ``max_examples`` as an upper bound on the fallback corpus size."""
+        max_examples = kw.get("max_examples")
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = min(max_examples, _N_EXAMPLES)
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            import inspect
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_compat_max_examples", None) \
+                    or getattr(wrapper, "_compat_max_examples", None) \
+                    or _N_EXAMPLES
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    ex = [s.example_with(rng) for s in strategies]
+                    fn(*args, *ex, **kwargs)
+
+            # hide the strategy-filled trailing params from pytest's
+            # fixture resolution (functools.wraps exposes them otherwise)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[:-len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            wrapper.__dict__.pop("__wrapped__", None)
+            return wrapper
+        return deco

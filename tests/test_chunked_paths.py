@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import ref
 from repro.models import chunked_attention as chk
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 RNG = np.random.default_rng(4)
 
 

@@ -6,6 +6,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attention
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 RNG = np.random.default_rng(3)
 
 

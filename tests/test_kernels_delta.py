@@ -11,6 +11,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.delta import _neumann_unit_lower_inverse, delta_chunked
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 RNG = np.random.default_rng(2)
 
 

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.flash_attn import flash_attention
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 RNG = np.random.default_rng(0)
 
 

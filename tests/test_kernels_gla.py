@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.gla import gla_chunked
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 RNG = np.random.default_rng(1)
 
 

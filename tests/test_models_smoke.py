@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ARCH_BUILDERS, get_config, get_smoke_config
 from repro.models import Model, prepare_decode_caches
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 ARCHS = list(ARCH_BUILDERS)
 RNG = np.random.default_rng(7)
 

@@ -1,0 +1,320 @@
+"""Event-driven simulator core: exact link solver, tick-engine equivalence,
+MMPP mean preservation, cross-cache byte accounting, sim cache semantics."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (PD, PRFAAS, EventPool, Link, PrfaasSimulator,
+                        Request, SimConfig, SystemConfig, ThroughputModel,
+                        Workload, mmpp_rate, paper_h20_profile,
+                        paper_h200_profile)
+from repro.core.sim_cache import SimPrefixCache
+
+
+@pytest.fixture(scope="module")
+def setup():
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, rate, _ = tm.grid_search(4, 8, 100e9 / 8)
+    return tm, sc, rate, w
+
+
+# --------------------------------------------------------------------------
+# exact progressive-filling link
+# --------------------------------------------------------------------------
+class TestExactLink:
+    def test_single_flow_completion_exact(self):
+        link = Link(8e9)                         # 1 GB/s
+        f = link.submit(2e9, 0.0)
+        link.run_until_idle()
+        assert f.done_time == pytest.approx(2.0, abs=1e-9)
+
+    def test_processor_sharing_two_flows_exact(self):
+        link = Link(8e9)
+        a = link.submit(0.5e9, 0.0)              # drains first
+        b = link.submit(1.5e9, 0.0)
+        link.run_until_idle()
+        # share 0.5 GB/s each -> a done at 1.0; b then alone: 1.0 GB left
+        # at full rate -> done at 2.0
+        assert a.done_time == pytest.approx(1.0, abs=1e-9)
+        assert b.done_time == pytest.approx(2.0, abs=1e-9)
+
+    def test_paced_ramp_flow_caps_at_release_rate(self):
+        link = Link(8e9)
+        # R releases 1 GB linearly over [0, 2] (0.5 GB/s); E is eager 0.6 GB.
+        # Progressive filling: R paced at 0.5, E gets the other 0.5
+        # -> E done at 1.2; R stays paced -> done exactly at ramp end 2.0.
+        r = link.submit(1e9, 0.0, ramp_end=2.0)
+        e = link.submit(0.6e9, 0.0)
+        link.run_until_idle()
+        assert e.done_time == pytest.approx(1.2, abs=1e-9)
+        assert r.done_time == pytest.approx(2.0, abs=1e-9)
+
+    def test_backlogged_ramp_drains_after_ramp_end(self):
+        link = Link(8e9)
+        # 2 GB released over [0, 1] (2 GB/s) on a 1 GB/s link: 1 GB sent by
+        # ramp end, remaining 1 GB backlog drains by t=2 exactly.
+        f = link.submit(2e9, 0.0, ramp_end=1.0)
+        link.run_until_idle()
+        assert f.done_time == pytest.approx(2.0, abs=1e-9)
+
+    def test_conservation_under_events(self):
+        link = Link(8e9)
+        for i in range(5):
+            link.submit(5e8, 0.1 * i, ramp_end=0.1 * i + 0.3)
+        link.advance(1.5)
+        assert link.sent_bytes <= 1e9 * 1.5 * 1.0001
+
+    def test_event_and_tick_links_agree(self):
+        done_e, done_t = [], []
+        le = Link(8e9)
+        le.submit(1e9, 0.0, ramp_end=2.0,
+                  on_done=lambda t: done_e.append(t))
+        le.run_until_idle()
+        lt = Link(8e9)
+        from repro.core.transfer import layerwise_release
+        lt.submit(1e9, 0.0, release=layerwise_release(0.0, 2.0, 1e9, 256),
+                  on_done=lambda t: done_t.append(t))
+        for i in range(400):
+            lt.tick(i * 0.01, 0.01)
+        assert done_e and done_t
+        assert abs(done_e[0] - done_t[0]) < 0.05
+
+    def test_future_start_flow_transfers_nothing_early(self):
+        """A flow submitted ahead of the link clock (deployment virtual
+        batches) must not move bytes before its start_time."""
+        link = Link(8e9)                         # 1 GB/s
+        f = link.submit(125e6, 10.0, ramp_end=10.0)   # eager, starts at t=10
+        link.advance(5.0)
+        assert f.sent == 0.0 and link.sent_bytes == 0.0
+        link.run_until_idle()
+        assert f.done_time == pytest.approx(10.125, abs=1e-9)
+
+    def test_drops_signal_decays(self):
+        link = Link(1e9)
+        for _ in range(10):
+            link.submit(1e9, 0.0)
+        for i in range(100):
+            link.tick(i * 0.05, 0.05)
+        congested = link.congestion_signal()["drops"]
+        assert congested > 0
+        link.flows.clear()
+        for i in range(2000):
+            link.tick(5 + i * 0.05, 0.05)
+        assert link.congestion_signal()["drops"] < 0.05 * congested
+        assert link.drops_total >= congested      # cumulative still recorded
+
+
+# --------------------------------------------------------------------------
+# MMPP arrival modulation: mean rate preserved for any burst factor
+# --------------------------------------------------------------------------
+class TestMmppMeanPreserved:
+    @pytest.mark.parametrize("bf", [1.5, 3.0])
+    def test_rate_integral_matches_base(self, bf):
+        base, period = 2.0, 60.0
+        ts = np.linspace(0, period, 120_001)[:-1]
+        mean = np.mean([mmpp_rate(base, bf, period, t) for t in ts])
+        assert mean == pytest.approx(base, rel=1e-3)
+
+    @pytest.mark.parametrize("bf", [1.5, 3.0])
+    def test_generated_trace_preserves_offered_load(self, setup, bf):
+        tm, sc, rate, _ = setup
+        w = Workload(burst_factor=bf)
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=2.0, sim_time=3000.0, seed=5))
+        n = len(sim._generate_arrivals())
+        assert n / 3000.0 == pytest.approx(2.0, rel=0.05)
+
+    def test_seed_bug_would_have_inflated(self):
+        """bf=3 with the seed's clamped low phase gave 1.5x the mean."""
+        base, period = 2.0, 60.0
+        ts = np.linspace(0, period, 120_001)[:-1]
+        seed_mean = np.mean([base * (3.0 if (t % period) < period / 2
+                                     else max(0.0, 2.0 - 3.0))
+                             for t in ts])
+        assert seed_mean == pytest.approx(1.5 * base, rel=1e-3)
+
+
+# --------------------------------------------------------------------------
+# event engine vs legacy tick engine (same arrival trace)
+# --------------------------------------------------------------------------
+class TestEngineEquivalence:
+    def _both(self, tm, sc, w, rate, **kw):
+        out = {}
+        for engine in ("tick", "event"):
+            sim = PrfaasSimulator(tm, sc, w, SimConfig(
+                arrival_rate=rate, sim_time=360, dt=0.02, seed=11,
+                engine=engine, **kw))
+            out[engine] = sim.run()
+        return out["tick"], out["event"]
+
+    def test_poisson_scenario_within_5pct(self, setup):
+        tm, sc, rate, w = setup
+        t, e = self._both(tm, sc, w, 0.85 * rate)
+        assert e["throughput_rps"] == pytest.approx(t["throughput_rps"],
+                                                    rel=0.05)
+        assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
+        assert e["ttft_p90"] == pytest.approx(t["ttft_p90"], rel=0.05)
+        assert e["offload_frac"] == pytest.approx(t["offload_frac"],
+                                                  rel=0.05)
+        assert e["egress_gbps"] == pytest.approx(t["egress_gbps"], rel=0.05)
+
+    def test_bursty_scenario_within_5pct(self, setup):
+        tm, sc, rate, _ = setup
+        w = Workload(burst_factor=1.5)
+        t, e = self._both(tm, sc, w, 0.8 * rate)
+        assert e["throughput_rps"] == pytest.approx(t["throughput_rps"],
+                                                    rel=0.05)
+        assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
+        assert e["ttft_p90"] == pytest.approx(t["ttft_p90"], rel=0.05)
+
+    def test_unknown_engine_rejected(self, setup):
+        tm, sc, rate, w = setup
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=1.0, sim_time=10, engine="fluid"))
+        with pytest.raises(ValueError):
+            sim.run()
+
+
+# --------------------------------------------------------------------------
+# cross-cache transfer bytes now hit the link (seed bug #1)
+# --------------------------------------------------------------------------
+def _event_ready(sim, sc, w):
+    """Initialize just enough event-engine state to drive arrivals."""
+    sim.prfaas_pool = EventPool(sc.n_prfaas)
+    sim.pdp_pool = EventPool(sc.n_p)
+    sim.decode_pool = EventPool(sc.n_d * w.bs_max)
+    sim._decode_time = w.output_len * w.t_decode
+    sim._heap = []
+    sim._seq = itertools.count()
+    sim._link_wake = math.inf
+    sim._ready_seen = set()
+    return sim
+
+
+class TestCrossCacheBytes:
+    def test_event_engine_charges_cross_cache_flow(self, setup):
+        tm, sc, rate, w = setup
+        sim = _event_ready(PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=1.0, engine="event")), sc, w)
+        # session 0's 38400-token prefix cached at PrfaaS; the follow-up has
+        # only 1600 incremental tokens -> routes to PD with a cross transfer
+        sim.kv.clusters[PRFAAS].insert(0, 600)
+        req = Request(0, 0.0, 40_000, 0)
+        sim._ev_arrival(req, 0.0)
+        d = req.decision
+        assert d.target == PD and d.cross_cache_transfer
+        assert d.cache_cluster == PRFAAS
+        assert len(sim.link.flows) == 1
+        flow = next(iter(sim.link.flows.values()))
+        assert flow.total_bytes == pytest.approx(sim._cross_cache_bytes(d))
+        assert flow.total_bytes > 1e6            # real KV, not a placeholder
+        sim.link.run_until_idle()
+        assert sim.link.sent_bytes == pytest.approx(flow.total_bytes)
+        # decode admission waited for the cross flow
+        assert req.flows_pending == 0
+        assert req.transfer_done == pytest.approx(flow.done_time)
+
+    def test_tick_engine_charges_cross_cache_flow(self, setup):
+        tm, sc, rate, w = setup
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(arrival_rate=1.0,
+                                                   engine="tick"))
+        sim._inflight = []
+        sim.kv.clusters[PRFAAS].insert(0, 600)
+        req = Request(0, 0.0, 40_000, 0)
+        cluster, st = sim._route(req)
+        assert cluster == PD and req.decision.cross_cache_transfer
+        sim._on_prefill_start(PD)(req, 0.0, st)
+        assert len(sim.link.flows) == 1 and req.flows_pending == 1
+
+    def test_fast_cross_flow_defers_decode_until_prefill(self, setup):
+        """A cross-cache copy can drain long before prefill finishes; decode
+        admission must wait for PREFILL_DONE, not fire with a future
+        timestamp (which corrupted pool time integration)."""
+        tm, sc, rate, w = setup
+        sim = _event_ready(PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=1.0, engine="event")), sc, w)
+        sim.kv.clusters[PRFAAS].insert(0, 600)
+        req = Request(0, 0.0, 40_000, 0)
+        sim._ev_arrival(req, 0.0)
+        sim.link.run_until_idle()                # copy drains fast
+        assert req.flows_pending == 0
+        assert req.transfer_done < req.prefill_done
+        assert req.rid not in sim._ready_seen    # NOT admitted early
+        assert sim.decode_pool.busy == 0
+        sim._maybe_ready(req, req.prefill_done)  # PREFILL_DONE path
+        assert req.rid in sim._ready_seen and sim.decode_pool.busy == 1
+        assert req.decode_start == pytest.approx(req.prefill_done)
+
+    def test_sessions_produce_cross_transfers_end_to_end(self, setup):
+        tm, sc, rate, _ = setup
+        w = Workload(session_prob=0.6)
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=0.6 * rate, sim_time=300, seed=3,
+            pool_blocks=2_000_000, engine="event"))
+        m = sim.run()
+        assert sim.router.cross_transfers > 0
+        assert m["egress_gbps"] > 0
+
+
+# --------------------------------------------------------------------------
+# simulator prefix cache (chain-level metadata twin of HybridPrefixCache)
+# --------------------------------------------------------------------------
+class TestSimPrefixCache:
+    def test_snapshot_exactness_semantics(self):
+        c = SimPrefixCache(1024, 64)
+        c.insert(7, 10)                          # 10 blocks cached
+        # extension reuses the full cached prefix
+        assert c.match(7, 12) == 10 * 64
+        # shorter query: blocks cover it but no snapshot at 5 -> miss
+        # (paper §3.2: request-level states reusable only at exact length)
+        assert c.match(7, 5) == 0
+        # exact length hit
+        assert c.match(7, 10) == 10 * 64
+        assert c.match(8, 10) == 0               # different chain
+
+    def test_growing_session_snapshots(self):
+        c = SimPrefixCache(4096, 64)
+        c.insert(1, 10)
+        c.insert(1, 20)
+        assert c.match(1, 25) == 20 * 64
+        assert c.match(1, 15) == 10 * 64         # snapshot at 10 <= covered
+        assert c.match(1, 9) == 0
+
+    def test_lru_eviction_of_whole_chains(self):
+        c = SimPrefixCache(100, 64)
+        c.insert(1, 40)
+        c.insert(2, 40)
+        c.insert(3, 40)                          # evicts chain 1 (and 2)
+        assert c.pool.used <= 100
+        assert c.pool.stats["evicted"] > 0
+        assert c.match(1, 40) == 0
+        assert c.match(3, 40) == 40 * 64
+
+    def test_oversized_insert_fails_cleanly(self):
+        c = SimPrefixCache(16, 64)
+        assert c.insert(1, 64) == 0
+        assert c.pool.stats["alloc_fail"] == 1
+
+
+# --------------------------------------------------------------------------
+# event pool
+# --------------------------------------------------------------------------
+class TestEventPool:
+    def test_fifo_and_capacity(self):
+        p = EventPool(2)
+        assert p.submit("a", 0.0) and p.submit("b", 0.0)
+        assert not p.submit("c", 0.0)
+        assert p.release(1.0) == "c"
+        assert p.release(2.0) is None
+        assert p.utilization(2.0) > 0
+
+    def test_capacity_increase_starts_queued(self):
+        p = EventPool(1)
+        p.submit("a", 0.0)
+        p.submit("b", 0.0)
+        p.submit("c", 0.0)
+        started = p.set_capacity(3, 1.0)
+        assert started == ["b", "c"]

@@ -17,6 +17,8 @@ from repro.training import (AdamWConfig, DataConfig, SyntheticLM,
                             TrainConfig, TrainLoop, init_opt_state,
                             make_train_step)
 
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
 
 @pytest.fixture()
 def tiny(tmp_path):
