@@ -12,8 +12,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig5_gridsearch, kernel_bench, sim_ttft,
-                        table3_kv_throughput, table5_profile,
+from benchmarks import (fig5_gridsearch, kernel_bench, scenario_grid,
+                        sim_ttft, table3_kv_throughput, table5_profile,
                         table6_deployment)
 
 MODULES = {
@@ -22,6 +22,7 @@ MODULES = {
     "table6": table6_deployment,       # Table 6 (deployment comparison)
     "fig5": fig5_gridsearch,           # Figure 5 (grid search slices)
     "sim": sim_ttft,                   # §4.3 TTFT/egress via simulator
+    "grid": scenario_grid,             # burst x skew x fluct x topology grid
     "kernels": kernel_bench,           # supporting kernel micro-bench
 }
 

@@ -1,0 +1,114 @@
+"""Figure-style scenario grid over the event-driven simulator.
+
+Sweeps the four stressors the ROADMAP asked for, now affordable with the
+exact event engine:
+
+  * burst_factor      — MMPP arrival burstiness (mean-preserving duty cycle)
+  * length skew       — log-normal sigma of the request-length distribution
+  * link fluctuation  — OU bandwidth noise on every inter-DC pair link
+  * topology          — 1 vs 3 regional PD clusters (star + PD mesh, skewed
+                        regional traffic shares, per-region link capacities)
+
+Every point runs the SAME offered load (a fixed fraction of the paper
+deployment's modeled two-cluster capacity) so degradation is attributable
+to the stressor, not to re-sizing.  Emits ``BENCH_scenario_grid.json``
+with per-point global + per-cluster + per-pair-link metrics.
+
+    PYTHONPATH=src python -m benchmarks.scenario_grid [--smoke]
+"""
+import argparse
+import itertools
+import json
+import time
+
+from benchmarks.common import emit
+from repro.core import (LogNormalLengths, PrfaasSimulator, SimConfig,
+                        SystemConfig, ThroughputModel, Workload,
+                        paper_h20_profile, paper_h200_profile, split_even)
+
+BURST_FACTORS = (1.0, 2.5)
+LENGTH_SIGMAS = (1.0, 1.3)
+FLUCTUATIONS = (0.0, 0.3)
+PD_CLUSTERS = (1, 3)
+SHARES_3 = (0.6, 0.3, 0.1)           # skewed regional traffic
+# deliberately skinny Ethernet (mean egress is ~7 Gbps): OU fluctuation can
+# push a pair link into congestion, exercising the short-term routing loop
+LINK_GBPS_1 = 20.0
+LINK_GBPS_3 = (14.0, 8.0, 5.0)       # thinner links to smaller regions
+
+
+def _system(tm: ThroughputModel, k: int):
+    sc, lam, _ = tm.grid_search(4, 9, 100e9 / 8)
+    if k == 1:
+        return sc, lam
+    sc_k = SystemConfig(sc.n_prfaas, sc.n_p, sc.n_d, sc.b_out, sc.threshold,
+                        n_p_clusters=tuple(split_even(sc.n_p, k)),
+                        n_d_clusters=tuple(split_even(sc.n_d, k)))
+    return sc_k, lam
+
+
+def run_point(bf: float, sigma: float, fluct: float, k: int,
+              sim_time: float, load_frac: float = 0.7) -> dict:
+    w = Workload(lengths=LogNormalLengths(sigma=sigma), burst_factor=bf,
+                 session_prob=0.3)
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, lam = _system(tm, k)
+    cfg = SimConfig(
+        arrival_rate=load_frac * lam, sim_time=sim_time, seed=17,
+        link_gbps=LINK_GBPS_1, link_fluctuation=fluct, engine="event",
+        pd_clusters=k,
+        pd_shares=SHARES_3[:k] if k > 1 else None,
+        pd_link_gbps=LINK_GBPS_3[:k] if k > 1 else None,
+        pd_mesh_gbps=10.0 if k > 1 else 0.0)
+    t0 = time.time()
+    m = PrfaasSimulator(tm, sc, w, cfg).run()
+
+    def _r(v):
+        return round(v, 4) if v == v else None    # NaN -> valid JSON null
+
+    return {
+        "burst_factor": bf, "length_sigma": sigma,
+        "link_fluctuation": fluct, "pd_clusters": k,
+        "offered_rps": round(load_frac * lam, 4),
+        "wall_s": round(time.time() - t0, 3),
+        "throughput_rps": round(m["throughput_rps"], 4),
+        "ttft_mean_s": _r(m["ttft_mean"]),
+        "ttft_p90_s": _r(m["ttft_p90"]),
+        "egress_gbps": round(m["egress_gbps"], 4),
+        "offload_frac": round(m["offload_frac"], 4),
+        "clusters": {name: {kk: _r(vv) for kk, vv in c.items()}
+                     for name, c in m["clusters"].items()},
+        "links": {pair: round(s["sent_bytes"] / 1e9, 3)
+                  for pair, s in m["links"].items()},
+    }
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_scenario_grid.json"):
+    sim_time = 120.0 if smoke else 300.0
+    points = []
+    t_start = time.time()
+    for bf, sigma, fluct, k in itertools.product(
+            BURST_FACTORS, LENGTH_SIGMAS, FLUCTUATIONS, PD_CLUSTERS):
+        p = run_point(bf, sigma, fluct, k, sim_time)
+        points.append(p)
+        p90 = "n/a" if p["ttft_p90_s"] is None else f"{p['ttft_p90_s']:.2f}s"
+        emit(f"grid/bf{bf}_sg{sigma}_fl{fluct}_k{k}", p["wall_s"] * 1e6,
+             f"thr={p['throughput_rps']:.2f}rps "
+             f"p90={p90} egress={p['egress_gbps']:.1f}Gbps")
+    out = {"sim_time_s": sim_time, "seed": 17, "load_frac": 0.7,
+           "wall_total_s": round(time.time() - t_start, 2),
+           "n_points": len(points), "points": points}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    emit("grid/total", out["wall_total_s"] * 1e6,
+         f"{len(points)}pts -> {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short sim horizon for CI")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

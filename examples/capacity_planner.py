@@ -3,13 +3,16 @@ PrfaaS-PD deployment for YOUR traffic — the operator-facing workflow the
 paper's §3.4/§4 enables.
 
 Sweeps PrfaaS cluster size and link bandwidth, reports achievable req/s,
-optimal threshold, and egress demand; then validates the chosen point under
-bursty traffic with the discrete-event simulator.
+optimal threshold, and egress demand; validates the chosen point under
+bursty traffic with the discrete-event simulator; then splits the PD fleet
+into three regional clusters (skewed traffic shares, thinner links to the
+smaller regions) and re-validates over the multi-cluster ``LinkTopology``.
 
     PYTHONPATH=src python examples/capacity_planner.py
 """
-from repro.core import (PrfaasSimulator, SimConfig, ThroughputModel,
-                        Workload, paper_h20_profile, paper_h200_profile)
+from repro.core import (PrfaasSimulator, SimConfig, SystemConfig,
+                        ThroughputModel, Workload, paper_h20_profile,
+                        paper_h200_profile)
 
 w = Workload()
 tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
@@ -46,3 +49,44 @@ print(f"  sustained {m['throughput_rps']:.2f} req/s "
       f"egress {m['egress_gbps']:.1f} Gbps, "
       f"router adjustments {m['router_adjustments']}, "
       f"threshold now {m['threshold']/1000:.1f}K")
+
+# --- regional build-out: three PD clusters over a star topology -------------
+shares = (0.5, 0.3, 0.2)
+region_gbps = (100.0, 50.0, 25.0)             # thinner links to small regions
+
+
+def share_split(total, shares, min_per=1):
+    """Allocate instances ~proportional to regional traffic, >=1 each
+    (a region with zero prefill instances models to zero capacity: its
+    short requests have nowhere to run)."""
+    alloc = [max(min_per, round(total * s)) for s in shares]
+    alloc[0] += total - sum(alloc)            # rounding drift -> hot region
+    return tuple(alloc)
+
+
+sc_r, lam_r, _ = tm.grid_search(4, 12, 100e9 / 8)
+sc3 = SystemConfig(sc_r.n_prfaas, sc_r.n_p, sc_r.n_d, sc_r.b_out,
+                   sc_r.threshold,
+                   n_p_clusters=share_split(sc_r.n_p, shares),
+                   n_d_clusters=share_split(sc_r.n_d, shares))
+lam3 = tm.lambda_max(sc3, pd_shares=list(shares))
+print(f"\nregional build-out: 12 PD instances as 3 clusters "
+      f"(shares {shares}, links {region_gbps} Gbps):")
+print(f"  Np/Nd per region {sc3.n_p_clusters}/{sc3.n_d_clusters}; "
+      f"modeled capacity {lam3:.2f} req/s "
+      f"(vs {lam_r:.2f} pooled; regional split costs "
+      f"{(1 - lam3/lam_r)*100:.0f}%)")
+sim3 = PrfaasSimulator(tm, sc3, wb, SimConfig(
+    arrival_rate=0.85 * lam3, sim_time=600, dt=0.05, seed=0,
+    link_fluctuation=0.2, pd_clusters=3, pd_shares=shares,
+    pd_link_gbps=region_gbps, pd_mesh_gbps=10.0))
+m3 = sim3.run()
+print(f"  sustained {m3['throughput_rps']:.2f} req/s, "
+      f"TTFT p90 {m3['ttft_p90']:.2f}s, egress {m3['egress_gbps']:.1f} Gbps")
+for name, c in m3["clusters"].items():
+    print(f"    {name}: {c['throughput_rps']:.2f} req/s, "
+          f"TTFT p90 {c['ttft_p90']:.2f}s")
+for pair, s in m3["links"].items():
+    if s["sent_bytes"]:
+        print(f"    link {pair}: {s['sent_bytes']*8/1e9/600:.1f} Gbps avg "
+              f"of {s['capacity_gbps']:.0f} Gbps")

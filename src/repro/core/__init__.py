@@ -15,8 +15,10 @@ from repro.core.router import (PD, PRFAAS, Router, RouterConfig,
 from repro.core.simulator import (EventPool, PrfaasSimulator, Request,
                                   SimConfig)
 from repro.core.throughput_model import (SystemConfig, ThroughputModel,
-                                         egress_bandwidth, kv_throughput)
-from repro.core.transfer import Flow, Link, layerwise_release
+                                         egress_bandwidth, kv_throughput,
+                                         split_even)
+from repro.core.transfer import (Flow, Link, LinkTopology, layerwise_release,
+                                 star_pairs)
 from repro.core.workload import LogNormalLengths, Workload, mmpp_rate
 
 __all__ = [
@@ -30,6 +32,7 @@ __all__ = [
     "Router", "RouterConfig", "RoutingDecision", "PD", "PRFAAS",
     "EventPool", "PrfaasSimulator", "Request", "SimConfig",
     "SystemConfig", "ThroughputModel", "egress_bandwidth", "kv_throughput",
-    "Flow", "Link", "layerwise_release",
+    "split_even",
+    "Flow", "Link", "LinkTopology", "layerwise_release", "star_pairs",
     "LogNormalLengths", "Workload", "mmpp_rate",
 ]

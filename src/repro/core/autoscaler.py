@@ -33,11 +33,14 @@ class AutoscalerConfig:
 
 class Autoscaler:
     def __init__(self, model: ThroughputModel, router: Router,
-                 system: SystemConfig, cfg: AutoscalerConfig = AutoscalerConfig()):
+                 system: SystemConfig,
+                 cfg: Optional[AutoscalerConfig] = None):
         self.model = model
         self.router = router
         self.system = system
-        self.cfg = cfg
+        # fresh config per autoscaler (a default argument would be a single
+        # mutable instance shared by every Autoscaler in the process)
+        self.cfg = AutoscalerConfig() if cfg is None else cfg
         self._last_eval = 0.0
         self.conversions: List[tuple] = []
 

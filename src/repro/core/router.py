@@ -1,16 +1,23 @@
 """Short-term scheduling: bandwidth- and cache-aware request routing
 (paper §3.4.3, short-term loop).
 
-Decision per request (incremental uncached length l after prefix matching):
+Each request originates at a *home* PD cluster (its region).  Decision per
+request (incremental uncached length l after prefix matching):
   * l > t      -> PrfaaS cluster (remote long-context prefill)
-  * l <= t     -> local PD-P
+  * l <= t     -> home PD-P (local prefill)
 with the paper's two cache-aware regimes:
-  * bandwidth SCARCE  -> evaluate each cluster's prefix independently:
-       if l_total - l_pd <= t : prefill locally (use PD's own cache)
-       else                   : offload (use PrfaaS's own cache)
-  * bandwidth ABUNDANT -> use the best cache anywhere
-       l_prefix = max(l_prfaas, l_pd); route on l_total - l_prefix and
-       cross-transfer the cache if the owning cluster differs.
+  * bandwidth SCARCE  -> evaluate home and PrfaaS prefixes independently:
+       if l_total - l_home <= t : prefill locally (use home's own cache)
+       else                     : offload (use PrfaaS's own cache)
+  * bandwidth ABUNDANT -> use the best cache anywhere across ALL clusters
+       l_prefix = max over clusters; route on l_total - l_prefix and
+       cross-transfer the cache when the owning cluster differs from the
+       prefill target (the caller charges the owner<->target pair link).
+
+The caller passes only the cluster matches reachable from ``home`` over the
+link topology, so an unlinked region's cache is never chosen.  The classic
+two-cluster deployment is ``home == PD`` with matches {PRFAAS, PD} and
+reproduces the original decision table exactly.
 
 The threshold t is re-derived from the live profile whenever the congestion
 monitor triggers (egress utilization / queue depth), which is the paper's
@@ -41,11 +48,12 @@ class RoutingDecision:
     pipelined KV of the prefill itself — and decode admission waits for it.
     """
 
-    target: str                  # "prfaas" | "pd"
+    target: str                  # "prfaas" | a PD cluster name
     cached_tokens: int           # reused prefix at the chosen cluster
     incremental: int             # tokens actually prefilled
     cache_cluster: str           # where the reused prefix lives
     cross_cache_transfer: bool = False
+    home: str = PD               # the request's regional PD cluster
 
 
 @dataclass
@@ -59,10 +67,12 @@ class RouterConfig:
 
 class Router:
     def __init__(self, model: ThroughputModel, system: SystemConfig,
-                 cfg: RouterConfig = RouterConfig()):
+                 cfg: Optional[RouterConfig] = None):
         self.model = model
         self.system = system
-        self.cfg = cfg
+        # a fresh config per router: a dataclass default argument would be
+        # one shared mutable instance across every Router in the process
+        self.cfg = RouterConfig() if cfg is None else cfg
         self.threshold = system.threshold
         self.base_threshold = system.threshold
         self.adjustments = 0
@@ -94,8 +104,13 @@ class Router:
 
     # --------------------------------------------------------------- route
     def route(self, l_total: int, matches: Dict[str, int],
-              bandwidth_signal: Optional[dict] = None) -> RoutingDecision:
-        l_pd = matches.get(PD, 0)
+              bandwidth_signal: Optional[dict] = None,
+              home: str = PD) -> RoutingDecision:
+        """Route one request originating at ``home``.  ``matches`` maps every
+        reachable cluster (home, PrfaaS, and — bandwidth permitting — other
+        regions) to its matched prefix tokens; ``bandwidth_signal`` is the
+        home<->PrfaaS pair telemetry, which decides the regime."""
+        l_home = matches.get(home, 0)
         l_prfaas = matches.get(PRFAAS, 0)
         signal = bandwidth_signal or {}
         abundant = signal.get("util", 0.0) < self.cfg.util_abundant
@@ -103,34 +118,37 @@ class Router:
 
         if abundant:
             # compute is scarce: use the best cache across all clusters
-            l_prefix = max(l_prfaas, l_pd)
+            # (prefer home on ties, then dict order = registration order)
+            best_cluster, l_prefix = home, l_home
+            for name, m in matches.items():
+                if m > l_prefix:
+                    best_cluster, l_prefix = name, m
             incr = l_total - l_prefix
-            if incr <= t:
-                target, cache_cluster = PD, (PD if l_pd >= l_prfaas else PRFAAS)
-            else:
-                target, cache_cluster = PRFAAS, (PRFAAS if l_prfaas >= l_pd
-                                                 else PD)
+            target = home if incr <= t else PRFAAS
+            # prefer the target's own cache on ties (no copy needed)
+            cache_cluster = (target if matches.get(target, 0) >= l_prefix
+                             else best_cluster)
             cross = cache_cluster != target and l_prefix > 0
             cached = l_prefix
         else:
-            # bandwidth is scarce: evaluate clusters independently
-            if l_total - l_pd <= t:
-                target, cached, cache_cluster, cross = PD, l_pd, PD, False
+            # bandwidth is scarce: evaluate home and PrfaaS independently
+            if l_total - l_home <= t:
+                target, cached, cache_cluster, cross = home, l_home, home, False
             else:
                 target, cached, cache_cluster, cross = \
                     PRFAAS, l_prfaas, PRFAAS, False
             incr = l_total - cached
 
         if self.system.n_prfaas == 0:
-            target, cached, cache_cluster, cross = PD, l_pd, PD, False
+            target, cached, cache_cluster, cross = home, l_home, home, False
             incr = l_total - cached
         elif self.system.n_p == 0:          # naive hetero: no local prefill
             target, cached, cache_cluster, cross = PRFAAS, l_prfaas, PRFAAS, False
             incr = l_total - cached
-        self.decisions[target] += 1
+        self.decisions[target] = self.decisions.get(target, 0) + 1
         if cross:
             self.cross_transfers += 1
         return RoutingDecision(target=target, cached_tokens=cached,
                                incremental=max(0, incr),
                                cache_cluster=cache_cluster,
-                               cross_cache_transfer=cross)
+                               cross_cache_transfer=cross, home=home)

@@ -2,9 +2,21 @@
 
 Ties every core component together under a realistic workload: bursty
 (MMPP-modulated Poisson) arrivals, truncated log-normal lengths, agentic
-sessions producing prefix-cache hits, a fluctuating inter-DC Ethernet link
-with layer-wise pipelined KV flows, the dual-timescale scheduler, and the
-hybrid prefix cache pools.
+sessions producing prefix-cache hits, a fluctuating inter-DC Ethernet
+topology with layer-wise pipelined KV flows, the dual-timescale scheduler,
+and the hybrid prefix cache pools.
+
+Multi-cluster deployments (paper deployment story)
+--------------------------------------------------
+One compute-dense PrfaaS cluster feeds ``SimConfig.pd_clusters`` regional
+PD clusters over a ``transfer.LinkTopology``: a star of independent
+per-pair links (plus an optional PD<->PD mesh for cross-region cache
+copies), skewed regional traffic shares (``pd_shares``), per-region
+prefill/decode pools, and a home-cluster router — each request offloads to
+PrfaaS, prefills locally, or reuses the best cache anywhere reachable,
+charging the correct pair link.  ``pd_clusters=1`` (the default) is the
+paper's two-cluster deployment and reproduces the original single-``Link``
+simulator bit-for-bit on the same seed.
 
 Event model (``SimConfig(engine="event")``, the default)
 --------------------------------------------------------
@@ -16,17 +28,22 @@ A single priority-queue loop over exact event times — no fixed dt:
   * PREFILL_DONE  — frees the prefill server, starts the next queued request,
                     and (with all KV flows drained) admits the request to
                     decode.
-  * LINK wake     — the fair-share link is solved *exactly* between events by
-                    progressive filling (``transfer.Link.advance``): flow
-                    completion / layer-release ramp end / OU bandwidth
+  * LINK wake     — every fair-share pair link is solved *exactly* between
+                    events by progressive filling (``transfer.Link.advance``):
+                    flow completion / layer-release ramp end / OU bandwidth
                     resample times are computed analytically.  KV flows
                     release layer-wise while prefill computes (linear ramp),
-                    and cross-cache prefix copies are charged to the link.
-  * DECODE_DONE   — frees a decode slot (slot count = N_d x BS_max).
+                    and cross-cache prefix copies are charged to the
+                    owner<->target pair link.
+  * DECODE_DONE   — frees a decode slot in the request's home cluster
+                    (slot count = N_d,c x BS_max).
   * CONTROL       — every ``control_dt``: the router's short-term congestion
-                    loop observes link telemetry, and the autoscaler's
-                    long-term loop may convert P<->D roles (epoch gating is
-                    the autoscaler's own ``period_s``).
+                    loop observes aggregated link telemetry, and the
+                    autoscaler's long-term loop may convert P<->D roles
+                    (epoch gating is the autoscaler's own ``period_s``).
+  * WARMUP        — at t0 = warmup_frac x horizon: snapshots topology
+                    sent-bytes so egress is reported over the same
+                    measurement window as throughput.
 
 ``SimConfig(engine="tick")`` keeps the legacy fixed-step fluid loop (fed the
 identical arrival trace) for apples-to-apples equivalence testing; the event
@@ -35,7 +52,7 @@ orders of magnitude faster.
 
 Produces the paper's §4.3 observables: throughput, mean/P90 TTFT, egress
 bandwidth (including cross-cache transfer bytes), offload fraction, cache
-hit rates, queue depths.
+hit rates, queue depths — globally and per PD cluster.
 """
 from __future__ import annotations
 
@@ -54,7 +71,7 @@ from repro.core.sim_cache import SimPrefixCache
 from repro.core.router import PD, PRFAAS, Router, RouterConfig, RoutingDecision
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, StageTelemetry
 from repro.core.throughput_model import SystemConfig, ThroughputModel
-from repro.core.transfer import Link
+from repro.core.transfer import Link, LinkTopology, star_pairs
 from repro.core.workload import Workload, mmpp_rate
 
 
@@ -64,6 +81,7 @@ class Request:
     arrival: float
     total_len: int
     session: int
+    home: str = PD                # regional PD cluster serving this request
     # filled by routing / execution
     decision: Optional[RoutingDecision] = None
     prefill_start: float = -1.0
@@ -92,8 +110,9 @@ class InstancePool:
     def __init__(self, n: int):
         self.capacity = n
         self.busy: List[float] = []          # end times
-        self.queue: List[tuple] = []         # (req, service_time)
+        self.queue: deque = deque()          # (req, service_time)
         self.busy_time = 0.0
+        self.cap_time = 0.0                  # time-integrated capacity
 
     def submit(self, req, service_time: float):
         self.queue.append((req, service_time))
@@ -101,13 +120,16 @@ class InstancePool:
     def tick(self, now: float, dt: float, on_start):
         self.busy = [t for t in self.busy if t > now]
         while self.queue and len(self.busy) < self.capacity:
-            req, st = self.queue.pop(0)
+            req, st = self.queue.popleft()
             self.busy.append(now + st)
             on_start(req, now, now + st)
         self.busy_time += dt * len(self.busy)
+        self.cap_time += dt * max(1, self.capacity)
 
     def utilization(self, elapsed: float) -> float:
-        return self.busy_time / max(1e-9, elapsed * max(1, self.capacity))
+        # capacity is integrated over time (cap_time), so a mid-run resize
+        # does not rewrite the history of earlier, differently-sized epochs
+        return self.busy_time / max(1e-9, self.cap_time)
 
 
 class DecodePool(InstancePool):
@@ -124,10 +146,12 @@ class EventPool:
         self.busy = 0
         self.queue: deque = deque()
         self.busy_time = 0.0
+        self.cap_time = 0.0                  # time-integrated capacity
         self._last = 0.0
 
     def _integrate(self, now: float):
         self.busy_time += (now - self._last) * self.busy
+        self.cap_time += (now - self._last) * max(1, self.capacity)
         self._last = now
 
     def submit(self, item, now: float) -> bool:
@@ -160,14 +184,16 @@ class EventPool:
     def utilization(self, elapsed: float) -> float:
         """Busy fraction up to ``elapsed`` (== now; pools start at t=0).
         Integrates pending busy time first so mid-interval reads are
-        current."""
+        current.  The denominator is capacity integrated over time, so a
+        mid-run ``set_capacity`` changes only the epochs it governs instead
+        of retroactively rescaling the whole history."""
         self._integrate(elapsed)
-        return self.busy_time / max(1e-9, elapsed * max(1, self.capacity))
+        return self.busy_time / max(1e-9, self.cap_time)
 
 
 @dataclass
 class SimConfig:
-    arrival_rate: float                 # req/s offered
+    arrival_rate: float                 # req/s offered (global, all regions)
     sim_time: float = 1800.0
     dt: float = 0.02                    # tick engine step
     seed: int = 0
@@ -180,34 +206,65 @@ class SimConfig:
     engine: str = "event"               # "event" (exact) | "tick" (legacy)
     control_dt: float = 0.25            # event engine: telemetry/control loop
     fluct_dt: float = 0.25              # event engine: OU resample period
+    # -- multi-cluster topology (1 = the paper's two-cluster deployment) ----
+    pd_clusters: int = 1                # regional PD clusters fed by PrfaaS
+    pd_shares: Optional[Tuple[float, ...]] = None   # regional traffic shares
+    pd_link_gbps: Optional[Tuple[float, ...]] = None  # per-region star links
+    pd_link_fluct: Optional[Tuple[float, ...]] = None
+    pd_mesh_gbps: float = 0.0           # PD<->PD links (0 = star only)
 
 
 # event kinds, ordered so ties process deterministically
-_EV_ARRIVAL, _EV_PREFILL_DONE, _EV_DECODE_DONE, _EV_CONTROL, _EV_LINK = \
-    range(5)
+(_EV_ARRIVAL, _EV_PREFILL_DONE, _EV_DECODE_DONE, _EV_CONTROL, _EV_LINK,
+ _EV_WARMUP) = range(6)
 
 
 class PrfaasSimulator:
     def __init__(self, model: ThroughputModel, system: SystemConfig,
                  workload: Workload, sim: SimConfig,
-                 router_cfg: RouterConfig = RouterConfig()):
+                 router_cfg: Optional[RouterConfig] = None):
         self.model = model
         self.system = system
         self.w = workload
         self.sim = sim
         self.rng = np.random.default_rng(sim.seed)
 
+        # -- regional PD clusters, traffic shares, link topology ------------
+        k = sim.pd_clusters
+        if k < 1:
+            raise ValueError("pd_clusters must be >= 1")
+        if sim.autoscale and k > 1:
+            raise ValueError("autoscale is only supported for a single PD "
+                             "cluster (per-region autoscaling is future work)")
+        self._pd_names = [PD] if k == 1 else [f"pd{i}" for i in range(k)]
+        shares = sim.pd_shares if sim.pd_shares is not None \
+            else tuple([1.0 / k] * k)
+        if len(shares) != k or min(shares) < 0 or sum(shares) <= 0:
+            raise ValueError(f"pd_shares {shares} invalid for {k} clusters")
+        self._shares = [s / sum(shares) for s in shares]
+        if system.n_p_clusters is not None \
+                and len(system.n_p_clusters) != k:
+            raise ValueError("SystemConfig per-cluster tuples must match "
+                             "SimConfig.pd_clusters")
+        self._per_cluster = system.per_cluster(k)   # [(n_p, n_d) per region]
+
         self.router = Router(model, system, router_cfg)
         self.kv = GlobalKVManager()
-        for name in (PRFAAS, PD):
+        self.kv.register_cluster(
+            PRFAAS, SimPrefixCache(sim.pool_blocks, sim.block_tokens),
+            nodes=max(1, system.n_prfaas))
+        for name, (n_p_c, n_d_c) in zip(self._pd_names, self._per_cluster):
             self.kv.register_cluster(
-                name, SimPrefixCache(sim.pool_blocks, sim.block_tokens))
-        self.link = Link(sim.link_gbps * 1e9,
-                         fluctuation=sim.link_fluctuation, seed=sim.seed,
-                         fluct_dt=sim.fluct_dt)
+                name, SimPrefixCache(sim.pool_blocks, sim.block_tokens),
+                nodes=max(1, n_p_c + n_d_c))
+        self.topology = self._build_topology()
         self.prfaas_pool = InstancePool(system.n_prfaas)
-        self.pdp_pool = InstancePool(system.n_p)
-        self.decode_pool = DecodePool(system.n_d * workload.bs_max)
+        self.pdp_pools: Dict[str, InstancePool] = {
+            name: InstancePool(n_p_c)
+            for name, (n_p_c, _) in zip(self._pd_names, self._per_cluster)}
+        self.decode_pools: Dict[str, InstancePool] = {
+            name: DecodePool(n_d_c * workload.bs_max)
+            for name, (_, n_d_c) in zip(self._pd_names, self._per_cluster)}
         self.autoscaler = Autoscaler(model, self.router, system) \
             if sim.autoscale else None
 
@@ -215,29 +272,83 @@ class PrfaasSimulator:
         self.all_requests: List[Request] = []
         self._next_rid = 0
         self._next_session = 0
-        self._open_sessions: List[tuple] = []   # (session_id, cur_len)
+        # (session_id, cur_len, home); bounded LRU-ish window of live sessions
+        self._open_sessions: deque = deque(maxlen=512)
+        self._egress_t0 = 0.0         # topology sent-bytes at warmup end
+
+    def _build_topology(self) -> LinkTopology:
+        """Star topology PrfaaS->each region (+ optional PD mesh).  The
+        single-region star is one pair seeded ``sim.seed`` — identical to
+        the original bare ``Link``."""
+        sim, k = self.sim, self.sim.pd_clusters
+        star = star_pairs(PRFAAS, self._pd_names, mesh=sim.pd_mesh_gbps > 0)
+        n_star = k
+        gbps = list(sim.pd_link_gbps) if sim.pd_link_gbps is not None \
+            else [sim.link_gbps] * n_star
+        fluct = list(sim.pd_link_fluct) if sim.pd_link_fluct is not None \
+            else [sim.link_fluctuation] * n_star
+        if len(gbps) != n_star or len(fluct) != n_star:
+            raise ValueError("pd_link_gbps/pd_link_fluct must have one entry "
+                             "per PD cluster")
+        n_mesh = len(star) - n_star
+        gbps += [sim.pd_mesh_gbps] * n_mesh
+        fluct += [sim.link_fluctuation] * n_mesh
+        return LinkTopology.build([PRFAAS] + self._pd_names, star, gbps,
+                                  fluctuation=fluct, seed=sim.seed,
+                                  fluct_dt=sim.fluct_dt)
+
+    # ------------------------------------------------- two-cluster aliases
+    # The classic deployment has one PD cluster; these aliases keep the
+    # original single-cluster attribute API (tests, notebooks) working.
+    @property
+    def link(self) -> Link:
+        return self.topology.link(PRFAAS, self._pd_names[0])
+
+    @property
+    def pdp_pool(self):
+        return self.pdp_pools[self._pd_names[0]]
+
+    @pdp_pool.setter
+    def pdp_pool(self, pool):
+        self.pdp_pools[self._pd_names[0]] = pool
+
+    @property
+    def decode_pool(self):
+        return self.decode_pools[self._pd_names[0]]
+
+    @decode_pool.setter
+    def decode_pool(self, pool):
+        self.decode_pools[self._pd_names[0]] = pool
 
     # ------------------------------------------------------------- arrivals
     def _arrival_rate(self, now: float) -> float:
         return mmpp_rate(self.sim.arrival_rate, self.w.burst_factor,
                          self.w.burst_period_s, now)
 
+    def _sample_home(self) -> str:
+        """Regional origin of a new session, skewed by pd_shares.  The
+        single-cluster case draws nothing, keeping the RNG stream (and thus
+        the whole trajectory) identical to the pre-topology simulator."""
+        if len(self._pd_names) == 1:
+            return self._pd_names[0]
+        i = int(self.rng.choice(len(self._pd_names), p=self._shares))
+        return self._pd_names[i]
+
     def _new_request(self, now: float) -> Request:
         if (self._open_sessions
                 and self.rng.random() < self.w.session_prob):
             i = self.rng.integers(len(self._open_sessions))
-            sid, cur = self._open_sessions[i]
+            sid, cur, home = self._open_sessions[i]
             grow = int(self.rng.exponential(self.w.session_growth)) + 1
             total = min(cur + grow, int(self.w.lengths.hi))
-            self._open_sessions[i] = (sid, total)
+            self._open_sessions[i] = (sid, total, home)
         else:
             sid = self._next_session
             self._next_session += 1
             total = int(self.w.lengths.sample(self.rng, 1)[0])
-            self._open_sessions.append((sid, total))
-            if len(self._open_sessions) > 512:
-                self._open_sessions.pop(0)
-        r = Request(self._next_rid, now, total, sid)
+            home = self._sample_home()
+            self._open_sessions.append((sid, total, home))
+        r = Request(self._next_rid, now, total, sid, home=home)
         self._next_rid += 1
         self.all_requests.append(r)
         return r
@@ -279,17 +390,33 @@ class PrfaasSimulator:
         reuses the best cache anywhere (abundant-bandwidth regime)."""
         return max(self._wire_profile().s_kv(decision.cached_tokens), 1.0)
 
+    def _match_eligible(self, home: str, name: str) -> bool:
+        """A cluster's cache is reachable from ``home`` when it is the home
+        itself, PrfaaS, or another region with pair links to both possible
+        prefill targets (home and PrfaaS) — a star-only topology cannot
+        ship another region's cache anywhere useful."""
+        if name == home or name == PRFAAS:
+            return True
+        return (self.topology.has_link(name, home)
+                and self.topology.has_link(name, PRFAAS))
+
+    def _prefill_pool(self, cluster: str):
+        return self.prfaas_pool if cluster == PRFAAS \
+            else self.pdp_pools[cluster]
+
     def _route(self, req: Request) -> Tuple[str, float]:
         n_blocks = req.total_len // self.sim.block_tokens
         matches = {name: c.match(req.session, n_blocks)
-                   for name, c in self.kv.clusters.items()}
-        decision = self.router.route(req.total_len, matches,
-                                     self.link.congestion_signal())
+                   for name, c in self.kv.clusters.items()
+                   if self._match_eligible(req.home, name)}
+        decision = self.router.route(
+            req.total_len, matches,
+            self.topology.pair_signal(PRFAAS, req.home), home=req.home)
         req.decision = decision
         incr = max(decision.incremental, 1)
         if decision.target == PRFAAS:
             return PRFAAS, self.model.prfaas_profile.t_prefill(incr)
-        return PD, self.model.pd_profile.t_prefill(incr)
+        return decision.target, self.model.pd_profile.t_prefill(incr)
 
     # ----------------------------------------------------------------- run
     def run(self) -> dict:
@@ -303,15 +430,15 @@ class PrfaasSimulator:
     # ---------------------------------------------------------- tick engine
     def _route_and_submit_tick(self, req: Request, now: float):
         cluster, st = self._route(req)
-        pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
-        pool.submit(req, st)
+        self._prefill_pool(cluster).submit(req, st)
 
     def _submit_request_flows(self, req: Request, cluster: str, now: float,
                               done: float, on_all_done=None):
-        """Submit this request's link flows (main KV + cross-cache copy) and
-        wire their completion into the request's readiness state.
-        ``on_all_done(req, tc)`` fires when the LAST flow drains, at its
-        exact completion time (event engine decode admission)."""
+        """Submit this request's link flows (main KV + cross-cache copy) to
+        the correct pair links and wire their completion into the request's
+        readiness state.  ``on_all_done(req, tc)`` fires when the LAST flow
+        drains, at its exact completion time (event engine decode
+        admission)."""
         req.flows_pending = 0
 
         def on_flow_done(tc: float, _req=req):
@@ -321,16 +448,21 @@ class PrfaasSimulator:
                 on_all_done(_req, tc)
 
         if cluster == PRFAAS:
-            # layer-wise pipelined KV flow: releases linearly while prefill
-            # computes (the fluid limit of the per-layer staircase)
-            self.link.submit(self._prefill_wire_bytes(req), now,
-                             ramp_end=done, on_done=on_flow_done)
+            # layer-wise pipelined KV flow to the request's home region:
+            # releases linearly while prefill computes (the fluid limit of
+            # the per-layer staircase)
+            self.topology.submit(PRFAAS, req.home,
+                                 self._prefill_wire_bytes(req), now,
+                                 ramp_end=done, on_done=on_flow_done)
             req.flows_pending += 1
         if req.decision.cross_cache_transfer and req.decision.cached_tokens:
-            # cached prefix lives in the other cluster: the copy is already
-            # materialized, so it is wire-eligible immediately (eager)
-            self.link.submit(self._cross_cache_bytes(req.decision), now,
-                             ramp_end=now, on_done=on_flow_done)
+            # cached prefix lives in another cluster: the copy is already
+            # materialized, so it is wire-eligible immediately (eager),
+            # charged to the owner<->target pair link
+            self.topology.submit(req.decision.cache_cluster,
+                                 req.decision.target,
+                                 self._cross_cache_bytes(req.decision), now,
+                                 ramp_end=now, on_done=on_flow_done)
             req.flows_pending += 1
         if req.flows_pending == 0:
             req.transfer_done = done      # intra-cluster RDMA: free
@@ -355,17 +487,25 @@ class PrfaasSimulator:
         now = 0.0
         self._inflight: List[Request] = []
         decode_time = w.output_len * w.t_decode
+        t0 = sim.sim_time * sim.warmup_frac
+        egress_snapped = False
         steps = int(sim.sim_time / sim.dt)
         for step in range(steps):
             now = step * sim.dt
+            if not egress_snapped and now >= t0:
+                # warmup ends: egress measured over the same window as
+                # throughput (sent-bytes so far cover [0, now))
+                self._egress_t0 = self.topology.sent_bytes
+                egress_snapped = True
             # process arrivals at the first tick AT or AFTER their exact
             # arrival time, so prefill never starts before the request exists
             while idx < len(trace) and trace[idx].arrival <= now:
                 self._route_and_submit_tick(trace[idx], now)
                 idx += 1
             self.prfaas_pool.tick(now, sim.dt, self._on_prefill_start(PRFAAS))
-            self.pdp_pool.tick(now, sim.dt, self._on_prefill_start(PD))
-            self.link.tick(now, sim.dt)
+            for name, pool in self.pdp_pools.items():
+                pool.tick(now, sim.dt, self._on_prefill_start(name))
+            self.topology.tick(now, sim.dt)
             # prefill+transfer complete -> decode queue (+cache insert)
             still = []
             for req in self._inflight:
@@ -375,17 +515,19 @@ class PrfaasSimulator:
                     cluster = req.decision.target
                     self.kv.clusters[cluster].insert(
                         req.session, req.total_len // sim.block_tokens)
-                    self.decode_pool.submit(req, decode_time)
+                    self.decode_pools[req.home].submit(req, decode_time)
                 else:
                     still.append(req)
             self._inflight = still
-            self.decode_pool.tick(now, sim.dt, self._on_decode_start)
-            self.router.observe_congestion(self.link.congestion_signal())
+            for pool in self.decode_pools.values():
+                pool.tick(now, sim.dt, self._on_decode_start)
+            self.router.observe_congestion(self.topology.aggregate_signal())
             if self.autoscaler is not None:
                 tel = StageTelemetry(
                     prefill_queue=len(self.prfaas_pool.queue)
-                    + len(self.pdp_pool.queue),
-                    decode_queue=len(self.decode_pool.queue))
+                    + sum(len(p.queue) for p in self.pdp_pools.values()),
+                    decode_queue=sum(len(p.queue)
+                                     for p in self.decode_pools.values()))
                 new_sys = self.autoscaler.maybe_rebalance(now, tel)
                 if new_sys is not None:
                     self.pdp_pool.capacity = new_sys.n_p
@@ -397,7 +539,7 @@ class PrfaasSimulator:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     def _wake_link(self, now: float):
-        nxt = self.link.next_event()
+        nxt = self.topology.next_event()
         if not math.isfinite(nxt) or nxt > self.sim.sim_time:
             return
         nxt = max(nxt, now + 1e-9)
@@ -423,7 +565,8 @@ class PrfaasSimulator:
 
     def _maybe_ready(self, req: Request, t: float):
         """Prefill finished and every link flow drained -> decode admission
-        (exact time), inserting the produced KV into the prefix cache."""
+        (exact time) in the home cluster, inserting the produced KV into the
+        target cluster's prefix cache."""
         if req.rid in self._ready_seen:
             return
         if req.flows_pending > 0 or req.prefill_done > t + 1e-9:
@@ -431,7 +574,7 @@ class PrfaasSimulator:
         self._ready_seen.add(req.rid)
         self.kv.clusters[req.decision.target].insert(
             req.session, req.total_len // self.sim.block_tokens)
-        if self.decode_pool.submit(req, t):
+        if self.decode_pools[req.home].submit(req, t):
             self._start_decode(req, t)
 
     def _start_decode(self, req: Request, now: float):
@@ -442,23 +585,23 @@ class PrfaasSimulator:
 
     def _ev_arrival(self, req: Request, now: float):
         cluster, st = self._route(req)
-        pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
-        if pool.submit((req, st), now):
+        if self._prefill_pool(cluster).submit((req, st), now):
             self._start_prefill(req, st, cluster, now)
 
     def _ev_control(self, now: float):
-        self.router.observe_congestion(self.link.congestion_signal())
+        self.router.observe_congestion(self.topology.aggregate_signal())
         if self.autoscaler is not None:
             tel = StageTelemetry(
                 prefill_queue=len(self.prfaas_pool.queue)
-                + len(self.pdp_pool.queue),
-                decode_queue=len(self.decode_pool.queue),
+                + sum(len(p.queue) for p in self.pdp_pools.values()),
+                decode_queue=sum(len(p.queue)
+                                 for p in self.decode_pools.values()),
                 prefill_util=self.pdp_pool.utilization(max(now, 1e-9)),
                 decode_util=self.decode_pool.utilization(max(now, 1e-9)))
             new_sys = self.autoscaler.maybe_rebalance(now, tel)
             if new_sys is not None:
                 for req, st in self.pdp_pool.set_capacity(new_sys.n_p, now):
-                    self._start_prefill(req, st, PD, now)
+                    self._start_prefill(req, st, self._pd_names[0], now)
                 for req in self.decode_pool.set_capacity(
                         new_sys.n_d * self.w.bs_max, now):
                     self._start_decode(req, now)
@@ -469,8 +612,12 @@ class PrfaasSimulator:
     def _run_event(self) -> dict:
         sim, w = self.sim, self.w
         self.prfaas_pool = EventPool(self.system.n_prfaas)
-        self.pdp_pool = EventPool(self.system.n_p)
-        self.decode_pool = EventPool(self.system.n_d * w.bs_max)
+        self.pdp_pools = {
+            name: EventPool(n_p_c)
+            for name, (n_p_c, _) in zip(self._pd_names, self._per_cluster)}
+        self.decode_pools = {
+            name: EventPool(n_d_c * w.bs_max)
+            for name, (_, n_d_c) in zip(self._pd_names, self._per_cluster)}
         self._decode_time = w.output_len * w.t_decode
         self._heap: List[tuple] = []
         self._seq = itertools.count()
@@ -478,34 +625,36 @@ class PrfaasSimulator:
         self._ready_seen: set = set()
         for req in self._generate_arrivals():
             self._push(req.arrival, _EV_ARRIVAL, req)
+        self._push(sim.sim_time * sim.warmup_frac, _EV_WARMUP)
         if sim.control_dt > 0:
             self._push(sim.control_dt, _EV_CONTROL)
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
             if t > sim.sim_time:
                 break
-            # solve the link exactly up to this event; flow completions fire
-            # at their exact times and may admit requests to decode
-            self.link.advance(t)
+            # solve every link exactly up to this event; flow completions
+            # fire at their exact times and may admit requests to decode
+            self.topology.advance(t)
             if kind == _EV_LINK and t >= self._link_wake - 1e-9:
                 self._link_wake = math.inf
             if kind == _EV_ARRIVAL:
                 self._ev_arrival(payload, t)
             elif kind == _EV_PREFILL_DONE:
                 req, cluster = payload
-                pool = self.prfaas_pool if cluster == PRFAAS else self.pdp_pool
-                nxt = pool.release(t)
+                nxt = self._prefill_pool(cluster).release(t)
                 if nxt is not None:
                     self._start_prefill(nxt[0], nxt[1], cluster, t)
                 self._maybe_ready(req, t)
             elif kind == _EV_DECODE_DONE:
-                nxt = self.decode_pool.release(t)
+                nxt = self.decode_pools[payload.home].release(t)
                 if nxt is not None:
                     self._start_decode(nxt, t)
             elif kind == _EV_CONTROL:
                 self._ev_control(t)
+            elif kind == _EV_WARMUP:
+                self._egress_t0 = self.topology.sent_bytes
             self._wake_link(t)
-        self.link.advance(sim.sim_time)
+        self.topology.advance(sim.sim_time)
         return self.metrics()
 
     # -------------------------------------------------------------- metrics
@@ -513,26 +662,58 @@ class PrfaasSimulator:
         sim = self.sim
         horizon = sim.sim_time
         t0 = horizon * sim.warmup_frac
-        done = [r for r in self.all_requests if r.done >= 0 and r.arrival >= t0]
+        # only requests whose decode actually finishes inside the horizon
+        # count as completions — both engines stamp ``done`` when decode
+        # STARTS (with its future end time), so an unfiltered list inflates
+        # throughput near saturation with work the horizon never absorbed
+        done = [r for r in self.all_requests
+                if 0 <= r.done <= horizon and r.arrival >= t0]
         ttft = np.array([r.first_token - r.arrival for r in done
                          if r.first_token > 0])
-        thr = len(done) / max(1e-9, horizon - t0)
+        window = max(1e-9, horizon - t0)
+        thr = len(done) / window
         offload = sum(1 for r in self.all_requests
                       if r.decision and r.decision.target == PRFAAS)
         routed = sum(1 for r in self.all_requests if r.decision)
+
+        def _pct(a, q):
+            return float(np.percentile(a, q)) if len(a) else float("nan")
+
+        per_cluster = {}
+        for name in self._pd_names:
+            c_done = [r for r in done if r.home == name]
+            c_ttft = np.array([r.first_token - r.arrival for r in c_done
+                               if r.first_token > 0])
+            per_cluster[name] = {
+                "completed": len(c_done),
+                "throughput_rps": len(c_done) / window,
+                "ttft_mean": float(c_ttft.mean()) if len(c_ttft)
+                else float("nan"),
+                "ttft_p90": _pct(c_ttft, 90),
+                "prefill_queue": len(self.pdp_pools[name].queue),
+                "decode_queue": len(self.decode_pools[name].queue),
+            }
         return {
             "throughput_rps": thr,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
-            "ttft_p50": float(np.percentile(ttft, 50)) if len(ttft) else float("nan"),
-            "ttft_p90": float(np.percentile(ttft, 90)) if len(ttft) else float("nan"),
-            "ttft_p99": float(np.percentile(ttft, 99)) if len(ttft) else float("nan"),
+            "ttft_p50": _pct(ttft, 50),
+            "ttft_p90": _pct(ttft, 90),
+            "ttft_p99": _pct(ttft, 99),
             "completed": len(done),
             "offload_frac": offload / max(1, routed),
-            "egress_gbps": self.link.sent_bytes * 8 / 1e9 / max(1e-9, horizon),
-            "link_util": self.link.util_ewma,
+            # same measurement window as throughput: bytes sent after the
+            # warmup snapshot, averaged over horizon - t0
+            "egress_gbps": (self.topology.sent_bytes - self._egress_t0)
+            * 8 / 1e9 / window,
+            "link_util": max(l.util_ewma
+                             for l in self.topology.links.values()),
             "router_adjustments": self.router.adjustments,
-            "prefill_queue": len(self.prfaas_pool.queue) + len(self.pdp_pool.queue),
-            "decode_queue": len(self.decode_pool.queue),
+            "prefill_queue": len(self.prfaas_pool.queue)
+            + sum(len(p.queue) for p in self.pdp_pools.values()),
+            "decode_queue": sum(len(p.queue)
+                                for p in self.decode_pools.values()),
             "cache": self.kv.stats(),
             "threshold": self.router.threshold,
+            "clusters": per_cluster,
+            "links": self.topology.pair_stats(),
         }

@@ -32,14 +32,47 @@ def egress_bandwidth(n_gpus: int, gpus_per_instance: int, profile: Profile,
 @dataclass(frozen=True)
 class SystemConfig:
     n_prfaas: int                 # PrfaaS prefill instances
-    n_p: int                      # PD prefill instances
-    n_d: int                      # PD decode instances
+    n_p: int                      # PD prefill instances (total over clusters)
+    n_d: int                      # PD decode instances (total over clusters)
     b_out: float                  # PrfaaS egress bandwidth (bytes/s)
     threshold: float              # routing threshold t (tokens); inf => no offload
     # beyond-paper: int8 KV quantization on the inter-DC wire (KIVI/CacheGen
     # family, paper §5) — halves S_kv on the link, doubling the bandwidth-
     # bound Θ_prfaas ceiling. 1.0 = off (paper-faithful).
     kv_wire_compression: float = 1.0
+    # multi-cluster deployments: per-PD-cluster instance counts (must sum to
+    # n_p / n_d).  None = one PD cluster holding everything (paper baseline).
+    n_p_clusters: Optional[tuple] = None
+    n_d_clusters: Optional[tuple] = None
+
+    def __post_init__(self):
+        for name, per, total in (("n_p_clusters", self.n_p_clusters, self.n_p),
+                                 ("n_d_clusters", self.n_d_clusters, self.n_d)):
+            if per is not None and sum(per) != total:
+                raise ValueError(f"{name} {per} must sum to {total}")
+        if (self.n_p_clusters is None) != (self.n_d_clusters is None):
+            raise ValueError("set both n_p_clusters and n_d_clusters or neither")
+        if (self.n_p_clusters is not None
+                and len(self.n_p_clusters) != len(self.n_d_clusters)):
+            raise ValueError("per-cluster tuples must have equal length")
+
+    @property
+    def num_pd_clusters(self) -> int:
+        return len(self.n_p_clusters) if self.n_p_clusters is not None else 1
+
+    def per_cluster(self, k: Optional[int] = None):
+        """(n_p, n_d) per PD cluster.  Without explicit tuples the totals are
+        split evenly over ``k`` clusters, remainder to earlier ones."""
+        if self.n_p_clusters is not None:
+            return list(zip(self.n_p_clusters, self.n_d_clusters))
+        k = 1 if k is None else k
+        return list(zip(split_even(self.n_p, k), split_even(self.n_d, k)))
+
+
+def split_even(total: int, k: int):
+    """Deterministic even split of ``total`` over ``k`` buckets."""
+    base, rem = divmod(total, k)
+    return [base + (1 if i < rem else 0) for i in range(k)]
 
 
 @dataclass
@@ -81,15 +114,45 @@ class ThroughputModel:
         return sc.n_d * w.bs_max / (w.t_decode * w.output_len)
 
     # -- Eq. 6 ----------------------------------------------------------------
-    def lambda_max(self, sc: SystemConfig) -> float:
+    def lambda_max(self, sc: SystemConfig,
+                   pd_shares: Optional[list] = None) -> float:
+        """Eq. 6, generalized to per-PD-cluster instance counts: with
+        regional traffic shares s_c, cluster c must sustain s_c of the
+        global rate with its own N_p,c / N_d,c, so each per-cluster stage
+        throughput is divided by its share.  The single-cluster case
+        (``n_p_clusters is None``) is the paper's original min().
+
+        (A request short-circuits to 0 via theta_pdp == 0 when n_p == 0 and
+        p < 1 — the old explicit ``return 0.0`` branch was unreachable.)"""
         p = self.workload.lengths.p_gt(sc.threshold) if sc.n_prfaas else 0.0
-        terms = [self.theta_pdd(sc)]
+        terms = []
         if p > 0:
             terms.append(self.theta_prfaas(sc) / p)
-        if p < 1:
-            terms.append(self.theta_pdp(sc) / (1.0 - p))
-        elif sc.n_p == 0 and p < 1:
-            return 0.0
+        if sc.n_p_clusters is None:
+            terms.append(self.theta_pdd(sc))
+            if p < 1:
+                terms.append(self.theta_pdp(sc) / (1.0 - p))
+        else:
+            k = sc.num_pd_clusters
+            if pd_shares is None:
+                shares = [1.0 / k] * k
+            else:
+                if len(pd_shares) != k or min(pd_shares) < 0 \
+                        or sum(pd_shares) <= 0:
+                    raise ValueError(f"pd_shares {pd_shares} invalid for "
+                                     f"{k} PD clusters")
+                shares = [s / sum(pd_shares) for s in pd_shares]
+            pdp_unit = self.theta_pdp(  # per-instance rates at this threshold
+                SystemConfig(sc.n_prfaas, 1, 1, sc.b_out, sc.threshold,
+                             kv_wire_compression=sc.kv_wire_compression))
+            pdd_unit = self.theta_pdd(
+                SystemConfig(sc.n_prfaas, 1, 1, sc.b_out, sc.threshold))
+            for (n_p_c, n_d_c), s in zip(sc.per_cluster(), shares):
+                if s <= 0:
+                    continue
+                terms.append(n_d_c * pdd_unit / s)
+                if p < 1:
+                    terms.append(n_p_c * pdp_unit / ((1.0 - p) * s))
         return min(terms)
 
     def egress_load(self, sc: SystemConfig, rate: Optional[float] = None) -> float:

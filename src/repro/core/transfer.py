@@ -258,17 +258,50 @@ class Link:
             self._recompute_segment()
         return self._seg_next
 
+    def _fire_completions(self):
+        """Structural boundary at ``now``: invalidate the segment and fire
+        on_done for every fully drained flow at the exact current time."""
+        self._seg_valid = False
+        done = [f for f in self.flows.values()
+                if f.sent >= f.total_bytes - _EPS_B]
+        for f in done:
+            f.done_time = self.now
+            del self.flows[f.flow_id]
+        for f in done:
+            if f.on_done:
+                f.on_done(self.now)
+
+    def _process_due_boundary(self):
+        """A structural boundary lies within ``_EPS_T`` of the clock — a
+        zero-length segment no positive-dt step can cross.  Snap the
+        sub-epsilon residual backlogs the fair rates would drain in that
+        instant (<= rate x eps bytes, by construction of the drain time)
+        and fire completions.  Without this, a drain time landing inside
+        the time epsilon livelocks the solver: ``next_event`` re-announces
+        the same boundary ~1 ns ahead forever while the residual bytes
+        never move."""
+        for fid, r in self._seg_rates.items():
+            f = self.flows.get(fid)
+            if f is None:
+                continue
+            backlog = f.eligible(self.now) - f.sent
+            if 0.0 < backlog <= max(r, 1.0) * (2.0 * _EPS_T):
+                take = min(backlog, f.total_bytes - f.sent)
+                f.sent += take
+                self.sent_bytes += take
+        self._fire_completions()
+
     def advance(self, to: float):
         """Exactly advance the fluid solution from ``self.now`` to ``to``,
         firing flow on_done callbacks at their exact completion times."""
-        if to <= self.now + _EPS_T:
-            return
         if not self.flows and self.fluctuation <= 0:
             # idle fast path (telemetry decays toward zero)
+            if to <= self.now + _EPS_T:
+                return
             self._telemetry_step(to - self.now, 0.0, congested=False)
             self.now = to
             return
-        while self.now < to - _EPS_T:
+        while True:
             if self.fluctuation > 0:
                 boundary = self._fluct_t + self.fluct_dt
                 if boundary <= self.now + _EPS_T:
@@ -278,7 +311,15 @@ class Link:
                     continue
             if not self._seg_valid:
                 self._recompute_segment()
-            t_next = min(to, max(self._seg_next, self.now + _EPS_T))
+            if self._seg_next <= self.now + _EPS_T:
+                # zero-length segment: resolve it NOW (each pass strictly
+                # removes its cause — drained backlog, expired ramp, or
+                # started flow — so this cannot cycle)
+                self._process_due_boundary()
+                continue
+            if to <= self.now + _EPS_T:
+                break
+            t_next = min(to, self._seg_next)
             dt = t_next - self.now
             if self._seg_rates:
                 cap = self.current_capacity()
@@ -297,15 +338,7 @@ class Link:
             if t_next < self._seg_next - _EPS_T:
                 break                 # mid-segment: solution still valid
             # structural boundary: completions fire exactly here
-            self._seg_valid = False
-            done = [f for f in self.flows.values()
-                    if f.sent >= f.total_bytes - _EPS_B]
-            for f in done:
-                f.done_time = self.now
-                del self.flows[f.flow_id]
-            for f in done:
-                if f.on_done:
-                    f.on_done(self.now)
+            self._fire_completions()
         self.now = max(self.now, to)
         self._queue_stale = True
 
@@ -338,6 +371,158 @@ class Link:
         return {"util": self.util_ewma, "queue_bytes": self.queue_bytes,
                 "drops": self._drops_w, "drops_total": self.drops_total,
                 "inflight": len(self.flows)}
+
+
+class LinkTopology:
+    """N named clusters with one fair-share ``Link`` per connected unordered
+    cluster pair (paper deployment story: one compute-dense PrfaaS cluster
+    feeding several regional PD clusters over loosely coupled Ethernet).
+
+    The topology is a thin routing matrix over independent ``Link`` solvers:
+    each pair link keeps its own capacity, OU fluctuation process, and
+    telemetry, so a congested PrfaaS->region-A link never slows region B.
+    Pairs are unordered — a pair link carries both prefill KV egress and
+    reverse cross-cache copies, exactly like the original single ``Link``
+    (which makes a two-cluster topology bit-for-bit identical to it).
+
+    ``advance``/``tick``/``next_event`` fan out to every member link so both
+    simulator engines drive all links with one call; per-destination
+    aggregation (``dest_signal``) gives the router the regional congestion
+    view, while ``aggregate_signal`` preserves the legacy single-link
+    telemetry shape for global control loops.
+    """
+
+    def __init__(self, clusters: List[str]):
+        self.clusters = list(clusters)
+        self._links: Dict[tuple, Link] = {}
+
+    @staticmethod
+    def _key(a: str, b: str) -> tuple:
+        if a == b:
+            raise ValueError(f"no self-link: {a!r}")
+        return (a, b) if a < b else (b, a)
+
+    @classmethod
+    def build(cls, clusters: List[str], pairs: List[tuple],
+              gbps, fluctuation=0.0, seed: int = 0,
+              fluct_dt: float = 0.25) -> "LinkTopology":
+        """Construct links for ``pairs``.  ``gbps``/``fluctuation`` may be
+        scalars (shared) or per-pair sequences aligned with ``pairs``.  Link
+        i is seeded ``seed + 7919*i`` so pair 0 of a single-pair topology
+        reproduces a bare ``Link(seed=seed)`` exactly and additional links
+        get independent fluctuation streams."""
+        topo = cls(clusters)
+        n = len(pairs)
+        gbps_l = list(gbps) if hasattr(gbps, "__len__") else [gbps] * n
+        fluct_l = (list(fluctuation) if hasattr(fluctuation, "__len__")
+                   else [fluctuation] * n)
+        if len(gbps_l) != n or len(fluct_l) != n:
+            raise ValueError("per-pair gbps/fluctuation must match pairs")
+        for i, (a, b) in enumerate(pairs):
+            topo.add_link(a, b, Link(gbps_l[i] * 1e9,
+                                     fluctuation=fluct_l[i],
+                                     seed=seed + 7919 * i,
+                                     fluct_dt=fluct_dt))
+        return topo
+
+    # ------------------------------------------------------------- wiring
+    def add_link(self, a: str, b: str, link: Link):
+        for c in (a, b):
+            if c not in self.clusters:
+                raise ValueError(f"unknown cluster {c!r}")
+        self._links[self._key(a, b)] = link
+
+    def link(self, a: str, b: str) -> Link:
+        return self._links[self._key(a, b)]
+
+    def has_link(self, a: str, b: str) -> bool:
+        return a != b and self._key(a, b) in self._links
+
+    @property
+    def links(self) -> Dict[tuple, Link]:
+        return self._links
+
+    # ----------------------------------------------------------- transfer
+    def submit(self, a: str, b: str, total_bytes: float, now: float,
+               **kw) -> Flow:
+        """Charge a KV flow to the (a, b) pair link."""
+        return self.link(a, b).submit(total_bytes, now, **kw)
+
+    def advance(self, to: float):
+        for link in self._links.values():
+            link.advance(to)
+
+    def tick(self, now: float, dt: float):
+        for link in self._links.values():
+            link.tick(now, dt)
+
+    def next_event(self) -> float:
+        return min((l.next_event() for l in self._links.values()),
+                   default=math.inf)
+
+    def run_until_idle(self, max_time: float = math.inf) -> float:
+        """Drain all links exactly; returns the time the last one idled."""
+        t = 0.0
+        while True:
+            nxt = self.next_event()
+            if not math.isfinite(nxt) or nxt > max_time:
+                return t
+            self.advance(nxt)
+            t = nxt
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def sent_bytes(self) -> float:
+        return sum(l.sent_bytes for l in self._links.values())
+
+    def pair_signal(self, a: str, b: str) -> dict:
+        return self.link(a, b).congestion_signal()
+
+    def dest_signal(self, dst: str) -> dict:
+        """Aggregate congestion toward ``dst`` over every incident link:
+        worst-case util (one saturated ingress stalls that region), summed
+        queues/drops/inflight."""
+        incident = [l for (a, b), l in self._links.items() if dst in (a, b)]
+        return self._aggregate(incident)
+
+    def aggregate_signal(self) -> dict:
+        """Topology-wide signal with the single-``Link`` telemetry shape
+        (identical to that link's signal for a one-pair topology)."""
+        return self._aggregate(list(self._links.values()))
+
+    @staticmethod
+    def _aggregate(links: List[Link]) -> dict:
+        sigs = [l.congestion_signal() for l in links]
+        if not sigs:
+            return {"util": 0.0, "queue_bytes": 0.0, "drops": 0.0,
+                    "drops_total": 0.0, "inflight": 0}
+        return {"util": max(s["util"] for s in sigs),
+                "queue_bytes": sum(s["queue_bytes"] for s in sigs),
+                "drops": sum(s["drops"] for s in sigs),
+                "drops_total": sum(s["drops_total"] for s in sigs),
+                "inflight": sum(s["inflight"] for s in sigs)}
+
+    def pair_stats(self) -> Dict[str, dict]:
+        """Per-pair byte/utilization accounting for metrics and tests."""
+        return {f"{a}|{b}": {"sent_bytes": l.sent_bytes,
+                             "capacity_gbps": l.capacity_bps / 1e9,
+                             "util_ewma": l.util_ewma,
+                             "busy_time": l.busy_time,
+                             "drops_total": l.drops_total,
+                             "inflight": len(l.flows)}
+                for (a, b), l in self._links.items()}
+
+
+def star_pairs(hub: str, leaves: List[str],
+               mesh: bool = False) -> List[tuple]:
+    """Hub-and-spoke pair list (PrfaaS at the hub, one spoke per PD
+    cluster), optionally adding the full leaf-to-leaf mesh so regional
+    caches can cross-transfer without transiting the hub."""
+    pairs = [(hub, leaf) for leaf in leaves]
+    if mesh:
+        pairs += [(a, b) for i, a in enumerate(leaves)
+                  for b in leaves[i + 1:]]
+    return pairs
 
 
 def layerwise_release(prefill_start: float, prefill_time: float,

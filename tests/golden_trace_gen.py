@@ -1,0 +1,60 @@
+"""Regenerate tests/golden_twocluster_trace.json.
+
+The golden trace pins the two-cluster simulator's per-request trajectories
+(raw event times, which are independent of how ``metrics()`` post-processes
+them) so the multi-cluster ``LinkTopology`` refactor can be verified to
+reproduce the single-``Link`` code path bit-for-bit on the same seed.
+
+    PYTHONPATH=src python tests/golden_trace_gen.py
+"""
+import json
+import os
+
+from repro.core import (PrfaasSimulator, SimConfig, ThroughputModel,
+                        Workload, paper_h20_profile, paper_h200_profile)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__),
+                           "golden_twocluster_trace.json")
+N_REQS = 48
+
+
+def scenario():
+    w = Workload(session_prob=0.3, burst_factor=1.5)
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, lam, _ = tm.grid_search(4, 8, 100e9 / 8)
+    return tm, sc, w, lam
+
+
+def run_engine(engine: str) -> dict:
+    tm, sc, w, lam = scenario()
+    sim = PrfaasSimulator(tm, sc, w, SimConfig(
+        arrival_rate=0.8 * lam, sim_time=120.0, dt=0.02, seed=42,
+        link_gbps=25.0, link_fluctuation=0.15, engine=engine))
+    sim.run()
+    reqs = []
+    for r in sim.all_requests[:N_REQS]:
+        reqs.append({
+            "rid": r.rid, "arrival": r.arrival, "total_len": r.total_len,
+            "session": r.session, "target": r.decision.target,
+            "cached": r.decision.cached_tokens,
+            "cross": r.decision.cross_cache_transfer,
+            "prefill_start": r.prefill_start, "prefill_done": r.prefill_done,
+            "transfer_done": r.transfer_done, "decode_start": r.decode_start,
+            "done": r.done,
+        })
+    return {"n_requests": len(sim.all_requests),
+            "sent_bytes": sim.link.sent_bytes, "requests": reqs}
+
+
+def main():
+    out = {engine: run_engine(engine) for engine in ("event", "tick")}
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}: "
+          + ", ".join(f"{e}: n={v['n_requests']} sent={v['sent_bytes']:.0f}B"
+                      for e, v in out.items()))
+
+
+if __name__ == "__main__":
+    main()
