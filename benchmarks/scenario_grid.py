@@ -9,6 +9,10 @@ exact event engine:
   * topology          — 1 vs 3 regional PD clusters (star + PD mesh, skewed
                         regional traffic shares, per-region link capacities)
 
+Multi-cluster points run the regionalized control plane: per-home routing
+thresholds (reported per point) and session roaming (``ROAM_PROB``), so
+the PD<->PD mesh links carry cross-region cache copies.
+
 Every point runs the SAME offered load (a fixed fraction of the paper
 deployment's modeled two-cluster capacity) so degradation is attributable
 to the stressor, not to re-sizing.  Emits ``BENCH_scenario_grid.json``
@@ -35,6 +39,7 @@ SHARES_3 = (0.6, 0.3, 0.1)           # skewed regional traffic
 # push a pair link into congestion, exercising the short-term routing loop
 LINK_GBPS_1 = 20.0
 LINK_GBPS_3 = (14.0, 8.0, 5.0)       # thinner links to smaller regions
+ROAM_PROB = 0.15                     # multi-cluster: sessions switch region
 
 
 def _system(tm: ThroughputModel, k: int):
@@ -59,7 +64,8 @@ def run_point(bf: float, sigma: float, fluct: float, k: int,
         pd_clusters=k,
         pd_shares=SHARES_3[:k] if k > 1 else None,
         pd_link_gbps=LINK_GBPS_3[:k] if k > 1 else None,
-        pd_mesh_gbps=10.0 if k > 1 else 0.0)
+        pd_mesh_gbps=10.0 if k > 1 else 0.0,
+        roam_prob=ROAM_PROB if k > 1 else 0.0)
     t0 = time.time()
     m = PrfaasSimulator(tm, sc, w, cfg).run()
 
@@ -76,6 +82,7 @@ def run_point(bf: float, sigma: float, fluct: float, k: int,
         "ttft_p90_s": _r(m["ttft_p90"]),
         "egress_gbps": round(m["egress_gbps"], 4),
         "offload_frac": round(m["offload_frac"], 4),
+        "thresholds": {name: _r(t) for name, t in m["thresholds"].items()},
         "clusters": {name: {kk: _r(vv) for kk, vv in c.items()}
                      for name, c in m["clusters"].items()},
         "links": {pair: round(s["sent_bytes"] / 1e9, 3)

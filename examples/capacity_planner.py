@@ -6,7 +6,9 @@ Sweeps PrfaaS cluster size and link bandwidth, reports achievable req/s,
 optimal threshold, and egress demand; validates the chosen point under
 bursty traffic with the discrete-event simulator; then splits the PD fleet
 into three regional clusters (skewed traffic shares, thinner links to the
-smaller regions) and re-validates over the multi-cluster ``LinkTopology``.
+smaller regions) and re-validates over the multi-cluster ``LinkTopology``
+with the regionalized control plane on: per-home routing thresholds,
+per-region autoscaling, and session roaming over the PD<->PD mesh.
 
     PYTHONPATH=src python examples/capacity_planner.py
 """
@@ -79,14 +81,31 @@ print(f"  Np/Nd per region {sc3.n_p_clusters}/{sc3.n_d_clusters}; "
 sim3 = PrfaasSimulator(tm, sc3, wb, SimConfig(
     arrival_rate=0.85 * lam3, sim_time=600, dt=0.05, seed=0,
     link_fluctuation=0.2, pd_clusters=3, pd_shares=shares,
-    pd_link_gbps=region_gbps, pd_mesh_gbps=10.0))
+    pd_link_gbps=region_gbps, pd_mesh_gbps=10.0,
+    autoscale=True, roam_prob=0.1))       # regionalized control plane ON
 m3 = sim3.run()
 print(f"  sustained {m3['throughput_rps']:.2f} req/s, "
       f"TTFT p90 {m3['ttft_p90']:.2f}s, egress {m3['egress_gbps']:.1f} Gbps")
 for name, c in m3["clusters"].items():
     print(f"    {name}: {c['throughput_rps']:.2f} req/s, "
-          f"TTFT p90 {c['ttft_p90']:.2f}s")
+          f"TTFT p90 {c['ttft_p90']:.2f}s, t {c['threshold']/1000:.1f}K, "
+          f"cache-hit {c['cache_hit_frac']*100:.0f}%, "
+          f"P<->D conversions {c['conversions']}")
 for pair, s in m3["links"].items():
     if s["sent_bytes"]:
-        print(f"    link {pair}: {s['sent_bytes']*8/1e9/600:.1f} Gbps avg "
+        kind = "mesh" if "prfaas" not in pair else "star"
+        print(f"    {kind} link {pair}: "
+              f"{s['sent_bytes']*8/1e9/600:.2f} Gbps avg "
               f"of {s['capacity_gbps']:.0f} Gbps")
+# planner-side check at the state the sim actually converged to: the
+# autoscalers' final per-region (n_p, n_d) plus the per-home thresholds
+names = sorted(m3["thresholds"])
+n_p_f = tuple(sim3.autoscalers[n].system.n_p for n in names)
+n_d_f = tuple(sim3.autoscalers[n].system.n_d for n in names)
+sc3_final = SystemConfig(sc_r.n_prfaas, sum(n_p_f), sum(n_d_f), sc_r.b_out,
+                         sc_r.threshold,
+                         n_p_clusters=n_p_f, n_d_clusters=n_d_f)
+lam3_t = tm.lambda_max(sc3_final, pd_shares=list(shares),
+                       thresholds=[m3["thresholds"][n] for n in names])
+print(f"  modeled capacity at the converged allocation "
+      f"{n_p_f}/{n_d_f} + per-home thresholds: {lam3_t:.2f} req/s")

@@ -21,7 +21,12 @@ reproduces the original decision table exactly.
 
 The threshold t is re-derived from the live profile whenever the congestion
 monitor triggers (egress utilization / queue depth), which is the paper's
-"short-term routing adjustment".
+"short-term routing adjustment".  The threshold is a *per-home vector*:
+``observe_congestion(signal, home=...)`` adjusts only that home cluster's t
+from its own regional congestion signal (``LinkTopology.dest_signal``), so
+a congested region raises its offload bar alone while quiet regions keep
+routing normally.  Calling without ``home`` keeps the legacy single global
+threshold (two-cluster deployments, direct Router use).
 """
 from __future__ import annotations
 
@@ -75,32 +80,62 @@ class Router:
         self.cfg = RouterConfig() if cfg is None else cfg
         self.threshold = system.threshold
         self.base_threshold = system.threshold
+        # per-home threshold vector (short-term loop, regionalized): a home
+        # without an entry falls back to the global ``threshold`` above
+        self._home_t: Dict[str, float] = {}
+        self._home_base: Dict[str, float] = {}
         self.adjustments = 0
         self.decisions = {PRFAAS: 0, PD: 0}
         self.cross_transfers = 0
 
     # ----------------------------------------------------- congestion loop
-    def observe_congestion(self, signal: dict):
+    def threshold_for(self, home: str) -> float:
+        """Current routing threshold for requests originating at ``home``."""
+        return self._home_t.get(home, self.threshold)
+
+    @property
+    def thresholds(self) -> Dict[str, float]:
+        """Per-home threshold vector (homes seen by the congestion loop)."""
+        return dict(self._home_t)
+
+    def observe_congestion(self, signal: dict, home: Optional[str] = None):
         """Short-term adjustment: raise t near the bandwidth ceiling (longer
-        requests => lower per-request KV throughput), relax it when clear."""
+        requests => lower per-request KV throughput), relax it when clear.
+        With ``home`` given, only that home cluster's threshold moves — the
+        signal should then be that region's own congestion view."""
         congested = (signal.get("util", 0.0) > self.cfg.util_high
                      or signal.get("queue_bytes", 0.0) > self.cfg.queue_high_bytes)
+        if home is None:
+            t, base = self.threshold, self.base_threshold
+        else:
+            t = self._home_t.get(home, self.threshold)
+            base = self._home_base.get(home, self.base_threshold)
         if congested:
-            self.threshold = min(self.threshold * self.cfg.threshold_boost,
-                                 self.model.workload.lengths.hi)
+            t = min(t * self.cfg.threshold_boost,
+                    self.model.workload.lengths.hi)
             self.adjustments += 1
-        elif self.threshold > self.base_threshold:
-            self.threshold = max(self.base_threshold,
-                                 self.threshold / self.cfg.threshold_boost)
+        elif t > base:
+            t = max(base, t / self.cfg.threshold_boost)
+        if home is None:
+            self.threshold = t
+        else:
+            self._home_t[home] = t
 
-    def reoptimize(self, n_prfaas: int, n_p: int, n_d: int, b_out: float):
-        """Re-derive t for new instance counts (called by the autoscaler)."""
+    def reoptimize(self, n_prfaas: int, n_p: int, n_d: int, b_out: float,
+                   home: Optional[str] = None):
+        """Re-derive t for new instance counts (called by the autoscaler).
+        With ``home`` given (per-region autoscaling), only that home's base
+        threshold is re-anchored."""
         best, _, _ = self.model.grid_search(n_prfaas, n_p + n_d, b_out)
         if best is not None:
             # keep the searched split only for t; N allocation is the
             # autoscaler's decision
-            self.base_threshold = best.threshold
-            self.threshold = best.threshold
+            if home is None:
+                self.base_threshold = best.threshold
+                self.threshold = best.threshold
+            else:
+                self._home_base[home] = best.threshold
+                self._home_t[home] = best.threshold
 
     # --------------------------------------------------------------- route
     def route(self, l_total: int, matches: Dict[str, int],
@@ -114,7 +149,7 @@ class Router:
         l_prfaas = matches.get(PRFAAS, 0)
         signal = bandwidth_signal or {}
         abundant = signal.get("util", 0.0) < self.cfg.util_abundant
-        t = self.threshold
+        t = self.threshold_for(home)
 
         if abundant:
             # compute is scarce: use the best cache across all clusters

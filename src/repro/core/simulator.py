@@ -18,6 +18,37 @@ charging the correct pair link.  ``pd_clusters=1`` (the default) is the
 paper's two-cluster deployment and reproduces the original single-``Link``
 simulator bit-for-bit on the same seed.
 
+Regionalized control plane
+--------------------------
+Both control loops react to *regional* state rather than one global
+signal:
+
+  * short-term (router): every control epoch each home cluster observes
+    its OWN aggregated congestion view (``LinkTopology.dest_signal``) and
+    adjusts a per-home routing threshold — a congested region raises its
+    offload bar alone while quiet regions keep routing normally.
+  * long-term (autoscaler): each PD cluster runs its own ``Autoscaler``
+    over its region-local (N_p,c, N_d,c), converting P<->D roles from
+    per-region queue depths, pool utilizations, and the region's prefix
+    cache-hit token fraction (``SimPrefixCache`` telemetry via routing
+    decisions) — cached tokens cost no prefill compute, so hot agentic
+    regions shed prefill capacity sooner.  Conversions resize only that
+    region's pools and re-anchor only that home's threshold.
+
+Session roaming (``SimConfig.roam_prob``)
+-----------------------------------------
+With probability ``roam_prob`` a continuing session re-arrives at a
+DIFFERENT home region (sampled from the other clusters' traffic shares);
+the session's cached prefix stays where it was produced, so the router's
+best-cache-anywhere regime triggers a cross-region copy charged to the
+correct PD<->PD mesh pair link (``pd_mesh_gbps``) — or falls back to a
+cold prefill when no mesh link exists.  ``roam_prob=0`` (default) keeps
+sessions pinned and the RNG stream identical to the pre-roaming
+simulator.  Live sessions are tracked in an explicit bounded window
+(``SimConfig.max_open_sessions``): overflowing sessions are evicted
+oldest-first and counted (``metrics()["session_evictions"]``), never
+silently dropped.
+
 Event model (``SimConfig(engine="event")``, the default)
 --------------------------------------------------------
 A single priority-queue loop over exact event times — no fixed dt:
@@ -212,6 +243,9 @@ class SimConfig:
     pd_link_gbps: Optional[Tuple[float, ...]] = None  # per-region star links
     pd_link_fluct: Optional[Tuple[float, ...]] = None
     pd_mesh_gbps: float = 0.0           # PD<->PD links (0 = star only)
+    # -- regionalized control plane -----------------------------------------
+    roam_prob: float = 0.0              # P(continuing session switches home)
+    max_open_sessions: int = 512        # live-session window (explicit evict)
 
 
 # event kinds, ordered so ties process deterministically
@@ -233,9 +267,10 @@ class PrfaasSimulator:
         k = sim.pd_clusters
         if k < 1:
             raise ValueError("pd_clusters must be >= 1")
-        if sim.autoscale and k > 1:
-            raise ValueError("autoscale is only supported for a single PD "
-                             "cluster (per-region autoscaling is future work)")
+        if not 0.0 <= sim.roam_prob <= 1.0:
+            raise ValueError(f"roam_prob {sim.roam_prob} not in [0, 1]")
+        if sim.max_open_sessions < 1:
+            raise ValueError("max_open_sessions must be >= 1")
         self._pd_names = [PD] if k == 1 else [f"pd{i}" for i in range(k)]
         shares = sim.pd_shares if sim.pd_shares is not None \
             else tuple([1.0 / k] * k)
@@ -265,15 +300,37 @@ class PrfaasSimulator:
         self.decode_pools: Dict[str, InstancePool] = {
             name: DecodePool(n_d_c * workload.bs_max)
             for name, (_, n_d_c) in zip(self._pd_names, self._per_cluster)}
-        self.autoscaler = Autoscaler(model, self.router, system) \
-            if sim.autoscale else None
+        # per-region long-term loop: one autoscaler per PD cluster, each
+        # governing its region-local (n_p_c, n_d_c) and that home's routing
+        # threshold.  The shared PrfaaS cluster is scaled by the region's
+        # traffic share (region c consumes s_c of the offloaded stream), so
+        # the region-local model — imbalance detection AND the post-
+        # conversion threshold re-optimization — sees only its slice
+        # instead of crediting the full hub to every region.
+        self.autoscalers: Dict[str, Autoscaler] = {}
+        if sim.autoscale:
+            for name, share, (n_p_c, n_d_c) in zip(
+                    self._pd_names, self._shares, self._per_cluster):
+                n_prfaas_r = max(1, round(share * system.n_prfaas)) \
+                    if system.n_prfaas else 0
+                region_sc = SystemConfig(n_prfaas_r, n_p_c, n_d_c,
+                                         share * system.b_out,
+                                         system.threshold)
+                self.autoscalers[name] = Autoscaler(
+                    model, self.router, region_sc, home=name)
 
         self.completed: List[Request] = []
         self.all_requests: List[Request] = []
         self._next_rid = 0
         self._next_session = 0
-        # (session_id, cur_len, home); bounded LRU-ish window of live sessions
-        self._open_sessions: deque = deque(maxlen=512)
+        # (session_id, cur_len, home); window of live sessions with EXPLICIT
+        # oldest-first eviction (counted) once max_open_sessions is exceeded
+        self._open_sessions: deque = deque()
+        self.session_evictions = 0
+        # per-home (cached, total) routed token counters -> cache_hit_frac
+        # telemetry for the session-aware long-term loop
+        self._route_tokens: Dict[str, List[int]] = {
+            name: [0, 0] for name in self._pd_names}
         self._egress_t0 = 0.0         # topology sent-bytes at warmup end
 
     def _build_topology(self) -> LinkTopology:
@@ -320,19 +377,35 @@ class PrfaasSimulator:
     def decode_pool(self, pool):
         self.decode_pools[self._pd_names[0]] = pool
 
+    @property
+    def autoscaler(self) -> Optional[Autoscaler]:
+        """First region's autoscaler (the single-cluster autoscaler in the
+        classic deployment); None when autoscaling is off."""
+        if not self.autoscalers:
+            return None
+        return self.autoscalers[self._pd_names[0]]
+
     # ------------------------------------------------------------- arrivals
     def _arrival_rate(self, now: float) -> float:
         return mmpp_rate(self.sim.arrival_rate, self.w.burst_factor,
                          self.w.burst_period_s, now)
 
-    def _sample_home(self) -> str:
+    def _sample_home(self, exclude: Optional[str] = None) -> str:
         """Regional origin of a new session, skewed by pd_shares.  The
         single-cluster case draws nothing, keeping the RNG stream (and thus
-        the whole trajectory) identical to the pre-topology simulator."""
+        the whole trajectory) identical to the pre-topology simulator.
+        ``exclude`` (session roaming) renormalizes the shares over the
+        OTHER regions so a roaming session always changes home."""
         if len(self._pd_names) == 1:
             return self._pd_names[0]
-        i = int(self.rng.choice(len(self._pd_names), p=self._shares))
-        return self._pd_names[i]
+        if exclude is None:
+            i = int(self.rng.choice(len(self._pd_names), p=self._shares))
+            return self._pd_names[i]
+        names = [n for n in self._pd_names if n != exclude]
+        w = [s for n, s in zip(self._pd_names, self._shares) if n != exclude]
+        tot = sum(w)
+        p = [x / tot for x in w] if tot > 0 else None   # uniform fallback
+        return names[int(self.rng.choice(len(names), p=p))]
 
     def _new_request(self, now: float) -> Request:
         if (self._open_sessions
@@ -341,6 +414,13 @@ class PrfaasSimulator:
             sid, cur, home = self._open_sessions[i]
             grow = int(self.rng.exponential(self.w.session_growth)) + 1
             total = min(cur + grow, int(self.w.lengths.hi))
+            # session roaming: the user re-appears in a different region;
+            # the cached prefix stays at the old home, so the router's
+            # best-cache-anywhere regime charges a cross-region mesh copy.
+            # Guarded draws keep the roam_prob=0 RNG stream untouched.
+            if (self.sim.roam_prob > 0 and len(self._pd_names) > 1
+                    and self.rng.random() < self.sim.roam_prob):
+                home = self._sample_home(exclude=home)
             self._open_sessions[i] = (sid, total, home)
         else:
             sid = self._next_session
@@ -348,6 +428,12 @@ class PrfaasSimulator:
             total = int(self.w.lengths.sample(self.rng, 1)[0])
             home = self._sample_home()
             self._open_sessions.append((sid, total, home))
+            # explicit live-session window: evict oldest-first and COUNT it
+            # (a deque(maxlen=...) dropped live sessions silently, invisibly
+            # skewing session_prob reuse under high arrival rates)
+            while len(self._open_sessions) > self.sim.max_open_sessions:
+                self._open_sessions.popleft()
+                self.session_evictions += 1
         r = Request(self._next_rid, now, total, sid, home=home)
         self._next_rid += 1
         self.all_requests.append(r)
@@ -413,10 +499,46 @@ class PrfaasSimulator:
             req.total_len, matches,
             self.topology.pair_signal(PRFAAS, req.home), home=req.home)
         req.decision = decision
+        acc = self._route_tokens[req.home]
+        acc[0] += decision.cached_tokens
+        acc[1] += req.total_len
         incr = max(decision.incremental, 1)
         if decision.target == PRFAAS:
             return PRFAAS, self.model.prfaas_profile.t_prefill(incr)
         return decision.target, self.model.pd_profile.t_prefill(incr)
+
+    # ------------------------------------------------ regional control plane
+    def _observe_regions(self):
+        """Short-term loop: each home adjusts its OWN routing threshold from
+        its own aggregated link view (``dest_signal``).  For one PD cluster
+        the regional view IS the single pair link, reproducing the legacy
+        global loop exactly."""
+        for name in self._pd_names:
+            self.router.observe_congestion(self.topology.dest_signal(name),
+                                           home=name)
+
+    def _region_telemetry(self, name: str,
+                          util_now: Optional[float] = None) -> StageTelemetry:
+        """Per-region long-term telemetry: the region's own prefill/decode
+        queues (requests queued at PrfaaS attributed by home), pool
+        utilizations (event engine), and the home's cumulative routed/
+        cached token counters (prefix-cache telemetry; the autoscaler
+        windows them over its own evaluation period)."""
+        pq = sum(1 for item in self.prfaas_pool.queue
+                 if item[0].home == name)
+        pq += len(self.pdp_pools[name].queue)
+        cached, total = self._route_tokens[name]
+        tel = StageTelemetry(
+            prefill_queue=pq,
+            decode_queue=len(self.decode_pools[name].queue),
+            # cumulative counters: the autoscaler windows them per period
+            cached_tokens=cached, routed_tokens=total)
+        if util_now is not None:
+            tel.prefill_util = self.pdp_pools[name].utilization(
+                max(util_now, 1e-9))
+            tel.decode_util = self.decode_pools[name].utilization(
+                max(util_now, 1e-9))
+        return tel
 
     # ----------------------------------------------------------------- run
     def run(self) -> dict:
@@ -521,17 +643,13 @@ class PrfaasSimulator:
             self._inflight = still
             for pool in self.decode_pools.values():
                 pool.tick(now, sim.dt, self._on_decode_start)
-            self.router.observe_congestion(self.topology.aggregate_signal())
-            if self.autoscaler is not None:
-                tel = StageTelemetry(
-                    prefill_queue=len(self.prfaas_pool.queue)
-                    + sum(len(p.queue) for p in self.pdp_pools.values()),
-                    decode_queue=sum(len(p.queue)
-                                     for p in self.decode_pools.values()))
-                new_sys = self.autoscaler.maybe_rebalance(now, tel)
+            self._observe_regions()
+            for name in (self._pd_names if self.autoscalers else ()):
+                new_sys = self.autoscalers[name].maybe_rebalance(
+                    now, self._region_telemetry(name))
                 if new_sys is not None:
-                    self.pdp_pool.capacity = new_sys.n_p
-                    self.decode_pool.capacity = new_sys.n_d * w.bs_max
+                    self.pdp_pools[name].capacity = new_sys.n_p
+                    self.decode_pools[name].capacity = new_sys.n_d * w.bs_max
         return self.metrics()
 
     # --------------------------------------------------------- event engine
@@ -589,22 +707,20 @@ class PrfaasSimulator:
             self._start_prefill(req, st, cluster, now)
 
     def _ev_control(self, now: float):
-        self.router.observe_congestion(self.topology.aggregate_signal())
-        if self.autoscaler is not None:
-            tel = StageTelemetry(
-                prefill_queue=len(self.prfaas_pool.queue)
-                + sum(len(p.queue) for p in self.pdp_pools.values()),
-                decode_queue=sum(len(p.queue)
-                                 for p in self.decode_pools.values()),
-                prefill_util=self.pdp_pool.utilization(max(now, 1e-9)),
-                decode_util=self.decode_pool.utilization(max(now, 1e-9)))
-            new_sys = self.autoscaler.maybe_rebalance(now, tel)
-            if new_sys is not None:
-                for req, st in self.pdp_pool.set_capacity(new_sys.n_p, now):
-                    self._start_prefill(req, st, self._pd_names[0], now)
-                for req in self.decode_pool.set_capacity(
-                        new_sys.n_d * self.w.bs_max, now):
-                    self._start_decode(req, now)
+        self._observe_regions()
+        for name in (self._pd_names if self.autoscalers else ()):
+            new_sys = self.autoscalers[name].maybe_rebalance(
+                now, self._region_telemetry(name, util_now=now))
+            if new_sys is None:
+                continue
+            # resize ONLY this region's pools; freed capacity starts queued
+            # work at the exact conversion time
+            for req, st in self.pdp_pools[name].set_capacity(
+                    new_sys.n_p, now):
+                self._start_prefill(req, st, name, now)
+            for req in self.decode_pools[name].set_capacity(
+                    new_sys.n_d * self.w.bs_max, now):
+                self._start_decode(req, now)
         nxt = now + self.sim.control_dt
         if nxt <= self.sim.sim_time:
             self._push(nxt, _EV_CONTROL)
@@ -684,6 +800,7 @@ class PrfaasSimulator:
             c_done = [r for r in done if r.home == name]
             c_ttft = np.array([r.first_token - r.arrival for r in c_done
                                if r.first_token > 0])
+            cached, total = self._route_tokens[name]
             per_cluster[name] = {
                 "completed": len(c_done),
                 "throughput_rps": len(c_done) / window,
@@ -692,7 +809,13 @@ class PrfaasSimulator:
                 "ttft_p90": _pct(c_ttft, 90),
                 "prefill_queue": len(self.pdp_pools[name].queue),
                 "decode_queue": len(self.decode_pools[name].queue),
+                "threshold": self.router.threshold_for(name),
+                "cache_hit_frac": cached / total if total else 0.0,
+                "conversions": len(self.autoscalers[name].conversions)
+                if name in self.autoscalers else 0,
             }
+        thresholds = {name: self.router.threshold_for(name)
+                      for name in self._pd_names}
         return {
             "throughput_rps": thr,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
@@ -713,7 +836,11 @@ class PrfaasSimulator:
             "decode_queue": sum(len(p.queue)
                                 for p in self.decode_pools.values()),
             "cache": self.kv.stats(),
-            "threshold": self.router.threshold,
+            # max over homes == the legacy global value for one PD cluster
+            "threshold": max(thresholds.values()),
+            "thresholds": thresholds,
+            "session_evictions": self.session_evictions,
+            "open_sessions": len(self._open_sessions),
             "clusters": per_cluster,
             "links": self.topology.pair_stats(),
         }

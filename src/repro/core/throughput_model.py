@@ -115,44 +115,87 @@ class ThroughputModel:
 
     # -- Eq. 6 ----------------------------------------------------------------
     def lambda_max(self, sc: SystemConfig,
-                   pd_shares: Optional[list] = None) -> float:
+                   pd_shares: Optional[list] = None,
+                   thresholds: Optional[list] = None) -> float:
         """Eq. 6, generalized to per-PD-cluster instance counts: with
         regional traffic shares s_c, cluster c must sustain s_c of the
         global rate with its own N_p,c / N_d,c, so each per-cluster stage
         throughput is divided by its share.  The single-cluster case
         (``n_p_clusters is None``) is the paper's original min().
 
+        ``thresholds`` (per-region, multi-cluster only) models the
+        regionalized short-term loop: region c offloads with its OWN
+        t_c, so p_c = P(L > t_c) and the PrfaaS cluster serves the traffic
+        mixture — compute constraint sum_c s_c p_c T_prefill(l_long,c)
+        <= N_prfaas / Lambda, egress constraint sum_c s_c p_c S_kv(l_long,c)
+        <= B_out / Lambda — while each region's PD-P stage is evaluated at
+        its own conditional short-length mean.  ``thresholds=None`` uses
+        ``sc.threshold`` everywhere (identical to the uniform case).
+
         (A request short-circuits to 0 via theta_pdp == 0 when n_p == 0 and
         p < 1 — the old explicit ``return 0.0`` branch was unreachable.)"""
-        p = self.workload.lengths.p_gt(sc.threshold) if sc.n_prfaas else 0.0
         terms = []
-        if p > 0:
-            terms.append(self.theta_prfaas(sc) / p)
         if sc.n_p_clusters is None:
+            if thresholds is not None:
+                raise ValueError("per-region thresholds require per-cluster "
+                                 "instance counts (n_p_clusters)")
+            p = self.workload.lengths.p_gt(sc.threshold) if sc.n_prfaas \
+                else 0.0
+            if p > 0:
+                terms.append(self.theta_prfaas(sc) / p)
             terms.append(self.theta_pdd(sc))
             if p < 1:
                 terms.append(self.theta_pdp(sc) / (1.0 - p))
+            return min(terms)
+        k = sc.num_pd_clusters
+        if pd_shares is None:
+            shares = [1.0 / k] * k
         else:
-            k = sc.num_pd_clusters
-            if pd_shares is None:
-                shares = [1.0 / k] * k
-            else:
-                if len(pd_shares) != k or min(pd_shares) < 0 \
-                        or sum(pd_shares) <= 0:
-                    raise ValueError(f"pd_shares {pd_shares} invalid for "
-                                     f"{k} PD clusters")
-                shares = [s / sum(pd_shares) for s in pd_shares]
-            pdp_unit = self.theta_pdp(  # per-instance rates at this threshold
-                SystemConfig(sc.n_prfaas, 1, 1, sc.b_out, sc.threshold,
-                             kv_wire_compression=sc.kv_wire_compression))
-            pdd_unit = self.theta_pdd(
-                SystemConfig(sc.n_prfaas, 1, 1, sc.b_out, sc.threshold))
-            for (n_p_c, n_d_c), s in zip(sc.per_cluster(), shares):
-                if s <= 0:
+            if len(pd_shares) != k or min(pd_shares) < 0 \
+                    or sum(pd_shares) <= 0:
+                raise ValueError(f"pd_shares {pd_shares} invalid for "
+                                 f"{k} PD clusters")
+            shares = [s / sum(pd_shares) for s in pd_shares]
+        if thresholds is None:
+            ts = [sc.threshold] * k
+        else:
+            if len(thresholds) != k:
+                raise ValueError(f"thresholds {thresholds} invalid for "
+                                 f"{k} PD clusters")
+            ts = list(thresholds)
+        lengths = self.workload.lengths
+        # PrfaaS serves the cross-region mixture of long requests: one
+        # aggregate compute and one aggregate egress constraint.
+        if sc.n_prfaas:
+            time_per_req = 0.0      # E[s_c p_c T_prefill(l_long,c)]
+            bytes_per_req = 0.0     # E[s_c p_c S_kv(l_long,c)] on the wire
+            for s, t in zip(shares, ts):
+                p_c = lengths.p_gt(t)
+                if s <= 0 or p_c <= 0:
                     continue
-                terms.append(n_d_c * pdd_unit / s)
-                if p < 1:
-                    terms.append(n_p_c * pdp_unit / ((1.0 - p) * s))
+                if self.prfaas_profile is None:
+                    # offloading configured with no PrfaaS profile: the
+                    # offloaded fraction has nowhere to run (theta == 0)
+                    return 0.0
+                l_long = int(lengths.mean_above(t))
+                time_per_req += s * p_c * self.prfaas_profile.t_prefill(l_long)
+                bytes_per_req += s * p_c * self.prfaas_profile.s_kv(l_long) \
+                    / max(sc.kv_wire_compression, 1e-9)
+            if time_per_req > 0:
+                terms.append(sc.n_prfaas / time_per_req)
+                terms.append(sc.b_out / bytes_per_req)
+        pdd_unit = self.theta_pdd(
+            SystemConfig(sc.n_prfaas, 1, 1, sc.b_out, sc.threshold))
+        for (n_p_c, n_d_c), s, t in zip(sc.per_cluster(), shares, ts):
+            if s <= 0:
+                continue
+            terms.append(n_d_c * pdd_unit / s)
+            p_c = lengths.p_gt(t) if sc.n_prfaas else 0.0
+            if p_c < 1:
+                l_short = lengths.mean() if sc.n_prfaas == 0 \
+                    else lengths.mean_below(t)
+                pdp_c = n_p_c / self.pd_profile.t_prefill(int(l_short))
+                terms.append(pdp_c / ((1.0 - p_c) * s))
         return min(terms)
 
     def egress_load(self, sc: SystemConfig, rate: Optional[float] = None) -> float:

@@ -361,6 +361,13 @@ class Link:
         self.busy_time += dt * util
         self._record_drops(dt / 0.02 if congested else 0.0, dt)
 
+    def backlog_bytes(self) -> float:
+        """Total bytes still owed by live flows (eligible or not): the
+        conservation counterpart of ``sent_bytes`` — at any instant
+        ``sent_bytes + backlog_bytes() == total bytes ever submitted``
+        (within the solver's byte epsilon)."""
+        return sum(f.total_bytes - f.sent for f in self.flows.values())
+
     # ------------------------------------------------------------ telemetry
     def congestion_signal(self) -> dict:
         if self._queue_stale:
@@ -501,6 +508,13 @@ class LinkTopology:
                 "drops": sum(s["drops"] for s in sigs),
                 "drops_total": sum(s["drops_total"] for s in sigs),
                 "inflight": sum(s["inflight"] for s in sigs)}
+
+    def pair_backlogs(self) -> Dict[str, float]:
+        """Per-pair live backlog (bytes still owed by in-flight flows) —
+        with ``pair_stats()[pair]["sent_bytes"]`` this conserves the total
+        bytes submitted to each pair link."""
+        return {f"{a}|{b}": l.backlog_bytes()
+                for (a, b), l in self._links.items()}
 
     def pair_stats(self) -> Dict[str, dict]:
         """Per-pair byte/utilization accounting for metrics and tests."""

@@ -5,6 +5,12 @@ The golden trace pins the two-cluster simulator's per-request trajectories
 them) so the multi-cluster ``LinkTopology`` refactor can be verified to
 reproduce the single-``Link`` code path bit-for-bit on the same seed.
 
+The regionalized control plane (PR 3) is pinned the same way: the scenario
+explicitly sets ``roam_prob=0.0`` and ``autoscale=False``, so per-home
+thresholds, session roaming, and per-region autoscaling must all be
+RNG-stream- and trajectory-neutral when disabled — regenerating this file
+after the regionalization produced a byte-identical trace.
+
     PYTHONPATH=src python tests/golden_trace_gen.py
 """
 import json
@@ -29,7 +35,8 @@ def run_engine(engine: str) -> dict:
     tm, sc, w, lam = scenario()
     sim = PrfaasSimulator(tm, sc, w, SimConfig(
         arrival_rate=0.8 * lam, sim_time=120.0, dt=0.02, seed=42,
-        link_gbps=25.0, link_fluctuation=0.15, engine=engine))
+        link_gbps=25.0, link_fluctuation=0.15, engine=engine,
+        roam_prob=0.0, autoscale=False))    # regional control loops OFF
     sim.run()
     reqs = []
     for r in sim.all_requests[:N_REQS]:

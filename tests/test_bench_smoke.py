@@ -1,0 +1,32 @@
+"""Benchmark-harness smoke test: ``python -m benchmarks.run --smoke`` must
+finish clean so benchmark drift fails tier-1 instead of rotting silently.
+
+Runs in a temporary working directory so the harness's BENCH_*.json
+artifacts never clobber the checked-in full-run results.  Marked ``slow``
+(it compiles JAX kernels and runs every simulator scenario once).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_bench_smoke_runs_clean(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (ROOT, os.path.join(ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=tmp_path, env=env, capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, (
+        f"bench smoke failed\n--- stdout ---\n{res.stdout[-4000:]}"
+        f"\n--- stderr ---\n{res.stderr[-4000:]}")
+    assert "# all benchmarks complete" in res.stdout
+    assert "# FAILED" not in res.stdout
+    # the harness actually produced its simulator artifacts
+    assert (tmp_path / "BENCH_scenario_grid.json").exists()

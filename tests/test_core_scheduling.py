@@ -174,3 +174,35 @@ class TestAutoscaler:
         a = Autoscaler(tm, r, sc)
         a._last_eval = 900.0
         assert a.maybe_rebalance(1000.0, StageTelemetry(0, 50)) is None
+
+    def test_cache_hits_boost_producer_over_window(self, tm):
+        """Session-aware loop: a hot prefix cache means cached tokens cost
+        no prefill compute, so the effective producer rate rises and a
+        P->D conversion fires where raw rates alone would not.  The hit
+        fraction is windowed per evaluation (cumulative counter diffs),
+        not a lifetime average."""
+        sc = SystemConfig(4, 2, 6, 100e9 / 8, 19_400.0)
+        # raw producer (~2.7) << consumer*1.25 (~5.9): no conversion cold
+        r = Router(tm, sc)
+        a = Autoscaler(tm, r, sc)
+        a._last_eval = -1e9
+        cold = StageTelemetry(prefill_queue=0, decode_queue=50,
+                              cached_tokens=0, routed_tokens=10_000)
+        assert a.maybe_rebalance(1000.0, cold) is None
+        # window 2: lifetime frac is only 0.3 (4.5K/15K) but the LAST
+        # window is 90% cached (4.5K of 5K) -> producer/0.1 -> P -> D
+        hot = StageTelemetry(prefill_queue=0, decode_queue=50,
+                             cached_tokens=4_500, routed_tokens=15_000)
+        new = a.maybe_rebalance(2000.0, hot)
+        assert new is not None and new.n_p == 1 and new.n_d == 7
+
+    def test_lifetime_frac_alone_would_not_convert(self, tm):
+        """Control for the window test: the same cumulative counters fed
+        as a single lifetime observation (0.3 hit frac) stay balanced."""
+        sc = SystemConfig(4, 2, 6, 100e9 / 8, 19_400.0)
+        r = Router(tm, sc)
+        a = Autoscaler(tm, r, sc)
+        a._last_eval = -1e9
+        tel = StageTelemetry(prefill_queue=0, decode_queue=50,
+                             cache_hit_frac=0.3)
+        assert a.maybe_rebalance(1000.0, tel) is None

@@ -1,13 +1,20 @@
-"""Link/transfer engine + end-to-end cluster simulator."""
+"""Link/transfer engine + end-to-end cluster simulator.
+
+Includes the PR 3 property harness: for random topologies, seeds, and
+roaming rates, (a) every byte a pair link reports sending was charged to
+that pair by a routing decision (and vice versa), and (b) ``LinkTopology``
+conserves backlog across ``advance`` — no bytes are created, lost, or
+migrated between pair links by the exact solver."""
 import math
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (Link, PrfaasSimulator, SimConfig, SystemConfig,
-                        ThroughputModel, Workload, layerwise_release,
-                        paper_h20_profile, paper_h200_profile)
+from repro.core import (PRFAAS, Link, LinkTopology, PrfaasSimulator,
+                        SimConfig, SystemConfig, ThroughputModel, Workload,
+                        layerwise_release, paper_h20_profile,
+                        paper_h200_profile, split_even, star_pairs)
 
 
 def run_link(link, seconds, dt=0.01):
@@ -77,6 +84,103 @@ def table6_setup():
     tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
     sc, rate, _ = tm.grid_search(4, 8, 100e9 / 8)
     return tm, sc, rate, w
+
+
+# --------------------------------------------------------------------------
+# property harness: routing-decision byte charging + topology conservation
+# --------------------------------------------------------------------------
+_PROP_SETUP: list = []        # lazy module cache (fixtures can't mix with
+                              # @given under the hypothesis fallback shim)
+
+
+def _prop_setup():
+    if not _PROP_SETUP:
+        w = Workload()
+        tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+        sc, rate, _ = tm.grid_search(4, 8, 100e9 / 8)
+        _PROP_SETUP.append((tm, sc, rate))
+    return _PROP_SETUP[0]
+
+
+class TestTopologyProperties:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(1, 3), st.integers(0, 1000), st.floats(0.0, 0.5))
+    def test_bytes_sent_per_pair_equal_bytes_charged(self, k, seed, roam):
+        """Every pair link's sent bytes (after draining) equal the bytes
+        the routing decisions charged to that pair: prefill KV flows on
+        the (PrfaaS, home) star link, cross-cache copies on the
+        (cache owner, prefill target) pair — including roaming copies on
+        the PD<->PD mesh."""
+        tm, sc, rate = _prop_setup()
+        w = Workload(session_prob=0.5)
+        if k > 1:
+            sc = SystemConfig(sc.n_prfaas, sc.n_p, sc.n_d, sc.b_out,
+                              sc.threshold,
+                              n_p_clusters=tuple(split_even(sc.n_p, k)),
+                              n_d_clusters=tuple(split_even(sc.n_d, k)))
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=0.4 * rate, sim_time=60.0, seed=seed,
+            engine="event", pool_blocks=2_000_000, pd_clusters=k,
+            pd_mesh_gbps=10.0 if k > 1 else 0.0,
+            roam_prob=roam if k > 1 else 0.0))
+        sim.run()
+        sim.topology.run_until_idle()            # drain in-flight flows
+        charged: dict = {}
+
+        def _charge(a, b, nbytes):
+            key = f"{min(a, b)}|{max(a, b)}"
+            charged[key] = charged.get(key, 0.0) + nbytes
+
+        for r in sim.all_requests:
+            if r.decision is None or r.prefill_start < 0:
+                continue                         # never started: no flows
+            if r.decision.target == PRFAAS:
+                _charge(PRFAAS, r.home, sim._prefill_wire_bytes(r))
+            if r.decision.cross_cache_transfer and r.decision.cached_tokens:
+                _charge(r.decision.cache_cluster, r.decision.target,
+                        sim._cross_cache_bytes(r.decision))
+        stats = sim.topology.pair_stats()
+        for pair, s in stats.items():
+            assert s["sent_bytes"] == pytest.approx(
+                charged.get(pair, 0.0), rel=1e-6, abs=1.0), pair
+        assert sim.topology.sent_bytes == pytest.approx(
+            sum(charged.values()), rel=1e-6, abs=1.0)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 1000), st.floats(0.0, 0.4), st.integers(2, 4))
+    def test_topology_conserves_backlog_across_advance(self, seed, fluct, k):
+        """At every advance boundary, each pair link satisfies
+        sent_bytes + live backlog == total bytes submitted to that pair
+        (no creation, loss, or cross-pair migration), and full drain
+        delivers exactly what was submitted."""
+        rng = np.random.default_rng(seed)
+        pds = [f"pd{i}" for i in range(k)]
+        pairs = star_pairs(PRFAAS, pds, mesh=True)
+        topo = LinkTopology.build(
+            [PRFAAS] + pds, pairs,
+            [float(rng.uniform(2.0, 10.0)) for _ in pairs],
+            fluctuation=fluct, seed=seed)
+        submitted = {f"{min(a, b)}|{max(a, b)}": 0.0 for a, b in pairs}
+        for _ in range(25):
+            a, b = pairs[int(rng.integers(len(pairs)))]
+            nbytes = float(rng.uniform(1e6, 5e8))
+            start = float(rng.uniform(0.0, 2.0))
+            topo.submit(a, b, nbytes, start,
+                        ramp_end=start + float(rng.uniform(0.0, 1.0)))
+            submitted[f"{min(a, b)}|{max(a, b)}"] += nbytes
+        t = 0.0
+        for _ in range(12):
+            t += float(rng.uniform(0.05, 0.8))
+            topo.advance(t)
+            backlogs = topo.pair_backlogs()
+            for pair, s in topo.pair_stats().items():
+                assert s["sent_bytes"] + backlogs[pair] == pytest.approx(
+                    submitted[pair], rel=1e-9, abs=1e-3), (pair, t)
+        topo.run_until_idle()
+        for pair, s in topo.pair_stats().items():
+            assert s["sent_bytes"] == pytest.approx(submitted[pair],
+                                                    rel=1e-9, abs=1e-3)
+            assert topo.pair_backlogs()[pair] == pytest.approx(0.0, abs=1e-3)
 
 
 class TestSimulator:

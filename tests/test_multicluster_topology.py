@@ -65,9 +65,12 @@ class TestTwoClusterEquivalence:
     def test_golden_trace_bit_for_bit(self):
         """The refactored simulator (internally a LinkTopology) reproduces
         the pre-topology single-Link per-request trajectories exactly on
-        the same seed, for BOTH engines.  sent_bytes is compared at 1e-8
-        relative: the livelock fix stopped over-counting capacity x 1ns of
-        phantom bytes at forced-epsilon steps (a ~1e-10 correction)."""
+        the same seed, for BOTH engines.  The trace was regenerated after
+        the PR 3 regionalization with ``roam_prob=0.0, autoscale=False``
+        pinned — per-request trajectories came out byte-identical, proving
+        the regional control plane is RNG- and trajectory-neutral when
+        disabled.  sent_bytes keeps a 1e-8 relative tolerance (legacy of
+        the sub-epsilon livelock fix's ~1e-10 byte correction)."""
         import sys
         sys.path.insert(0, os.path.dirname(__file__))
         from golden_trace_gen import run_engine
@@ -198,11 +201,168 @@ class TestThreeClusterSim:
         assert flows_on[("pd1", PRFAAS)] == 1
         assert sum(flows_on.values()) == 1
 
-    def test_autoscale_rejected_for_multicluster(self, setup):
+    def test_autoscale_accepted_for_multicluster(self, setup):
+        """PR 3: per-region autoscaling replaced the old hard ValueError —
+        one Autoscaler per PD cluster over its region-local instances."""
         tm, sc, _, w = setup
-        with pytest.raises(ValueError, match="autoscale"):
-            PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
-                arrival_rate=1.0, pd_clusters=3, autoscale=True))
+        sim = PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
+            arrival_rate=1.0, pd_clusters=3, autoscale=True))
+        assert set(sim.autoscalers) == {"pd0", "pd1", "pd2"}
+        assert sim.autoscaler is sim.autoscalers["pd0"]
+        for name, a in sim.autoscalers.items():
+            assert a.home == name
+            n_p_c, n_d_c = dict(zip(sim._pd_names, sim._per_cluster))[name]
+            assert (a.system.n_p, a.system.n_d) == (n_p_c, n_d_c)
+
+
+# --------------------------------------------------------------------------
+# regionalized control plane (PR 3): per-home thresholds, session roaming
+# over the PD mesh, per-region autoscaling
+# --------------------------------------------------------------------------
+class TestRegionalControlPlane:
+    def test_burst_confined_to_one_home_raises_only_its_threshold(self, setup):
+        """Acceptance: congestion on ONE region's star link moves ONLY that
+        home's offload threshold; it relaxes alone once the burst drains."""
+        tm, sc, _, w = setup
+        sim = PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
+            arrival_rate=1.0, engine="event", pd_clusters=3,
+            pd_mesh_gbps=10.0))
+        base = {n: sim.router.threshold_for(n) for n in sim._pd_names}
+        # burst confined to pd2: saturate its star pair link only
+        sim.topology.submit(PRFAAS, "pd2", 6e10, 0.0)
+        sim.topology.advance(4.0)
+        sim._observe_regions()
+        assert sim.router.threshold_for("pd2") > base["pd2"]
+        assert sim.router.threshold_for("pd0") == base["pd0"]
+        assert sim.router.threshold_for("pd1") == base["pd1"]
+        # drain + idle long past the telemetry time constant -> pd2 relaxes
+        sim.topology.run_until_idle()
+        sim.topology.advance(sim.topology.link(PRFAAS, "pd2").now + 30.0)
+        for _ in range(8):
+            sim._observe_regions()
+        assert sim.router.threshold_for("pd2") \
+            == pytest.approx(base["pd2"], rel=0.05)
+        # per-request routing uses the per-home threshold
+        m = sim.metrics()
+        assert m["thresholds"]["pd2"] == sim.router.threshold_for("pd2")
+
+    def test_roaming_charges_mesh_pair_links(self, setup):
+        """Acceptance: pd_clusters=3 with roam_prob>0 puts nonzero bytes on
+        at least one PD<->PD mesh pair link (cross-region cache copies)."""
+        tm, sc, rate, _ = setup
+        w = Workload(session_prob=0.6)
+        sim = PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
+            arrival_rate=0.5 * rate, sim_time=300, seed=7, engine="event",
+            pd_clusters=3, pd_mesh_gbps=10.0, roam_prob=0.4,
+            pool_blocks=2_000_000))
+        m = sim.run()
+        mesh = {pair: s["sent_bytes"] for pair, s in m["links"].items()
+                if PRFAAS not in pair}
+        assert len(mesh) == 3                      # full pd mesh exists
+        assert sum(mesh.values()) > 0
+        assert sim.router.cross_transfers > 0
+
+    def test_no_roaming_keeps_mesh_cold(self, setup):
+        """roam_prob=0 pins sessions to their home: the mesh carries no
+        bytes (the pre-roaming behavior, also pinned by the golden trace)."""
+        tm, sc, rate, _ = setup
+        w = Workload(session_prob=0.6)
+        sim = PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
+            arrival_rate=0.5 * rate, sim_time=200, seed=7, engine="event",
+            pd_clusters=3, pd_mesh_gbps=10.0, roam_prob=0.0,
+            pool_blocks=2_000_000))
+        m = sim.run()
+        mesh = [s["sent_bytes"] for pair, s in m["links"].items()
+                if PRFAAS not in pair]
+        assert sum(mesh) == 0
+
+    def test_regional_autoscale_converts_only_starved_region(self, setup):
+        """A prefill-starved region converts D->P alone; balanced regions
+        keep their allocation (queue evidence gates per region), and only
+        the starved home's threshold is re-anchored."""
+        tm, _, _, w = setup
+        sc = SystemConfig(4, 5, 7, 100e9 / 8, 19_400.0,
+                          n_p_clusters=(1, 2, 2), n_d_clusters=(3, 2, 2))
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=2.5, sim_time=600, seed=6, engine="event",
+            pd_clusters=3, pd_shares=(0.5, 0.25, 0.25), autoscale=True))
+        for a in sim.autoscalers.values():
+            a.cfg.period_s = 60.0
+        m = sim.run()
+        assert sim.autoscalers["pd0"].conversions, \
+            "starved region never rebalanced"
+        _, n_p0, n_d0 = sim.autoscalers["pd0"].conversions[-1]
+        assert n_p0 > 1                                  # D -> P in pd0
+        assert not sim.autoscalers["pd1"].conversions
+        assert not sim.autoscalers["pd2"].conversions
+        # pools resized region-locally; conversion re-anchored pd0's t only
+        assert sim.pdp_pools["pd0"].capacity == n_p0
+        assert sim.pdp_pools["pd1"].capacity == 2
+        assert m["thresholds"]["pd1"] == pytest.approx(19_400.0)
+        assert m["clusters"]["pd0"]["conversions"] == \
+            len(sim.autoscalers["pd0"].conversions)
+
+    def test_tick_event_equivalence_roaming(self, setup):
+        """Engine equivalence (5%) holds with roaming + mesh traffic on."""
+        tm, sc, rate, _ = setup
+        w = Workload(session_prob=0.4)
+        out = {}
+        for engine in ("tick", "event"):
+            sim = PrfaasSimulator(tm, _sc3(sc), w, SimConfig(
+                arrival_rate=0.7 * rate, sim_time=360, dt=0.02, seed=11,
+                engine=engine, pd_clusters=3, pd_shares=(0.5, 0.3, 0.2),
+                pd_mesh_gbps=10.0, roam_prob=0.3, pool_blocks=2_000_000))
+            out[engine] = sim.run()
+        t, e = out["tick"], out["event"]
+        assert e["throughput_rps"] == pytest.approx(t["throughput_rps"],
+                                                    rel=0.05)
+        assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
+        assert e["egress_gbps"] == pytest.approx(t["egress_gbps"], rel=0.05)
+
+    @pytest.mark.slow
+    def test_tick_event_equivalence_regional_autoscale(self, setup):
+        """Engine equivalence (5%) holds with per-region autoscaling on;
+        metrics cover the steady state after the control transient."""
+        tm, _, _, w = setup
+        sc = SystemConfig(4, 5, 7, 100e9 / 8, 19_400.0,
+                          n_p_clusters=(1, 2, 2), n_d_clusters=(3, 2, 2))
+        out, conv = {}, {}
+        for engine in ("tick", "event"):
+            sim = PrfaasSimulator(tm, sc, w, SimConfig(
+                arrival_rate=2.5, sim_time=900, dt=0.05, seed=6,
+                warmup_frac=0.25, engine=engine, pd_clusters=3,
+                pd_shares=(0.5, 0.25, 0.25), autoscale=True))
+            for a in sim.autoscalers.values():
+                a.cfg.period_s = 60.0
+            out[engine] = sim.run()
+            conv[engine] = {n: a.conversions
+                            for n, a in sim.autoscalers.items()}
+            assert conv[engine]["pd0"]
+        assert conv["tick"] == conv["event"]     # identical control decisions
+        t, e = out["tick"], out["event"]
+        assert e["throughput_rps"] == pytest.approx(t["throughput_rps"],
+                                                    rel=0.05)
+        assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
+        assert e["egress_gbps"] == pytest.approx(t["egress_gbps"], rel=0.05)
+
+    def test_lambda_max_per_region_thresholds(self, setup):
+        """Planner-side regional awareness: uniform per-region thresholds
+        reproduce the scalar case; raising only a hot region's t matches
+        the simulator's per-home control direction (less offload there)."""
+        tm, sc, _, _ = setup
+        sc3 = _sc3(sc, 3)
+        t = sc.threshold
+        uniform = tm.lambda_max(sc3, thresholds=[t, t, t])
+        assert uniform == pytest.approx(tm.lambda_max(sc3))
+        # one congested region raises its bar alone; capacity stays finite
+        # and the planner's answer moves continuously
+        bumped = tm.lambda_max(sc3, thresholds=[t, t, 1.35 * t])
+        assert 0 < bumped
+        assert bumped == pytest.approx(uniform, rel=0.5)
+        with pytest.raises(ValueError):
+            tm.lambda_max(sc3, thresholds=[t, t])          # wrong length
+        with pytest.raises(ValueError):
+            tm.lambda_max(sc, thresholds=[t])   # scalar config, no regions
 
 
 # --------------------------------------------------------------------------
@@ -333,6 +493,22 @@ class TestModelAndConfigFixes:
             tm.lambda_max(sc3, pd_shares=[0.5, 0.5])     # wrong length
         with pytest.raises(ValueError):
             tm.lambda_max(sc3, pd_shares=[1.0, 0.5, -0.5])
+
+    def test_no_prfaas_profile_zeroes_multicluster_capacity(self):
+        """n_prfaas > 0 with no PrfaaS profile means the offloaded fraction
+        has nowhere to run: the per-cluster branch must return 0.0 exactly
+        like the single-cluster path (theta_prfaas == 0)."""
+        w = Workload()
+        tm_none = ThroughputModel(None, paper_h20_profile(), w)
+        sc1 = SystemConfig(4, 4, 4, 1e9, 19_400.0)
+        sc2 = SystemConfig(4, 4, 4, 1e9, 19_400.0,
+                           n_p_clusters=(2, 2), n_d_clusters=(2, 2))
+        assert tm_none.lambda_max(sc1) == 0.0
+        assert tm_none.lambda_max(sc2) == 0.0
+        # threshold=inf offloads nothing: capacity is PD-only and positive
+        sc_inf = SystemConfig(4, 4, 4, 1e9, math.inf,
+                              n_p_clusters=(2, 2), n_d_clusters=(2, 2))
+        assert tm_none.lambda_max(sc_inf) > 0
 
     def test_per_cluster_tuples_validated(self):
         with pytest.raises(ValueError):

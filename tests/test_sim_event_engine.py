@@ -2,6 +2,7 @@
 MMPP mean preservation, cross-cache byte accounting, sim cache semantics."""
 import itertools
 import math
+from collections import deque
 
 import numpy as np
 import pytest
@@ -297,6 +298,68 @@ class TestSimPrefixCache:
         c = SimPrefixCache(16, 64)
         assert c.insert(1, 64) == 0
         assert c.pool.stats["alloc_fail"] == 1
+
+
+# --------------------------------------------------------------------------
+# live-session window: explicit, counted eviction (was a silent
+# deque(maxlen=512) that dropped live sessions under high arrival rates)
+# --------------------------------------------------------------------------
+class TestOpenSessionWindow:
+    def _sim(self, setup, **kw):
+        tm, sc, rate, _ = setup
+        w = Workload(session_prob=0.5)
+        kw.setdefault("sim_time", 200.0)
+        return PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=8.0, seed=9, **kw))
+
+    def test_eviction_explicit_and_counted(self, setup):
+        """Overflowing the window evicts oldest-first and COUNTS it — the
+        old deque(maxlen=512) silently discarded live sessions, so reuse
+        draws only ever saw the most recent 512."""
+        sim = self._sim(setup, max_open_sessions=64)
+        sim._generate_arrivals()
+        assert len(sim._open_sessions) == 64
+        assert sim.session_evictions > 0
+        # conservation: every session ever opened is either still in the
+        # window or was explicitly evicted
+        assert sim.session_evictions \
+            == sim._next_session - len(sim._open_sessions)
+
+    def test_large_window_never_evicts(self, setup):
+        sim = self._sim(setup, max_open_sessions=1_000_000)
+        sim._generate_arrivals()
+        assert sim.session_evictions == 0
+        assert len(sim._open_sessions) == sim._next_session
+
+    def test_default_window_matches_legacy_maxlen(self, setup):
+        """The default window (512, oldest-first) reproduces the legacy
+        deque(maxlen=512) trajectory bit-for-bit: same RNG stream, same
+        session ids/lengths — only the eviction is now observable."""
+        sim = self._sim(setup)
+        trace = sim._generate_arrivals()
+        assert sim.sim.max_open_sessions == 512
+        assert len(sim._open_sessions) == 512
+        assert sim.session_evictions > 0
+        legacy = self._sim(setup)
+        legacy._open_sessions = deque(maxlen=512)     # seed behavior
+        legacy_trace = legacy._generate_arrivals()
+        assert [(r.session, r.total_len, r.home) for r in trace] \
+            == [(r.session, r.total_len, r.home) for r in legacy_trace]
+
+    def test_metrics_expose_window_counters(self, setup):
+        sim = self._sim(setup, max_open_sessions=64, sim_time=30.0)
+        m = sim.run()
+        assert m["session_evictions"] == sim.session_evictions
+        assert m["open_sessions"] == len(sim._open_sessions) <= 64
+
+    def test_invalid_window_rejected(self, setup):
+        tm, sc, _, w = setup
+        with pytest.raises(ValueError, match="max_open_sessions"):
+            PrfaasSimulator(tm, sc, w, SimConfig(
+                arrival_rate=1.0, max_open_sessions=0))
+        with pytest.raises(ValueError, match="roam_prob"):
+            PrfaasSimulator(tm, sc, w, SimConfig(
+                arrival_rate=1.0, roam_prob=1.5))
 
 
 # --------------------------------------------------------------------------
