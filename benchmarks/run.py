@@ -13,8 +13,8 @@ import time
 import traceback
 
 from benchmarks import (fig5_gridsearch, kernel_bench, scenario_grid,
-                        sim_ttft, table3_kv_throughput, table5_profile,
-                        table6_deployment)
+                        serve_live, sim_ttft, table3_kv_throughput,
+                        table5_profile, table6_deployment)
 
 MODULES = {
     "table3": table3_kv_throughput,    # Table 3 / Figure 2 (Φ_kv by model)
@@ -24,6 +24,7 @@ MODULES = {
     "sim": sim_ttft,                   # §4.3 TTFT/egress via simulator
     "grid": scenario_grid,             # burst x skew x fluct x topology grid
     "kernels": kernel_bench,           # supporting kernel micro-bench
+    "serve": serve_live,               # live launcher + policy/actual x-val
 }
 
 

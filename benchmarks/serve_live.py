@@ -1,0 +1,43 @@
+"""Live-path guard: run the multi-region launcher end to end with
+``--cross-validate`` and assert the shared control plane holds — a frozen
+3-region smoke run must agree with the simulator replay on EVERY request's
+route, and int8 wire compression must measure > 1x.  Drift here fails
+``benchmarks.run --smoke`` (and thus ``tests/test_bench_smoke.py``) instead
+of rotting silently.
+
+    PYTHONPATH=src python -m benchmarks.serve_live [--smoke]
+"""
+import time
+
+from benchmarks.common import emit
+
+
+def main(smoke: bool = False):
+    from repro.launch.serve import build_parser, run_serve
+
+    argv = ["--arch", "kimi-linear-1t", "--smoke",
+            "--requests", "12" if smoke else "24",
+            "--batches", "3",
+            "--pd-clusters", "3",
+            "--threshold", "64",
+            "--link-gbps", "10.0",
+            "--pd-mesh-gbps", "10.0",
+            "--wire-compression",
+            "--freeze-thresholds",
+            "--cross-validate"]
+    t0 = time.time()
+    report = run_serve(build_parser().parse_args(argv))
+    us = (time.time() - t0) * 1e6
+    cv = report["cross_validate"]
+    dm = report["deployment"]
+    emit("serve/route_agreement", us,
+         f"{cv['route_agreement']:.3f} ({cv['requests']}req)")
+    emit("serve/wire_compression", us, f"{dm['wire_compression']:.2f}x")
+    emit("serve/egress_ratio", us, f"{cv['egress_bytes']['ratio']:.2f}")
+    assert cv["route_agreement"] == 1.0, (
+        f"frozen-threshold route agreement broke: {cv['mismatches']}")
+    assert dm["wire_compression"] > 1.0, "int8 wire compression inactive"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
 """End-to-end driver (deliverable): serve a small hybrid model with batched
-requests through the full two-cluster PrfaaS-PD deployment — length-based
-routing, real prefill on the "PrfaaS cluster", byte-accurate KV transfer
-over a simulated Ethernet link (layer-wise pipelined), continuous-batching
-decode on the "PD cluster", prefix-cache hits on follow-up turns.
+requests through the full two-cluster PrfaaS-PD deployment — routing by the
+SAME ``core.router.Router`` the cluster simulator uses, real prefill on the
+"PrfaaS cluster", byte-accurate KV transfer over a simulated Ethernet link
+(layer-wise pipelined), continuous-batching decode on the "PD cluster",
+prefix-cache hits on follow-up turns.  (For N regions, int8 KV on the wire,
+and simulator cross-validation, see ``python -m repro.launch.serve``.)
 
     PYTHONPATH=src python examples/serve_cross_dc.py
 """
@@ -57,8 +59,10 @@ print(f"\nsummary: {m['requests']} requests, {m['offloaded']} offloaded, "
       f"mean TTFT {m['ttft_mean_s']*1e3:.1f} ms, "
       f"cross-DC KV {m['kv_bytes_total']} bytes, "
       f"hit rates {m['cache_hit_rate']}")
-# the deployment's inter-DC link is the same exact fair-share flow engine
-# the cluster simulator uses (core.transfer.Link): concurrent KV flows in a
-# prefill batch contend and are solved by progressive filling
+# the deployment's inter-DC links and routing policy are the same code the
+# cluster simulator runs (core.transfer.LinkTopology + core.router.Router):
+# concurrent KV flows in a prefill batch contend on the exact fair-share
+# solver, and per-home thresholds adapt from each region's own congestion
 print(f"link: {dep.link.sent_bytes:.0f} bytes on the wire, "
-      f"busy {dep.link.busy_time*1e3:.1f} ms (virtual)")
+      f"busy {dep.link.busy_time*1e3:.1f} ms (virtual), "
+      f"thresholds {m['thresholds']}")

@@ -14,7 +14,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import AttentionSpec, ModelConfig
 
 MIB = 2 ** 20
 
@@ -137,7 +137,7 @@ class AnalyticProfile(Profile):
         f = 2.0 * cfg.active_param_count() * l
         for *_, b in cfg.iter_blocks():
             m = b.mixer
-            if hasattr(m, "q_heads"):        # AttentionSpec
+            if isinstance(m, AttentionSpec):
                 eff = min(l, m.window) if m.window else l
                 # q@k^T + p@v over causal half
                 f += 2.0 * 2.0 * m.q_heads * m.head_dim * l * eff / 2.0

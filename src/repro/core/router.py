@@ -19,6 +19,13 @@ link topology, so an unlinked region's cache is never chosen.  The classic
 two-cluster deployment is ``home == PD`` with matches {PRFAAS, PD} and
 reproduces the original decision table exactly.
 
+This Router is the ONE routing policy in the repo: both the discrete-event
+``core.simulator.PrfaasSimulator`` and the live JAX
+``serving.CrossDCDeployment`` instantiate it over a
+``transfer.LinkTopology`` — which is what makes ``launch.serve
+--cross-validate`` (replaying a live run's arrivals through the simulator)
+a meaningful policy/actual check.
+
 The threshold t is re-derived from the live profile whenever the congestion
 monitor triggers (egress utilization / queue depth), which is the paper's
 "short-term routing adjustment".  The threshold is a *per-home vector*:

@@ -81,6 +81,19 @@ identical arrival trace) for apples-to-apples equivalence testing; the event
 engine reproduces its metrics within a few percent while running one to two
 orders of magnitude faster.
 
+Wire compression and live cross-validation
+------------------------------------------
+``SystemConfig.kv_wire_compression`` (the measured int8 quantized/raw byte
+ratio, see ``models.kvcache.wire_compression_ratio``) is applied at FLOW
+granularity: every per-request prefill-KV flow and cross-cache copy
+carries ``S_kv / ratio`` bytes, so link telemetry, congestion feedback,
+and egress metrics all see the compressed stream.  ``inject_trace``
+replays an external arrival trace — the live deployment's recorded
+arrivals — through the simulator, which is how ``launch.serve
+--cross-validate`` checks per-request route agreement between this policy
+model and the actual ``serving.CrossDCDeployment`` (both drive the same
+``core.router.Router`` over a ``core.transfer.LinkTopology``).
+
 Produces the paper's §4.3 observables: throughput, mean/P90 TTFT, egress
 bandwidth (including cross-cache transfer bytes), offload fraction, cache
 hit rates, queue depths — globally and per PD cluster.
@@ -332,6 +345,17 @@ class PrfaasSimulator:
         self._route_tokens: Dict[str, List[int]] = {
             name: [0, 0] for name in self._pd_names}
         self._egress_t0 = 0.0         # topology sent-bytes at warmup end
+        # int8 KV on the wire, at flow granularity: every per-request link
+        # flow (prefill KV and cross-cache copies) carries S_kv divided by
+        # the measured quantized/raw ratio (SystemConfig.kv_wire_compression,
+        # 1.0 = off -> byte-identical to the uncompressed simulator)
+        if system.kv_wire_compression < 1.0:
+            raise ValueError("kv_wire_compression must be >= 1.0 "
+                             f"(got {system.kv_wire_compression})")
+        self._wire_comp = system.kv_wire_compression
+        # external arrival trace (policy/actual cross-validation): replaces
+        # the generated MMPP trace when set via ``inject_trace``
+        self._external_trace: Optional[List[Request]] = None
 
     def _build_topology(self) -> LinkTopology:
         """Star topology PrfaaS->each region (+ optional PD mesh).  The
@@ -439,10 +463,38 @@ class PrfaasSimulator:
         self.all_requests.append(r)
         return r
 
+    def inject_trace(self, entries) -> List[Request]:
+        """Replay an EXTERNAL arrival trace instead of generating one —
+        the policy/actual cross-validation path (``launch.serve
+        --cross-validate``): the live deployment's recorded arrivals
+        ``(arrival_s, total_len, session_id, home)`` are replayed through
+        the simulator so per-request routing decisions can be compared.
+        Entries must be sorted by arrival time; homes must name existing
+        PD clusters.  Returns the created simulator ``Request``s (in trace
+        order, matching the live run's request order)."""
+        reqs: List[Request] = []
+        prev = -math.inf
+        for arrival, total_len, session, home in entries:
+            if home not in self._pd_names:
+                raise ValueError(f"unknown home cluster {home!r}; "
+                                 f"expected one of {self._pd_names}")
+            if arrival < prev:
+                raise ValueError("trace entries must be sorted by arrival")
+            prev = arrival
+            reqs.append(Request(self._next_rid, float(arrival),
+                                int(total_len), int(session), home=home))
+            self._next_rid += 1
+        self._external_trace = reqs
+        return reqs
+
     def _generate_arrivals(self) -> List[Request]:
         """Exact MMPP arrival trace via thinning over the piecewise-constant
         rate — both engines consume the identical trace, so equivalence
-        differences come from time discretization only."""
+        differences come from time discretization only.  An injected
+        external trace (``inject_trace``) takes precedence."""
+        if self._external_trace is not None:
+            self.all_requests.extend(self._external_trace)
+            return list(self._external_trace)
         sim, w = self.sim, self.w
         out: List[Request] = []
         lam_max = sim.arrival_rate * max(w.burst_factor, 1.0)
@@ -464,27 +516,24 @@ class PrfaasSimulator:
 
     def _prefill_wire_bytes(self, req: Request) -> float:
         """KV bytes for a PrfaaS-prefilled request crossing the link (the
-        already-cached prefix need not be resent)."""
+        already-cached prefix need not be resent), after int8 wire
+        compression (``SystemConfig.kv_wire_compression``)."""
         prof = self._wire_profile()
         nbytes = prof.s_kv(req.total_len)
         if req.decision.cached_tokens:
             nbytes -= prof.s_kv(req.decision.cached_tokens)
-        return max(nbytes, 1.0)
+        return max(nbytes / self._wire_comp, 1.0)
 
     def _cross_cache_bytes(self, decision: RoutingDecision) -> float:
         """Cached-prefix KV bytes copied between clusters when the router
-        reuses the best cache anywhere (abundant-bandwidth regime)."""
-        return max(self._wire_profile().s_kv(decision.cached_tokens), 1.0)
+        reuses the best cache anywhere (abundant-bandwidth regime) — also
+        compressed on the wire."""
+        return max(self._wire_profile().s_kv(decision.cached_tokens)
+                   / self._wire_comp, 1.0)
 
     def _match_eligible(self, home: str, name: str) -> bool:
-        """A cluster's cache is reachable from ``home`` when it is the home
-        itself, PrfaaS, or another region with pair links to both possible
-        prefill targets (home and PrfaaS) — a star-only topology cannot
-        ship another region's cache anywhere useful."""
-        if name == home or name == PRFAAS:
-            return True
-        return (self.topology.has_link(name, home)
-                and self.topology.has_link(name, PRFAAS))
+        """Shared reachability rule: ``LinkTopology.cache_reachable``."""
+        return self.topology.cache_reachable(home, name, hub=PRFAAS)
 
     def _prefill_pool(self, cluster: str):
         return self.prfaas_pool if cluster == PRFAAS \

@@ -37,8 +37,12 @@ class SystemConfig:
     b_out: float                  # PrfaaS egress bandwidth (bytes/s)
     threshold: float              # routing threshold t (tokens); inf => no offload
     # beyond-paper: int8 KV quantization on the inter-DC wire (KIVI/CacheGen
-    # family, paper §5) — halves S_kv on the link, doubling the bandwidth-
-    # bound Θ_prfaas ceiling. 1.0 = off (paper-faithful).
+    # family, paper §5) — divides S_kv on the link, raising the bandwidth-
+    # bound Θ_prfaas ceiling. NOT a free parameter: set it to the MEASURED
+    # quantized/raw byte ratio of a real prefill cache
+    # (``models.kvcache.wire_compression_ratio`` /
+    # ``CrossDCDeployment.measured_compression``). 1.0 = off
+    # (paper-faithful); the simulator charges the same ratio per flow.
     kv_wire_compression: float = 1.0
     # multi-cluster deployments: per-PD-cluster instance counts (must sum to
     # n_p / n_d).  None = one PD cluster holding everything (paper baseline).

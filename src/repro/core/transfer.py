@@ -445,6 +445,19 @@ class LinkTopology:
     def has_link(self, a: str, b: str) -> bool:
         return a != b and self._key(a, b) in self._links
 
+    def cache_reachable(self, home: str, name: str,
+                        hub: str = "prfaas") -> bool:
+        """Is cluster ``name``'s prefix cache usable by a request whose home
+        is ``home``?  The home itself and the ``hub`` (PrfaaS) always are;
+        another region only with pair links to BOTH possible prefill
+        targets (home and hub) — a star-only topology cannot ship another
+        region's cache anywhere useful.  The ONE reachability rule shared
+        by the simulator and the live deployment (route agreement in
+        ``launch.serve --cross-validate`` depends on it)."""
+        if name == home or name == hub:
+            return True
+        return self.has_link(name, home) and self.has_link(name, hub)
+
     @property
     def links(self) -> Dict[tuple, Link]:
         return self._links

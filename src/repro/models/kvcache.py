@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import AttentionSpec, LinearSpec, ModelConfig
 
 
 def kv_bytes(cfg: ModelConfig, seq_len: int, dtype_bytes: int = 2) -> int:
@@ -26,10 +26,28 @@ def kv_bytes_incremental(cfg: ModelConfig, cached_len: int, total_len: int,
     layers always resend their (fixed-size) state snapshot."""
     full = kv_bytes(cfg, total_len, dtype_bytes)
     prior = kv_bytes(cfg, cached_len, dtype_bytes) if cached_len else 0
-    # linear states are included in both -> add one state snapshot back
-    state = sum(b.mixer.state_bytes() for *_, b in cfg.iter_blocks()
-                if not hasattr(b.mixer, "q_heads"))
+    # linear states are included in both -> add one state snapshot back.
+    # Explicit spec predicate: a mixer is linear-state iff it IS a
+    # LinearSpec — duck-typing on a ``q_heads`` attribute misclassified any
+    # non-attention mixer that happened to carry one (and would silently
+    # drop the state resend for it).
+    state = linear_state_bytes(cfg)
     return max(full - prior, 0) + (state if cached_len else 0)
+
+
+def linear_state_bytes(cfg: ModelConfig) -> int:
+    """Summed fixed-size recurrent-state bytes over the model's linear/SSM
+    blocks (the O(1) part of S_kv that every incremental transfer resends)."""
+    total = 0
+    for *_, b in cfg.iter_blocks():
+        m = b.mixer
+        if isinstance(m, AttentionSpec):
+            continue
+        if not isinstance(m, LinearSpec) and not hasattr(m, "state_bytes"):
+            raise TypeError(f"unknown mixer spec {type(m).__name__!r}: "
+                            "expected AttentionSpec or LinearSpec")
+        total += m.state_bytes()
+    return total
 
 
 def cache_num_bytes(caches) -> int:
@@ -52,16 +70,17 @@ def flatten_cache_for_transfer(caches):
 def quantize_cache_for_wire(caches):
     """int8-quantize K/V/latent leaves for the inter-DC wire (KIVI-style
     per-tensor symmetric). Recurrent fp32 states ship uncompressed (tiny,
-    numerically sensitive). Returns (wire pytree, bytes)."""
+    numerically sensitive). The scale is stored in the leaf's original
+    dtype so dequantization restores it. Returns (wire pytree, bytes)."""
     import jax.numpy as jnp
     from repro.distributed.collectives import quantize_int8
 
     def enc(path, leaf):
         name = jax.tree_util.keystr(path)
-        if leaf.dtype == jnp.bfloat16 and any(
+        if leaf.dtype in (jnp.bfloat16, jnp.float32) and any(
                 k in name for k in ("'k'", "'v'", "'ckv'", "'kpe'")):
             q, scale = quantize_int8(leaf.astype(jnp.float32))
-            return {"q": q, "scale": scale}
+            return {"q": q, "scale": scale.astype(leaf.dtype)}
         return leaf
 
     wire = jax.tree_util.tree_map_with_path(enc, caches)
@@ -73,13 +92,12 @@ def dequantize_cache_from_wire(wire):
     import jax.numpy as jnp
     from repro.distributed.collectives import dequantize_int8
 
-    def dec(leaf):
-        return leaf
-
     def walk(node):
         if isinstance(node, dict) and set(node) == {"q", "scale"}:
-            return dequantize_int8(node["q"], node["scale"]).astype(
-                jnp.bfloat16)
+            scale = node["scale"]
+            return dequantize_int8(node["q"],
+                                   scale.astype(jnp.float32)).astype(
+                scale.dtype)
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
         if isinstance(node, list):
@@ -87,3 +105,13 @@ def dequantize_cache_from_wire(wire):
         return node
 
     return walk(wire)
+
+
+def wire_compression_ratio(caches) -> float:
+    """MEASURED raw/quantized byte ratio of a real prefill cache pytree —
+    the value ``SystemConfig.kv_wire_compression`` should carry, instead of
+    a hand-picked constant: the throughput model and simulator then charge
+    exactly the bytes the quantized pytree actually puts on the wire."""
+    raw = cache_num_bytes(caches)
+    _, wire = quantize_cache_for_wire(caches)
+    return raw / max(wire, 1)

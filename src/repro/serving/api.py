@@ -12,14 +12,20 @@ class Request:
     rid: int
     tokens: np.ndarray                 # prompt token ids (int32)
     max_new_tokens: int = 32
+    home: str = ""                     # originating PD region ("" = first)
     # timeline (seconds; wall for compute, virtual for the inter-DC link)
     arrival: float = 0.0
     route: str = ""
     cached_tokens: int = 0
     prefill_s: float = 0.0
     transfer_s: float = 0.0
-    kv_bytes: int = 0
+    kv_bytes: int = 0                  # bytes on the wire (quantized if on)
+    kv_bytes_raw: int = 0              # raw cache bytes before compression
+    cross_kv_bytes: float = 0.0        # cross-cluster cached-prefix copy
     ttft_s: float = 0.0
+    # the core.router.RoutingDecision that placed this request (set by
+    # CrossDCDeployment._route; None until routed)
+    decision: Optional[object] = None
 
 
 @dataclass

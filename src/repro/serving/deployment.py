@@ -1,29 +1,59 @@
-"""Two-cluster PrfaaS-PD deployment, in-process: real token generation with
-the KVCache crossing a simulated commodity-Ethernet link.
+"""Multi-region PrfaaS-PD deployment, in-process, sharing ONE control plane
+with the cluster simulator.
 
-  * "PrfaaS cluster"  — a PrefillEngine (long requests, l > t)
-  * "PD cluster"      — a PrefillEngine (short requests) + DecodeEngine
-  * inter-DC link     — virtual-clock byte-accurate transfer with layer-wise
-                        pipelining (transfer overlaps prefill compute)
+Topology (``DeploymentConfig.pd_clusters`` = N regions):
 
-The router applies the paper's length-threshold + cache-aware policy using a
-real HybridPrefixCache per cluster. This is the live-system mirror of
-``core.simulator`` (which scales the same logic to cluster counts no single
-process could execute).
+  * "PrfaaS cluster"   — a shared ``PrefillEngine`` (long requests, l > t)
+                         with its own ``HybridPrefixCache``
+  * N "PD regions"     — each with its own ``DecodeEngine`` and
+                         ``HybridPrefixCache`` (local prefill runs on a
+                         shared PD ``PrefillEngine``: in-process the compute
+                         is identical, the policy state is per-region)
+  * inter-DC links     — a ``core.transfer.LinkTopology``: one exact
+                         fair-share ``Link`` per PrfaaS<->region star pair,
+                         plus an optional PD<->PD mesh for cross-region
+                         cache copies.  Byte accounting uses the same
+                         virtual-clock flow solver as the simulator.
+
+The deployment contains NO routing policy of its own.  Route choice, cache
+placement, and threshold adaptation all go through ``core.router.Router``:
+each request's per-cluster prefix matches and its home pair-link telemetry
+are handed to ``Router.route(l, matches, signal, home=)``, and after every
+batch each region's aggregated congestion view (``LinkTopology.dest_signal``)
+is fed back through ``Router.observe_congestion(signal, home=)`` so per-home
+thresholds adapt during a live run — exactly the short-term loop the
+simulator runs.  ``launch.serve --cross-validate`` replays a live run's
+arrival trace through ``core.simulator.PrfaasSimulator`` and checks the two
+agree per request.
+
+int8 KV on the wire (``DeploymentConfig.wire_compression``): the quantized
+pytree from ``models.kvcache.quantize_cache_for_wire`` is what actually
+crosses the links — flow bytes are measured from the quantized leaves, and
+the cache is dequantized before decode admission.  The running
+quantized/raw ratio (``measured_compression``) is the value
+``SystemConfig.kv_wire_compression`` should carry in the analytic model and
+the simulator.  (One in-process fidelity note: offloaded requests reship
+the FULL cache even on a prefix hit — the per-region decode engines share
+no storage — so live egress upper-bounds the simulator's incremental
+``S_kv(total) - S_kv(cached)`` charge.)
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.blockpool import BlockPool
+from repro.core.hardware import CHIPS, AnalyticProfile
 from repro.core.prefix_cache import HybridPrefixCache
-from repro.core.transfer import Link
+from repro.core.router import PD, PRFAAS, Router, RouterConfig, RoutingDecision
+from repro.core.throughput_model import SystemConfig, ThroughputModel
+from repro.core.transfer import Link, LinkTopology, star_pairs
+from repro.core.workload import Workload
 from repro.models import Model
-from repro.models.kvcache import cache_num_bytes
+from repro.models.kvcache import (cache_num_bytes, dequantize_cache_from_wire,
+                                  kv_bytes, quantize_cache_for_wire)
 from repro.serving.api import Request, Response
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
                                   slice_request_cache)
@@ -31,118 +61,242 @@ from repro.serving.engine import (DecodeEngine, PrefillEngine,
 
 @dataclass
 class DeploymentConfig:
-    threshold: int = 256               # routing threshold t (tokens)
-    link_gbps: float = 1.0             # inter-DC link
+    threshold: int = 256               # base routing threshold t (tokens)
+    link_gbps: float = 1.0             # PrfaaS->region star links (shared)
+    pd_link_gbps: Optional[Tuple[float, ...]] = None  # per-region override
+    pd_mesh_gbps: float = 0.0          # PD<->PD links (0 = star only)
+    pd_clusters: int = 1               # regional PD clusters
     decode_slots: int = 8
     capacity: int = 2048               # decode KV capacity per slot
     block_tokens: int = 16
     pool_blocks: int = 4096
     layerwise_pipeline: bool = True
+    wire_compression: bool = False     # int8 KV quantization on the wire
+    adapt_thresholds: bool = True      # live per-home congestion feedback
+    chip: str = "h200"                 # AnalyticProfile chip for the Router
+    chips_per_instance: int = 8
 
 
 class CrossDCDeployment:
     def __init__(self, model: Model, params, cfg: DeploymentConfig,
                  prfaas_model: Optional[Model] = None,
-                 prfaas_params=None):
+                 prfaas_params=None,
+                 router_cfg: Optional[RouterConfig] = None):
         self.model = model
         self.cfg = cfg
+        k = cfg.pd_clusters
+        if k < 1:
+            raise ValueError("pd_clusters must be >= 1")
+        # region naming matches the simulator: the classic two-cluster
+        # deployment keeps the legacy "pd" name
+        self.pd_names = [PD] if k == 1 else [f"pd{i}" for i in range(k)]
         self.prfaas = PrefillEngine(prfaas_model or model,
                                     prfaas_params if prfaas_params is not None
                                     else params)
         self.pd_prefill = PrefillEngine(model, params)
-        self.decode = DecodeEngine(model, params, cfg.decode_slots,
-                                   cfg.capacity)
-        self.caches = {
-            "prfaas": HybridPrefixCache(
-                BlockPool(cfg.pool_blocks, cfg.block_tokens, 1 << 16), 0, 1),
-            "pd": HybridPrefixCache(
-                BlockPool(cfg.pool_blocks, cfg.block_tokens, 1 << 16), 0, 1),
-        }
+        self.decoders: Dict[str, DecodeEngine] = {
+            name: DecodeEngine(model, params, cfg.decode_slots, cfg.capacity)
+            for name in self.pd_names}
+        self.caches: Dict[str, HybridPrefixCache] = {PRFAAS: self._new_cache()}
+        for name in self.pd_names:
+            self.caches[name] = self._new_cache()
+
+        # ------- shared control plane: the simulator's Router + topology ---
+        star = (list(cfg.pd_link_gbps) if cfg.pd_link_gbps is not None
+                else [cfg.link_gbps] * k)
+        if len(star) != k:
+            raise ValueError("pd_link_gbps must have one entry per region")
+        profile = AnalyticProfile(model.cfg, CHIPS[cfg.chip],
+                                  cfg.chips_per_instance)
+        self.throughput_model = ThroughputModel(profile, profile, Workload())
+        self.system = SystemConfig(1, k, k, sum(star) * 1e9 / 8.0,
+                                   float(cfg.threshold))
+        self.router = Router(self.throughput_model, self.system, router_cfg)
+        pairs = star_pairs(PRFAAS, self.pd_names,
+                           mesh=cfg.pd_mesh_gbps > 0 and k > 1)
+        gbps = star + [cfg.pd_mesh_gbps] * (len(pairs) - k)
+        self.topology = LinkTopology.build([PRFAAS] + self.pd_names, pairs,
+                                           gbps)
+
         self.completed: List[Request] = []
-        # exact fair-share flow model of the inter-DC link (virtual clock):
-        # concurrent transfers within a prefill batch contend for bandwidth
-        # and are solved by progressive filling, not serialized
-        self.link = Link(cfg.link_gbps * 1e9)
         self.virtual_now = 0.0
+        self._wire_raw = 0.0           # raw bytes of caches put on the wire
+        self._wire_quant = 0.0         # their measured quantized bytes
+
+    def _new_cache(self) -> HybridPrefixCache:
+        return HybridPrefixCache(
+            BlockPool(self.cfg.pool_blocks, self.cfg.block_tokens, 1 << 16),
+            0, 1)
+
+    # ------------------------------------------------- two-cluster aliases
+    @property
+    def link(self) -> Link:
+        """First region's star link (the classic single inter-DC link)."""
+        return self.topology.link(PRFAAS, self.pd_names[0])
+
+    @property
+    def decode(self) -> DecodeEngine:
+        return self.decoders[self.pd_names[0]]
 
     # ------------------------------------------------------------- routing
-    def _route(self, req: Request) -> str:
-        matches = {name: c.match(list(map(int, req.tokens)))
-                   for name, c in self.caches.items()}
-        l_pd = matches["pd"]
-        if len(req.tokens) - l_pd <= self.cfg.threshold:
-            req.route, req.cached_tokens = "pd", l_pd
-        else:
-            req.route, req.cached_tokens = "prfaas", matches["prfaas"]
-        return req.route
+    def _route(self, req: Request) -> RoutingDecision:
+        home = req.home or self.pd_names[0]
+        if home not in self.pd_names:
+            raise ValueError(f"unknown home region {home!r}; "
+                             f"expected one of {self.pd_names}")
+        req.home = home
+        toks = list(map(int, req.tokens))
+        matches = {name: c.match(toks) for name, c in self.caches.items()
+                   if self.topology.cache_reachable(home, name, hub=PRFAAS)}
+        decision = self.router.route(len(toks), matches,
+                                     self.topology.pair_signal(PRFAAS, home),
+                                     home=home)
+        req.decision = decision
+        req.route = decision.target
+        req.cached_tokens = decision.cached_tokens
+        return decision
 
     # ------------------------------------------------------------ lifecycle
     def submit_batch(self, reqs: List[Request]) -> Dict[int, Response]:
         """Serve a batch of requests end-to-end; returns responses."""
-        groups = {"prfaas": [], "pd": []}
+        groups: Dict[str, List[Request]] = {PRFAAS: []}
+        groups.update({name: [] for name in self.pd_names})
         for r in reqs:
-            groups[self._route(r)].append(r)
+            groups[self._route(r).target].append(r)
 
         for cluster, rs in groups.items():
             if not rs:
                 continue
-            engine = self.prfaas if cluster == "prfaas" else self.pd_prefill
+            engine = self.prfaas if cluster == PRFAAS else self.pd_prefill
             # pad to the longest prompt in the group (one prefill batch)
             maxlen = max(len(r.tokens) for r in rs)
             toks = np.zeros((len(rs), maxlen), np.int32)
             for i, r in enumerate(rs):
                 toks[i, :len(r.tokens)] = r.tokens   # left-aligned
             first, caches, wall = engine.prefill(toks)
-            self.link.advance(self.virtual_now)   # sync link clock to batch
-            flows = {}
+            self.topology.advance(self.virtual_now)  # sync link clocks
+            flows: Dict[int, list] = {}
             for i, r in enumerate(rs):
                 r.prefill_s = wall
-                one = slice_request_cache(caches, i)
-                r.kv_bytes = cache_num_bytes(one)
-                if cluster == "prfaas":
+                payload = slice_request_cache(caches, i)
+                r.kv_bytes_raw = cache_num_bytes(payload)
+                r.transfer_s = 0.0
+                fl = []
+                if cluster == PRFAAS:
+                    if self.cfg.wire_compression:
+                        # the quantized pytree IS what crosses the link:
+                        # bytes come from the quantized leaves, and the
+                        # cache is dequantized before decode admission
+                        payload, nbytes = quantize_cache_for_wire(payload)
+                        self._wire_raw += r.kv_bytes_raw
+                        self._wire_quant += nbytes
+                    else:
+                        nbytes = r.kv_bytes_raw
+                    r.kv_bytes = nbytes
                     # layer-wise pipelined: KV becomes wire-eligible as
                     # prefill computes (linear ramp over the prefill);
                     # unpipelined: the flow only starts once prefill ends.
                     # Either way the batch's flows contend on the exact
-                    # fair-share link solver.
+                    # fair-share pair link solver.
                     start = (self.virtual_now if self.cfg.layerwise_pipeline
                              else self.virtual_now + wall)
-                    flows[r.rid] = self.link.submit(
-                        max(r.kv_bytes, 1.0), start,
-                        ramp_end=self.virtual_now + wall)
+                    fl.append(("kv", PRFAAS, r.home, self.topology.submit(
+                        PRFAAS, r.home, max(float(nbytes), 1.0), start,
+                        ramp_end=self.virtual_now + wall)))
                 else:
-                    r.transfer_s = 0.0
+                    r.kv_bytes = r.kv_bytes_raw      # intra-cluster RDMA
+                d = r.decision
+                if d.cross_cache_transfer and d.cached_tokens:
+                    # cached prefix lives in another cluster: the copy is
+                    # already materialized (eager flow), charged to the
+                    # owner<->target pair link, compressed like the rest of
+                    # the wire traffic
+                    nb = float(kv_bytes(self.model.cfg, d.cached_tokens))
+                    if self.cfg.wire_compression:
+                        nb /= self.measured_compression()
+                    nb = max(nb, 1.0)
+                    r.cross_kv_bytes = nb
+                    fl.append(("copy", d.cache_cluster, d.target,
+                               self.topology.submit(
+                                   d.cache_cluster, d.target, nb,
+                                   self.virtual_now,
+                                   ramp_end=self.virtual_now)))
+                flows[r.rid] = fl
                 self.caches[cluster].insert(list(map(int, r.tokens)))
-                self.decode.admit(r, int(first[i]), one, len(r.tokens))
-            if flows:
-                self.link.run_until_idle()
-                floor = 1.0 / max(1, self.model.cfg.n_layers)
-                for r in rs:
-                    f = flows.get(r.rid)
-                    if f is None:
-                        continue
-                    exposed = f.done_time - (self.virtual_now + wall)
-                    # the last layer's KV can never overlap its own compute
-                    serial_tail = f.total_bytes * floor \
-                        / self.link.current_capacity()
-                    r.transfer_s = max(exposed, serial_tail)
+                if self.cfg.wire_compression and cluster == PRFAAS:
+                    payload = dequantize_cache_from_wire(payload)
+                self.decoders[r.home].admit(r, int(first[i]), payload,
+                                            len(r.tokens))
+            if any(flows.values()):
+                self.topology.run_until_idle()
             for r in rs:
+                exposure = 0.0
+                for kind, a, b, f in flows.get(r.rid, ()):
+                    tail = 0.0
+                    if kind == "kv":
+                        # the pipelined prefill KV's last layer can never
+                        # overlap its own compute (eager "copy" flows are
+                        # already materialized: no serial tail)
+                        floor = 1.0 / max(1, self.model.cfg.n_layers)
+                        tail = f.total_bytes * floor \
+                            / self.topology.link(a, b).current_capacity()
+                    exposed = f.done_time - (self.virtual_now + wall)
+                    exposure = max(exposure, exposed, tail)
+                if flows.get(r.rid):
+                    r.transfer_s = max(exposure, 0.0)
                 r.ttft_s = r.prefill_s + r.transfer_s
             self.virtual_now += wall
-        self.decode.run_until_drained()
+
+        # live short-term loop: every region feeds its OWN aggregated
+        # congestion view back into the shared Router, adapting that home's
+        # threshold alone — identical to the simulator's control epoch
+        if self.cfg.adapt_thresholds:
+            for name in self.pd_names:
+                self.router.observe_congestion(
+                    self.topology.dest_signal(name), home=name)
+
+        out: Dict[int, Response] = {}
+        for dec in self.decoders.values():
+            dec.run_until_drained()
+            out.update(dec.outputs)
         self.completed.extend(reqs)
-        return self.decode.outputs
+        return out
 
     # -------------------------------------------------------------- metrics
+    def measured_compression(self) -> float:
+        """Running measured raw/quantized byte ratio of the KV actually put
+        on the wire (1.0 until a quantized flow has shipped)."""
+        if self._wire_quant > 0:
+            return self._wire_raw / self._wire_quant
+        return 1.0
+
     def metrics(self) -> dict:
         done = self.completed
         ttft = [r.ttft_s for r in done]
+        per_region = {}
+        for name in self.pd_names:
+            rs = [r for r in done if r.home == name]
+            per_region[name] = {
+                "requests": len(rs),
+                "offloaded": sum(1 for r in rs if r.route == PRFAAS),
+                "ttft_mean_s": float(np.mean([r.ttft_s for r in rs]))
+                if rs else 0.0,
+                "threshold": self.router.threshold_for(name),
+                "cache_hit_rate": self.caches[name].hit_rate(),
+            }
         return {
             "requests": len(done),
-            "offloaded": sum(1 for r in done if r.route == "prfaas"),
+            "offloaded": sum(1 for r in done if r.route == PRFAAS),
             "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
             "kv_bytes_total": sum(r.kv_bytes for r in done
-                                  if r.route == "prfaas"),
+                                  if r.route == PRFAAS),
             "cache_hit_rate": {k: c.hit_rate()
                                for k, c in self.caches.items()},
+            "thresholds": {n: self.router.threshold_for(n)
+                           for n in self.pd_names},
+            "router_decisions": dict(self.router.decisions),
+            "cross_transfers": self.router.cross_transfers,
+            "wire_compression": self.measured_compression(),
+            "clusters": per_region,
+            "links": self.topology.pair_stats(),
         }

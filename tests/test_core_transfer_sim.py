@@ -104,20 +104,26 @@ def _prop_setup():
 
 class TestTopologyProperties:
     @settings(max_examples=6, deadline=None)
-    @given(st.integers(1, 3), st.integers(0, 1000), st.floats(0.0, 0.5))
-    def test_bytes_sent_per_pair_equal_bytes_charged(self, k, seed, roam):
+    @given(st.integers(1, 3), st.integers(0, 1000), st.floats(0.0, 0.5),
+           st.sampled_from([1.0, 2.6073844964237387]))
+    def test_bytes_sent_per_pair_equal_bytes_charged(self, k, seed, roam,
+                                                     comp):
         """Every pair link's sent bytes (after draining) equal the bytes
         the routing decisions charged to that pair: prefill KV flows on
         the (PrfaaS, home) star link, cross-cache copies on the
         (cache owner, prefill target) pair — including roaming copies on
-        the PD<->PD mesh."""
+        the PD<->PD mesh.  With int8 wire compression on
+        (``kv_wire_compression`` = a measured quantized/raw ratio), the
+        expected bytes are recomputed here from the PROFILE directly
+        (S_kv / ratio), independent of the simulator's own helpers."""
         tm, sc, rate = _prop_setup()
         w = Workload(session_prob=0.5)
-        if k > 1:
-            sc = SystemConfig(sc.n_prfaas, sc.n_p, sc.n_d, sc.b_out,
-                              sc.threshold,
-                              n_p_clusters=tuple(split_even(sc.n_p, k)),
-                              n_d_clusters=tuple(split_even(sc.n_d, k)))
+        sc = SystemConfig(sc.n_prfaas, sc.n_p, sc.n_d, sc.b_out,
+                          sc.threshold, kv_wire_compression=comp,
+                          n_p_clusters=tuple(split_even(sc.n_p, k))
+                          if k > 1 else None,
+                          n_d_clusters=tuple(split_even(sc.n_d, k))
+                          if k > 1 else None)
         sim = PrfaasSimulator(tm, sc, w, SimConfig(
             arrival_rate=0.4 * rate, sim_time=60.0, seed=seed,
             engine="event", pool_blocks=2_000_000, pd_clusters=k,
@@ -126,6 +132,7 @@ class TestTopologyProperties:
         sim.run()
         sim.topology.run_until_idle()            # drain in-flight flows
         charged: dict = {}
+        prof = tm.prfaas_profile
 
         def _charge(a, b, nbytes):
             key = f"{min(a, b)}|{max(a, b)}"
@@ -135,10 +142,13 @@ class TestTopologyProperties:
             if r.decision is None or r.prefill_start < 0:
                 continue                         # never started: no flows
             if r.decision.target == PRFAAS:
-                _charge(PRFAAS, r.home, sim._prefill_wire_bytes(r))
+                nb = prof.s_kv(r.total_len)
+                if r.decision.cached_tokens:
+                    nb -= prof.s_kv(r.decision.cached_tokens)
+                _charge(PRFAAS, r.home, max(nb / comp, 1.0))
             if r.decision.cross_cache_transfer and r.decision.cached_tokens:
                 _charge(r.decision.cache_cluster, r.decision.target,
-                        sim._cross_cache_bytes(r.decision))
+                        max(prof.s_kv(r.decision.cached_tokens) / comp, 1.0))
         stats = sim.topology.pair_stats()
         for pair, s in stats.items():
             assert s["sent_bytes"] == pytest.approx(

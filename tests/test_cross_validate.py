@@ -1,0 +1,106 @@
+"""Policy/actual cross-validation: the live multi-region deployment and the
+discrete-event simulator share ONE control plane (``core.router.Router``
+over a ``core.transfer.LinkTopology``), so a live run's arrival trace
+replayed through ``PrfaasSimulator`` must reproduce its routing decisions —
+exactly when congestion feedback is frozen, within tolerance when live.
+
+Also pins the wire-compression byte property on the LIVE path: every pair
+link's sent bytes equal the measured quantized cache bytes the deployment
+put on it (the deployment-side extension of the PR 3 simulator property
+harness).
+"""
+import numpy as np
+import pytest
+
+from repro.core import PRFAAS
+
+pytestmark = pytest.mark.live      # jits real (smoke) models
+
+
+def _run(freeze: bool, k: int = 3, compression: bool = True, seed: int = 0,
+         requests: int = 12):
+    from repro.launch.serve import build_parser, run_serve
+
+    argv = ["--arch", "kimi-linear-1t", "--smoke",
+            "--requests", str(requests), "--batches", "3",
+            "--pd-clusters", str(k), "--threshold", "64",
+            "--link-gbps", "10.0", "--pd-mesh-gbps", "10.0",
+            "--seed", str(seed), "--cross-validate"]
+    if compression:
+        argv.append("--wire-compression")
+    if freeze:
+        argv.append("--freeze-thresholds")
+    return run_serve(build_parser().parse_args(argv))
+
+
+class TestCrossValidation:
+    def test_frozen_thresholds_routes_agree_exactly(self):
+        """Deterministic seed + frozen congestion feedback: the simulator
+        replay matches the live run on EVERY request's route."""
+        rep = _run(freeze=True)
+        cv = rep["cross_validate"]
+        assert cv["requests"] == 12
+        assert cv["route_agreement"] == 1.0, cv["mismatches"]
+        # both sides really did offload some and keep some local
+        dec = rep["deployment"]["router_decisions"]
+        assert dec.get(PRFAAS, 0) > 0
+        assert sum(dec.values()) - dec.get(PRFAAS, 0) > 0
+        # frozen means frozen: no threshold moved on either side
+        assert set(cv["thresholds"]["live"].values()) == {64.0}
+        assert set(cv["thresholds"]["sim"].values()) == {64.0}
+
+    def test_live_feedback_within_tolerance(self):
+        """With the short-term loops running on both sides (telemetry
+        timing differs between wall clock and event clock), routing still
+        agrees on at least 90% of requests."""
+        rep = _run(freeze=False)
+        assert rep["cross_validate"]["route_agreement"] >= 0.9
+
+    def test_two_cluster_legacy_shape(self):
+        """k=1 is the classic two-cluster deployment: same control plane,
+        legacy 'pd' naming, exact agreement."""
+        rep = _run(freeze=True, k=1, compression=False)
+        cv = rep["cross_validate"]
+        assert cv["route_agreement"] == 1.0, cv["mismatches"]
+        assert list(cv["thresholds"]["live"]) == ["pd"]
+
+
+class TestLiveWireBytes:
+    @pytest.fixture(scope="class")
+    def served(self):
+        rep = _run(freeze=True)
+        return rep, rep.pop("_requests")
+
+    def test_pair_links_carry_measured_quantized_bytes(self, served):
+        """Acceptance property: with compression on, the bytes each pair
+        link reports sending equal the measured quantized cache bytes (plus
+        cross-cache copies) the routing decisions charged to that pair."""
+        rep, reqs = served
+        charged: dict = {}
+
+        def _charge(a, b, nbytes):
+            key = f"{min(a, b)}|{max(a, b)}"
+            charged[key] = charged.get(key, 0.0) + nbytes
+
+        for r in reqs:
+            d = r.decision
+            assert d is not None
+            if d.target == PRFAAS:
+                _charge(PRFAAS, r.home, float(r.kv_bytes))
+            if d.cross_cache_transfer and d.cached_tokens:
+                _charge(d.cache_cluster, d.target, r.cross_kv_bytes)
+        for pair, stats in rep["deployment"]["links"].items():
+            assert stats["sent_bytes"] == pytest.approx(
+                charged.get(pair, 0.0), rel=1e-6, abs=1.0), pair
+
+    def test_quantized_bytes_beat_raw_and_ratio_is_measured(self, served):
+        rep, reqs = served
+        offloaded = [r for r in reqs if r.route == PRFAAS]
+        assert offloaded
+        for r in offloaded:
+            assert 0 < r.kv_bytes < r.kv_bytes_raw
+        ratio = rep["deployment"]["wire_compression"]
+        assert ratio == pytest.approx(
+            sum(r.kv_bytes_raw for r in offloaded)
+            / sum(r.kv_bytes for r in offloaded))
+        assert 1.5 < ratio < 4.5          # f32 smoke K/V -> int8

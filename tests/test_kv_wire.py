@@ -1,0 +1,201 @@
+"""int8 KV wire compression + S_kv byte-accounting correctness.
+
+Fast (non-jit) coverage of the quantized wire format, the measured
+compression ratio the throughput model/simulator charge, and the
+``kv_bytes_incremental`` mixer-type predicate; the ``live``-marked tests
+exercise the same paths on REAL prefill caches from a jitted smoke model.
+"""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionSpec, BlockSpec, FFNSpec, GroupSpec,
+                                LinearSpec, ModelConfig)
+from repro.core import SystemConfig, ThroughputModel, Workload
+from repro.core.hardware import paper_h20_profile, paper_h200_profile
+from repro.models.kvcache import (cache_num_bytes, dequantize_cache_from_wire,
+                                  kv_bytes, kv_bytes_incremental,
+                                  linear_state_bytes, quantize_cache_for_wire,
+                                  wire_compression_ratio)
+
+RNG = np.random.default_rng(0)
+
+
+def _mixed_config() -> ModelConfig:
+    """One full-attn + one MLA + one linear block (the hybrid worst case for
+    mixer-type classification)."""
+    ffn = FFNSpec(kind="dense", d_ff=64)
+    blocks = (
+        BlockSpec(mixer=AttentionSpec(kind="full", q_heads=4, kv_heads=2,
+                                      head_dim=16), ffn=ffn),
+        BlockSpec(mixer=AttentionSpec(kind="mla", q_heads=4, kv_heads=4,
+                                      head_dim=16, mla_kv_rank=32,
+                                      mla_rope_dim=16), ffn=ffn),
+        BlockSpec(mixer=LinearSpec(kind="gla", heads=2, key_dim=16,
+                                   value_dim=16), ffn=ffn),
+    )
+    return ModelConfig(name="mixed-test", family="hybrid", d_model=64,
+                       vocab_size=256, groups=(GroupSpec(blocks, repeats=2),))
+
+
+class TestIncrementalBytes:
+    def test_mixed_config_identity(self):
+        """full-attn + MLA + linear mix: incremental bytes are exactly
+        S_kv(total) - S_kv(cached) plus ONE linear-state resend."""
+        cfg = _mixed_config()
+        state = linear_state_bytes(cfg)
+        # 2 repeats x 1 linear block contribute state; attention/MLA do not
+        assert state == 2 * LinearSpec(kind="gla", heads=2, key_dim=16,
+                                       value_dim=16).state_bytes()
+        inc = kv_bytes_incremental(cfg, 128, 512)
+        assert inc == kv_bytes(cfg, 512) - kv_bytes(cfg, 128) + state
+        # cold start: no prior cache, no state resend
+        assert kv_bytes_incremental(cfg, 0, 512) == kv_bytes(cfg, 512)
+
+    def test_explicit_predicate_not_duck_typing(self):
+        """A linear mixer that HAPPENS to carry a ``q_heads`` attribute must
+        still be classified by spec type (the old ``hasattr`` duck-typing
+        silently dropped its state resend)."""
+
+        class QHeadedLinear(LinearSpec):
+            q_heads = 4                      # red herring attribute
+
+        weird = QHeadedLinear(kind="gla", heads=2, key_dim=16, value_dim=16)
+        cfg = _mixed_config()
+        cfg = dataclasses.replace(cfg, groups=(GroupSpec(
+            (BlockSpec(mixer=weird, ffn=FFNSpec(kind="dense", d_ff=64)),),
+            repeats=1),))
+        assert hasattr(weird, "q_heads")     # the trap is armed
+        assert linear_state_bytes(cfg) == weird.state_bytes()
+        inc = kv_bytes_incremental(cfg, 64, 128)
+        assert inc == kv_bytes(cfg, 128) - kv_bytes(cfg, 64) \
+            + weird.state_bytes()
+
+    def test_unknown_mixer_rejected(self):
+        class Mystery:
+            pass
+
+        cfg = _mixed_config()
+        cfg = dataclasses.replace(cfg, groups=(GroupSpec(
+            (BlockSpec(mixer=Mystery(), ffn=FFNSpec(kind="dense", d_ff=64)),),
+            repeats=1),))
+        with pytest.raises(TypeError, match="unknown mixer"):
+            linear_state_bytes(cfg)
+
+
+class TestWireQuantization:
+    def _fake_cache(self, dtype):
+        return {"groups": [{
+            "b0": {"k": jnp.asarray(RNG.standard_normal((2, 1, 16, 2, 8)),
+                                    dtype),
+                   "v": jnp.asarray(RNG.standard_normal((2, 1, 16, 2, 8)),
+                                    dtype)},
+            "b1": {"state": jnp.ones((2, 1, 4, 8), jnp.float32)}}]}
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_roundtrip_restores_dtype_within_scale(self, dtype):
+        caches = self._fake_cache(dtype)
+        wire, _ = quantize_cache_for_wire(caches)
+        back = dequantize_cache_from_wire(wire)
+        k0 = back["groups"][0]["b0"]["k"]
+        assert k0.dtype == dtype
+        orig = caches["groups"][0]["b0"]["k"].astype(jnp.float32)
+        err = float(jnp.max(jnp.abs(k0.astype(jnp.float32) - orig)))
+        # per-tensor symmetric int8: error <= scale (0.5 quantization + the
+        # scale's own storage rounding in the original dtype)
+        scale = float(jnp.max(jnp.abs(orig))) / 127.0
+        assert err <= scale * 1.01 + 1e-7
+        # recurrent fp32 state ships untouched
+        assert back["groups"][0]["b1"]["state"].dtype == jnp.float32
+
+    @pytest.mark.parametrize("dtype,lo", [(jnp.bfloat16, 1.5),
+                                          (jnp.float32, 2.5)])
+    def test_measured_ratio_matches_charged_bytes(self, dtype, lo):
+        """The measured quantized bytes and the ratio the throughput model /
+        simulator charge are two views of the same number:
+        wire_bytes == raw_bytes / wire_compression_ratio exactly."""
+        caches = self._fake_cache(dtype)
+        raw = cache_num_bytes(caches)
+        _, wire_bytes = quantize_cache_for_wire(caches)
+        ratio = wire_compression_ratio(caches)
+        assert wire_bytes == pytest.approx(raw / ratio)
+        assert ratio > lo                 # 2-byte K/V -> ~2x, 4-byte -> ~4x
+
+    def test_throughput_model_charges_measured_ratio(self):
+        """In the egress-bound regime Θ_prfaas scales EXACTLY with the
+        wire-compression ratio it is given."""
+        w = Workload()
+        tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+        base = SystemConfig(4, 4, 4, 1e8, 8192.0)      # skinny egress
+        comp = dataclasses.replace(base, kv_wire_compression=2.37)
+        t0, t1 = tm.theta_prfaas(base), tm.theta_prfaas(comp)
+        assert t1 == pytest.approx(t0 * 2.37)
+        assert tm.egress_load(comp, rate=1.0) == pytest.approx(
+            tm.egress_load(base, rate=1.0) / 2.37)
+
+    def test_compression_below_one_rejected_by_simulator(self):
+        from repro.core import PrfaasSimulator, SimConfig
+        w = Workload()
+        tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+        sc = SystemConfig(4, 4, 4, 100e9 / 8, 8192.0,
+                          kv_wire_compression=0.5)
+        with pytest.raises(ValueError, match="kv_wire_compression"):
+            PrfaasSimulator(tm, sc, w, SimConfig(arrival_rate=1.0))
+
+
+@pytest.mark.live
+class TestRealPrefillCaches:
+    """Same properties on REAL caches from a jitted smoke model."""
+
+    @pytest.fixture(scope="class")
+    def prefill_caches(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import Model
+
+        cfg = get_smoke_config("kimi-linear-1t")
+        model = Model(cfg, use_kernels=False)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = np.asarray(
+            RNG.integers(0, cfg.vocab_size, (2, 96)), np.int32)
+        _, caches = jax.jit(model.prefill)(params,
+                                           {"tokens": jnp.asarray(toks)})
+        return cfg, caches
+
+    def test_roundtrip_error_bounded(self, prefill_caches):
+        import jax
+
+        _, caches = prefill_caches
+        wire, _ = quantize_cache_for_wire(caches)
+        back = dequantize_cache_from_wire(wire)
+        flat_w = jax.tree_util.tree_flatten_with_path(caches)[0]
+        flat_b = jax.tree.leaves(back)
+        quantized = 0
+        for (path, orig), deq in zip(flat_w, flat_b):
+            name = jax.tree_util.keystr(path)
+            if not any(k in name for k in ("'k'", "'v'", "'ckv'", "'kpe'")):
+                np.testing.assert_array_equal(np.asarray(orig),
+                                              np.asarray(deq))
+                continue
+            quantized += 1
+            o = np.asarray(orig, np.float32)
+            d = np.asarray(deq, np.float32)
+            scale = np.abs(o).max() / 127.0
+            assert np.abs(o - d).max() <= scale * 1.01 + 1e-7, name
+        assert quantized > 0              # the model really has K/V leaves
+
+    def test_measured_bytes_match_charged_ratio(self, prefill_caches):
+        _, caches = prefill_caches
+        raw = cache_num_bytes(caches)
+        wire, wire_bytes = quantize_cache_for_wire(caches)
+        ratio = wire_compression_ratio(caches)
+        assert wire_bytes < raw
+        assert wire_bytes == pytest.approx(raw / ratio)
+        assert 1.0 < ratio < 4.5
+        # feeding the measured ratio into the analytic model charges the
+        # same bytes the quantized pytree actually occupies
+        assert raw / ratio == pytest.approx(cache_num_bytes(wire))
