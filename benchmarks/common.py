@@ -1,4 +1,6 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission, JSON artifacts, timing."""
+import json
+import os
 import time
 
 import jax
@@ -10,6 +12,16 @@ def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(path: str, payload: dict):
+    """Write a BENCH_*.json artifact (and emit a row so the harness log
+    records which artifacts a run produced)."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    emit(f"artifact/{os.path.basename(path)}", 0.0,
+         f"{os.path.getsize(path)}B")
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

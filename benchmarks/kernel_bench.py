@@ -2,6 +2,14 @@
 (the Pallas kernels target TPU; on this CPU container we time the jnp
 chunked/banded forms that the dry-run compiles, plus interpret-mode kernel
 calls at small shapes for correctness-path coverage) + derived FLOPs.
+
+Also runs the **measured-kernel calibration sweep**: this machine's peak
+FLOP/s and memory bandwidth, then achieved FLOP/s of the prefill-shaped
+kernels (causal attention + FFN matmul) over a range of prefill lengths.
+The per-length MFU points plus the ``analysis.calibrate`` saturation-curve
+fit are written to ``BENCH_kernel.json``, which ``CalibratedProfile``
+consumes so routing thresholds and simulated service times derive from the
+hardware the engines actually run on.
 """
 import time
 
@@ -9,18 +17,80 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
+from repro.analysis.calibrate import calibration_from_points, calibration_to_json
 from repro.kernels import ops
 from repro.models import chunked_attention as chk
 
 RNG = np.random.default_rng(0)
+
+SWEEP_LENS = (256, 512, 1024, 2048, 4096)
+SWEEP_LENS_SMOKE = (128, 256, 512, 1024)
+SWEEP_HEADS, SWEEP_DIM, SWEEP_DMODEL = 8, 128, 1024
 
 
 def mk(*shape):
     return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
 
 
-def main():
+def measure_machine(smoke: bool = False):
+    """Measured peaks of THIS machine: dense-matmul FLOP/s and a streaming
+    copy's bytes/s (the roofline ceilings the MFU sweep is relative to).
+    The matmul probe matches the sweep's FFN width (SWEEP_DMODEL) in both
+    modes so the MFU denominator is measured on comparable shapes."""
+    n = SWEEP_DMODEL
+    a, b = mk(n, n), mk(n, n)
+    f = jax.jit(lambda a, b: a @ b)
+    us = time_fn(f, a, b, iters=3, warmup=2)
+    peak_flops = 2.0 * n ** 3 / (us * 1e-6)
+    emit("kernel/machine_peak_matmul", us, f"{peak_flops/1e9:.1f}GFLOP/s")
+
+    m = (1 << 22) if smoke else (1 << 24)
+    x = mk(m)
+    g = jax.jit(lambda x: x * 1.000001 + 0.5)
+    us = time_fn(g, x, iters=3, warmup=2)
+    mem_bw = 2.0 * m * 4 / (us * 1e-6)               # read + write f32
+    emit("kernel/machine_mem_bw", us, f"{mem_bw/1e9:.1f}GB/s")
+    return peak_flops, mem_bw
+
+
+def prefill_sweep(peak_flops: float, smoke: bool = False):
+    """Achieved FLOP/s of prefill-shaped work vs prefill length -> MFU(l).
+
+    Per length l: causal flash attention (B=1, H, l, D) plus the matching
+    FFN-style matmul (l, d) @ (d, 4d) @ (4d, d) — the two shapes that
+    dominate a real prefill — timed together; MFU(l) is their combined
+    achieved FLOP/s over the measured matmul peak.
+    """
+    B, H, D, d = 1, SWEEP_HEADS, SWEEP_DIM, SWEEP_DMODEL
+    w1, w2 = mk(d, 4 * d), mk(4 * d, d)
+    attn = jax.jit(lambda q, k, v: chk.flash_chunked(q, k, v, causal=True))
+    ffn = jax.jit(lambda x, w1, w2: (x @ w1) @ w2)
+    points = []
+    for l in (SWEEP_LENS_SMOKE if smoke else SWEEP_LENS):
+        q, k, v = mk(B, H, l, D), mk(B, H, l, D), mk(B, H, l, D)
+        x = mk(l, d)
+        us_a = time_fn(attn, q, k, v, iters=2, warmup=1)
+        us_f = time_fn(ffn, x, w1, w2, iters=2, warmup=1)
+        f_attn = 2.0 * B * H * l * l * D              # qk + pv, causal half
+        f_ffn = 2.0 * l * d * 4 * d * 2
+        achieved = (f_attn + f_ffn) / ((us_a + us_f) * 1e-6)
+        points.append({"l": l, "attn_us": round(us_a, 2),
+                       "ffn_us": round(us_f, 2),
+                       "flops": f_attn + f_ffn,
+                       "achieved_flops": achieved})
+    # a sweep shape can amortize overhead better than the square probe; the
+    # MFU denominator is the max of both so mfu <= 1 by construction and
+    # fit_mfu_curve never hits its clamp on inconsistent measurements
+    peak_used = max(peak_flops, *(p["achieved_flops"] for p in points))
+    for p in points:
+        p["mfu"] = p["achieved_flops"] / peak_used
+        emit(f"kernel/prefill_sweep_{p['l']}", p["attn_us"] + p["ffn_us"],
+             f"{p['achieved_flops']/1e9:.1f}GFLOP/s mfu={p['mfu']:.3f}")
+    return points, peak_used
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_kernel.json"):
     B, H, S, D = 1, 8, 2048, 128
     q, k, v = mk(B, H, S, D), mk(B, H, S, D), mk(B, H, S, D)
 
@@ -63,8 +133,29 @@ def main():
                                                 interpret=True))
     us = time_fn(f, qs, ks, vs, iters=3, warmup=1)
     emit("kernel/pallas_flash_interpret_256", us, "correctness-path")
+
+    # measured-kernel calibration: machine peaks + MFU(l) sweep + fit
+    peak_flops, mem_bw = measure_machine(smoke)
+    points, peak_used = prefill_sweep(peak_flops, smoke)
+    calib = calibration_from_points([(p["l"], p["mfu"]) for p in points],
+                                    peak_used, mem_bw)
+    emit("kernel/calibration_fit", 0.0,
+         f"mfu_max={calib.mfu_max:.3f} l_half={calib.l_half:.0f}")
+    write_json(out_path, {
+        "machine": {"peak_flops": peak_used, "mem_bw": mem_bw,
+                    "matmul_probe_flops": peak_flops,
+                    "backend": jax.default_backend()},
+        "sweep": {"heads": SWEEP_HEADS, "head_dim": SWEEP_DIM,
+                  "d_model": SWEEP_DMODEL, "smoke": smoke},
+        "points": points,
+        "calibration": calibration_to_json(calib),
+    })
     return True
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

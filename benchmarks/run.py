@@ -12,9 +12,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig5_gridsearch, kernel_bench, scenario_grid,
-                        serve_live, sim_ttft, table3_kv_throughput,
-                        table5_profile, table6_deployment)
+from benchmarks import (engine_bench, fig5_gridsearch, kernel_bench,
+                        scenario_grid, serve_live, sim_ttft,
+                        table3_kv_throughput, table5_profile,
+                        table6_deployment)
 
 MODULES = {
     "table3": table3_kv_throughput,    # Table 3 / Figure 2 (Φ_kv by model)
@@ -23,7 +24,8 @@ MODULES = {
     "fig5": fig5_gridsearch,           # Figure 5 (grid search slices)
     "sim": sim_ttft,                   # §4.3 TTFT/egress via simulator
     "grid": scenario_grid,             # burst x skew x fluct x topology grid
-    "kernels": kernel_bench,           # supporting kernel micro-bench
+    "kernels": kernel_bench,           # micro-bench + machine calibration
+    "engine": engine_bench,            # serving hot path (decode/admit/buckets)
     "serve": serve_live,               # live launcher + policy/actual x-val
 }
 

@@ -1,5 +1,9 @@
+from repro.analysis.calibrate import (calibrated_profile,
+                                      calibration_from_points,
+                                      fit_mfu_curve, load_calibration)
 from repro.analysis.roofline import (RooflineReport, analyze,
                                      collective_bytes, model_flops_for)
 
 __all__ = ["RooflineReport", "analyze", "collective_bytes",
-           "model_flops_for"]
+           "model_flops_for", "fit_mfu_curve", "calibration_from_points",
+           "calibrated_profile", "load_calibration"]

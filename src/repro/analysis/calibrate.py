@@ -1,0 +1,116 @@
+"""Fit a measured kernel sweep into a ``CalibratedProfile``.
+
+The calibrated-profile flow (ROADMAP "kernel-level prefill profiles"):
+
+    benchmarks.kernel_bench --sweep   ->  BENCH_kernel.json
+        (machine peak FLOP/s + bytes/s, MFU at each prefill length)
+    analysis.calibrate.load_calibration(path)  ->  Calibration
+    CalibratedProfile(model_cfg, calibration)  ->  core.hardware.Profile
+        plugged into ThroughputModel -> Router thresholds and
+        PrfaasSimulator service times derive from THIS machine.
+
+``serving.deployment.DeploymentConfig.calibration`` and
+``launch.serve --calibration`` select it on the live path; the simulator
+side is exercised by ``launch.serve --cross-validate`` (the replay builds
+its ThroughputModel from the same Calibration).
+
+The MFU saturation curve mfu(l) = mfu_max * l / (l + l_half) linearizes as
+1/mfu = 1/mfu_max + (l_half/mfu_max) * (1/l), so the fit is a closed-form
+least squares in (1/l, 1/mfu) space — no optimizer dependency.
+
+    PYTHONPATH=src python -m repro.analysis.calibrate BENCH_kernel.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import AnalyticProfile, CalibratedProfile, Calibration
+
+
+def fit_mfu_curve(lens: Sequence[float],
+                  mfus: Sequence[float]) -> Tuple[float, float]:
+    """Least-squares fit of mfu(l) = mfu_max * l / (l + l_half).
+
+    Returns (mfu_max, l_half), clamped to sane ranges (mfu_max in (0, 1],
+    l_half >= 0) so a noisy sweep can't produce a pathological profile.
+    """
+    lens = np.asarray(lens, np.float64)
+    mfus = np.asarray(mfus, np.float64)
+    if lens.size < 2:
+        raise ValueError("need >= 2 sweep points to fit the MFU curve")
+    x = 1.0 / np.maximum(lens, 1.0)
+    y = 1.0 / np.maximum(mfus, 1e-9)
+    slope, intercept = np.polyfit(x, y, 1)
+    intercept = max(float(intercept), 1.0)       # mfu_max <= 1
+    mfu_max = 1.0 / intercept
+    l_half = max(float(slope) / intercept, 0.0)
+    return mfu_max, l_half
+
+
+def calibration_from_points(points: Sequence[Tuple[float, float]],
+                            peak_flops: float, mem_bw: float,
+                            source: str = "kernel_bench") -> Calibration:
+    """points: (prefill_length, measured_mfu) pairs (any order)."""
+    pts = tuple(sorted((float(l), float(m)) for l, m in points))
+    mfu_max, l_half = fit_mfu_curve([p[0] for p in pts],
+                                    [p[1] for p in pts])
+    return Calibration(peak_flops=float(peak_flops), mem_bw=float(mem_bw),
+                       mfu_max=mfu_max, l_half=l_half, points=pts,
+                       source=source)
+
+
+def calibration_to_json(calib: Calibration) -> dict:
+    return dataclasses.asdict(calib)
+
+
+def calibration_from_json(obj: dict) -> Calibration:
+    return Calibration(
+        peak_flops=float(obj["peak_flops"]), mem_bw=float(obj["mem_bw"]),
+        mfu_max=float(obj["mfu_max"]), l_half=float(obj["l_half"]),
+        points=tuple((float(l), float(m)) for l, m in obj.get("points", ())),
+        source=obj.get("source", "kernel_bench"))
+
+
+def load_calibration(path: str) -> Calibration:
+    """Read the ``calibration`` block of a BENCH_kernel.json (or a bare
+    calibration dict)."""
+    with open(path) as f:
+        obj = json.load(f)
+    return calibration_from_json(obj.get("calibration", obj))
+
+
+def calibrated_profile(model_cfg, calibration: Calibration,
+                       chips_per_instance: int = 1,
+                       kv_dtype_bytes: int = 2) -> CalibratedProfile:
+    return CalibratedProfile(model_cfg, calibration,
+                             chips_per_instance=chips_per_instance,
+                             kv_dtype_bytes=kv_dtype_bytes)
+
+
+def main():
+    import argparse
+
+    from repro.configs import get_config
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json", help="BENCH_kernel.json from kernel_bench")
+    ap.add_argument("--arch", default="kimi-linear-1t",
+                    help="model config used for the T_prefill table")
+    args = ap.parse_args()
+    calib = load_calibration(args.bench_json)
+    print(f"machine peak: {calib.peak_flops/1e9:.1f} GFLOP/s, "
+          f"{calib.mem_bw/1e9:.1f} GB/s")
+    print(f"fit: mfu_max={calib.mfu_max:.4f} l_half={calib.l_half:.1f}")
+    prof = calibrated_profile(get_config(args.arch), calib)
+    print(f"{'l':>8} {'mfu_meas':>9} {'mfu_fit':>8} {'T_prefill':>10}")
+    for l, m in calib.points:
+        fit = AnalyticProfile.mfu(prof, l)
+        print(f"{int(l):8d} {m:9.4f} {fit:8.4f} {prof.t_prefill(l):9.3f}s")
+
+
+if __name__ == "__main__":
+    main()

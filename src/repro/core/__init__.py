@@ -4,8 +4,9 @@
 # engine, and the cross-DC cluster simulator.
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, StageTelemetry
 from repro.core.blockpool import PREFIX, TRANSFER, Block, BlockPool
-from repro.core.hardware import (CHIPS, AnalyticProfile, ChipSpec,
-                                 PaperProfile, Profile, paper_h20_profile,
+from repro.core.hardware import (CHIPS, AnalyticProfile, Calibration,
+                                 CalibratedProfile, ChipSpec, PaperProfile,
+                                 Profile, paper_h20_profile,
                                  paper_h200_profile)
 from repro.core.kv_manager import GlobalKVManager, MatchInfo
 from repro.core.prefix_cache import (FullAttnGroup, HybridPrefixCache,
@@ -25,6 +26,7 @@ __all__ = [
     "Autoscaler", "AutoscalerConfig", "StageTelemetry",
     "Block", "BlockPool", "PREFIX", "TRANSFER",
     "CHIPS", "ChipSpec", "Profile", "PaperProfile", "AnalyticProfile",
+    "Calibration", "CalibratedProfile",
     "paper_h200_profile", "paper_h20_profile",
     "GlobalKVManager", "MatchInfo",
     "FullAttnGroup", "HybridPrefixCache", "LinearStateGroup",

@@ -1,6 +1,6 @@
 """Hardware model: chip classes, instance profiles, T_prefill / S_kv sources.
 
-Two profile kinds feed the throughput model (paper Eq. 1):
+Three profile kinds feed the throughput model (paper Eq. 1):
   * ``PaperProfile`` — the paper's measured Table 5 for the internal 1T
     hybrid on an 8xH200 instance, with log-log (power-law) interpolation.
     This is the *faithful-reproduction* input: feeding it into our
@@ -8,11 +8,17 @@ Two profile kinds feed the throughput model (paper Eq. 1):
   * ``AnalyticProfile`` — derived from any ``ModelConfig`` + chip spec via a
     FLOPs/bytes roofline with an MFU(l) saturation curve; used for the
     assigned architectures where no measured profile exists.
+  * ``CalibratedProfile`` — the same roofline, but the chip peak and the
+    MFU(l) curve are MEASURED on this machine by the kernel sweep in
+    ``benchmarks.kernel_bench`` and fitted by ``analysis.calibrate``:
+    routing thresholds and simulated service times then derive from the
+    hardware the engines actually run on, not a named chip's datasheet.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Tuple
 
 from repro.configs.base import AttentionSpec, ModelConfig
 
@@ -131,6 +137,10 @@ class AnalyticProfile(Profile):
     def s_kv(self, l: int) -> float:
         return float(self.cfg.kv_cache_bytes(l, self.kv_dtype_bytes))
 
+    def mfu(self, l: float) -> float:
+        """Length-dependent MFU saturation curve (overridable: measured)."""
+        return self.mfu_max * l / (l + self.l_half)
+
     def prefill_flops(self, l: int) -> float:
         """2*N_active*l matmul + attention quadratic terms."""
         cfg = self.cfg
@@ -152,7 +162,52 @@ class AnalyticProfile(Profile):
         return w + act
 
     def t_prefill(self, l: int) -> float:
-        mfu = self.mfu_max * l / (l + self.l_half)
+        mfu = self.mfu(l)
         t_c = self.prefill_flops(l) / (self.chips * self.chip.flops_bf16 * mfu)
         t_m = self.prefill_bytes(l) / (self.chips * self.chip.hbm_bw * 0.8)
         return max(t_c, t_m)
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Measured-machine kernel calibration (see ``analysis.calibrate``).
+
+    ``points`` are (prefill_length, measured_mfu) pairs from the kernel
+    sweep; ``mfu_max``/``l_half`` are the fitted saturation-curve params
+    used outside the measured range.  ``peak_flops``/``mem_bw`` are this
+    machine's measured peaks (the "chip" the MFU is relative to).
+    """
+    peak_flops: float
+    mem_bw: float
+    mfu_max: float
+    l_half: float
+    points: Tuple[Tuple[float, float], ...] = field(default_factory=tuple)
+    source: str = "kernel_bench"
+
+
+class CalibratedProfile(AnalyticProfile):
+    """AnalyticProfile whose chip peak and MFU(l) come from measured
+    kernels: log-log interpolation over the measured MFU points inside the
+    sweep range, the fitted saturation curve outside it.
+
+    Flow: ``benchmarks.kernel_bench`` (sweep -> BENCH_kernel.json) ->
+    ``analysis.calibrate.load_calibration`` -> ``CalibratedProfile`` ->
+    Router / ``PrfaasSimulator`` service times.
+    """
+
+    def __init__(self, cfg: ModelConfig, calibration: Calibration,
+                 chips_per_instance: int = 1, kv_dtype_bytes: int = 2):
+        chip = ChipSpec(f"measured:{calibration.source}",
+                        calibration.peak_flops, calibration.mem_bw, 0.0)
+        super().__init__(cfg, chip, chips_per_instance,
+                         mfu_max=calibration.mfu_max,
+                         l_half=calibration.l_half,
+                         kv_dtype_bytes=kv_dtype_bytes)
+        self.calibration = calibration
+
+    def mfu(self, l: float) -> float:
+        pts = self.calibration.points
+        if len(pts) >= 2 and pts[0][0] <= l <= pts[-1][0]:
+            return _loglog_interp([p[0] for p in pts],
+                                  [max(p[1], 1e-9) for p in pts], l)
+        return super().mfu(l)

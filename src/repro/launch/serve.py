@@ -57,6 +57,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pd-mesh-gbps", type=float, default=0.0)
     ap.add_argument("--wire-compression", action="store_true",
                     help="int8-quantize KV on the inter-DC wire")
+    ap.add_argument("--calibration", default=None,
+                    help="BENCH_kernel.json from benchmarks.kernel_bench: "
+                         "route thresholds + simulator service times then "
+                         "derive from this machine's measured kernels "
+                         "(CalibratedProfile) instead of the default "
+                         "chip roofline")
     ap.add_argument("--freeze-thresholds", action="store_true",
                     help="disable congestion feedback (deterministic "
                          "routing for exact cross-validation)")
@@ -101,8 +107,9 @@ def generate_workload(args, cfg, pd_names, shares):
     batches, trace = [], []
     rid, next_sid = 0, 0
     # exactly --requests total, remainder spread over the early batches
-    sizes = [max(1, n) for n in split_even(args.requests,
-                                           max(1, args.batches))]
+    # (fewer batches than asked when requests < batches)
+    sizes = [n for n in split_even(args.requests, max(1, args.batches))
+             if n > 0]
     for b, size in enumerate(sizes):
         arrival = b * args.batch_gap_s
         batch = []
@@ -135,9 +142,14 @@ def cross_validate(args, model_cfg, dep: CrossDCDeployment, trace,
     simulator (same Router policy, same topology shape, analytic service
     times) and compare per-request routing plus TTFT/egress."""
     k = args.pd_clusters
-    profile = AnalyticProfile(
-        model_cfg, CHIPS[dep.cfg.chip], dep.cfg.chips_per_instance,
-        kv_dtype_bytes=2 if model_cfg.dtype == "bfloat16" else 4)
+    if dep.cfg.calibration:
+        # the replay must price prefill with the SAME measured profile the
+        # live Router used, or thresholds/agreement are meaningless
+        profile = dep.profile
+    else:
+        profile = AnalyticProfile(
+            model_cfg, CHIPS[dep.cfg.chip], dep.cfg.chips_per_instance,
+            kv_dtype_bytes=2 if model_cfg.dtype == "bfloat16" else 4)
     w = Workload()
     tm = ThroughputModel(profile, profile, w)
     ratio = dep.measured_compression() if args.wire_compression else 1.0
@@ -206,7 +218,8 @@ def run_serve(args) -> dict:
         pd_mesh_gbps=args.pd_mesh_gbps, pd_clusters=k,
         decode_slots=max(4, -(-args.requests // max(1, args.batches))),
         capacity=512, wire_compression=args.wire_compression,
-        adapt_thresholds=not args.freeze_thresholds)
+        adapt_thresholds=not args.freeze_thresholds,
+        calibration=args.calibration)
     model = Model(cfg, use_kernels=False)
     params = model.init(jax.random.PRNGKey(0))
     dep = CrossDCDeployment(model, params, dep_cfg)

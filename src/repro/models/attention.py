@@ -143,6 +143,32 @@ def gqa_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
     return y, {"k": kbuf, "v": vbuf}
 
 
+def gqa_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
+                      use_kernels=True):
+    """Incremental prefill: x is a chunk at absolute ``positions``; ``cache``
+    holds the prior chunks' {"k","v"} (B, S_prior, Hkv, D).  The chunk's
+    queries attend over prior + new keys via the ``Sq != Sk`` / ``q_offset``
+    attention path.  Returns (y, merged cache)."""
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    q = _split_heads(_lin(p["wq"], x), H, D)
+    k = _split_heads(_lin(p["wk"], x), Hkv, D)
+    v = _split_heads(_lin(p["wv"], x), Hkv, D)
+    if spec.rope:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    k_seq = k.transpose(0, 2, 1, 3)                          # (B,C,Hkv,D)
+    v_seq = v.transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate([cache["k"].astype(k_seq.dtype), k_seq], axis=1)
+    v_full = jnp.concatenate([cache["v"].astype(v_seq.dtype), v_seq], axis=1)
+    o = ops.attention(q, k_full.transpose(0, 2, 1, 3),
+                      v_full.transpose(0, 2, 1, 3), causal=True,
+                      window=spec.window if spec.kind == "swa" else 0,
+                      q_offset=cache["k"].shape[1],
+                      use_kernel=use_kernels)
+    y = _merge_heads(o) @ p["wo"]["w"]
+    return y, {"k": k_full, "v": v_full}
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2-style latent KV)
 # ---------------------------------------------------------------------------
@@ -225,6 +251,38 @@ def mla_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
     return y, {"ckv": ckv_buf, "kpe": kpe_buf}
 
 
+def mla_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
+                      use_kernels=True):
+    """Incremental MLA prefill: append the chunk's latents to the cached
+    ones, decompress K/V for the full prefix, attend chunk queries with
+    ``q_offset``.  Returns (y, merged latent cache)."""
+    B, C, _ = x.shape
+    H, D, R, Rp = (spec.q_heads, spec.head_dim, spec.mla_kv_rank,
+                   spec.mla_rope_dim)
+    q_nope, q_pe = _mla_q(p, x, spec)
+    q_pe = apply_rope(q_pe, positions, spec.rope_theta)
+    kv_a = _lin(p["wkv_a"], x)                               # (B,C,R+Rp)
+    ckv_new = rms_norm(kv_a[..., :R], p["kv_norm"])
+    kpe_new = apply_rope(kv_a[..., R:][:, None], positions,
+                         spec.rope_theta)[:, 0]              # (B,C,Rp)
+    ckv = jnp.concatenate([cache["ckv"].astype(ckv_new.dtype), ckv_new], 1)
+    kpe = jnp.concatenate([cache["kpe"].astype(kpe_new.dtype), kpe_new], 1)
+
+    S = ckv.shape[1]
+    kv = _lin(p["wkv_b"], ckv)                               # (B,S,Hkv*2D)
+    kv = kv.reshape(B, S, spec.kv_heads, 2 * D).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :D], kv[..., D:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe[:, None], (B, spec.kv_heads, S, Rp))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    o = ops.attention(q, k, v, causal=True, scale=(D + Rp) ** -0.5,
+                      q_offset=cache["ckv"].shape[1],
+                      use_kernel=use_kernels)
+    y = _merge_heads(o) @ p["wo"]["w"]
+    return y, {"ckv": ckv, "kpe": kpe}
+
+
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
@@ -236,6 +294,19 @@ def attention_forward(p, x, spec: AttentionSpec, positions, *, kv_source=None,
         return mla_forward(p, x, spec, positions, use_kernels=use_kernels)
     return gqa_forward(p, x, spec, positions, kv_source=kv_source,
                        causal=causal, use_kernels=use_kernels)
+
+
+def attention_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
+                            use_kernels=True):
+    """Chunked-prefill step: attend a chunk at absolute ``positions`` over
+    the prior chunks' cache (decoder-only self-attention)."""
+    if spec.is_cross:
+        raise ValueError("chunked prefill does not support cross-attention")
+    if spec.kind == "mla":
+        return mla_forward_chunk(p, x, spec, positions, cache,
+                                 use_kernels=use_kernels)
+    return gqa_forward_chunk(p, x, spec, positions, cache,
+                             use_kernels=use_kernels)
 
 
 def attention_decode(p, x, spec: AttentionSpec, cache, lengths, *,

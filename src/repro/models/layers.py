@@ -264,7 +264,7 @@ def apply_linear(p, x):
     return y
 
 
-def causal_conv1d(x, w, conv_state=None):
+def causal_conv1d(x, w, conv_state=None, lengths=None):
     """Depthwise causal conv via K shifted multiply-adds. x: (B,S,C); w: (K,C).
 
     Deliberately NOT lax.conv with feature_group_count=C: GSPMD cannot
@@ -272,6 +272,11 @@ def causal_conv1d(x, w, conv_state=None):
     rematerialization (replicating the (B,S,3*H*dk) qkv buffer on every
     device). K shifted elementwise FMAs shard trivially with the batch.
     Returns (y, new_state) where new_state is the last K-1 inputs.
+
+    ``lengths`` (B,): per-row valid token counts for right-padded batches
+    (bucketed prefill).  The returned state is then the K-1 inputs ending at
+    position ``lengths`` — exactly the window a decode step would continue
+    from — instead of the tail of the padded sequence.
     """
     B, S, C = x.shape
     K = w.shape[0]
@@ -282,5 +287,13 @@ def causal_conv1d(x, w, conv_state=None):
     for k in range(K):
         # tap k multiplies input shifted by (K-1-k) steps into the past
         y = y + xp[:, k:k + S] * w[k].astype(x.dtype)
-    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    if K <= 1:
+        new_state = conv_state
+    elif lengths is not None:
+        # xp index of padded position p is p + K - 1, so the window
+        # [length-K+1, length) lives at xp[length : length+K-1]
+        idx = lengths.astype(jnp.int32)[:, None] + jnp.arange(K - 1)[None]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    else:
+        new_state = xp[:, -(K - 1):]
     return y, new_state

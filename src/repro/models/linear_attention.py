@@ -99,7 +99,7 @@ def init_linear_mixer(rng, d_model: int, spec: LinearSpec, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _qkv(p, x, spec: LinearSpec, conv_state=None):
+def _qkv(p, x, spec: LinearSpec, conv_state=None, lengths=None):
     H, dk, dv = spec.heads, spec.key_dim, spec.value_dim
     q = x @ p["wq"]["w"]
     k = x @ p["wk"]["w"]
@@ -107,7 +107,14 @@ def _qkv(p, x, spec: LinearSpec, conv_state=None):
     new_conv = None
     if spec.conv_kernel:
         qkv = jnp.concatenate([q, k, v], axis=-1)
-        qkv, new_conv = causal_conv1d(qkv, p["conv_w"], conv_state)
+        if lengths is not None:
+            # zero padded positions so conv taps at valid positions only
+            # ever read real inputs (or zeros past the end)
+            S = qkv.shape[1]
+            mask = jnp.arange(S)[None, :] < lengths[:, None]
+            qkv = jnp.where(mask[..., None], qkv, 0)
+        qkv, new_conv = causal_conv1d(qkv, p["conv_w"], conv_state,
+                                      lengths=lengths)
         qkv = jax.nn.silu(qkv)
         q = qkv[..., :H * dk]
         k = qkv[..., H * dk:2 * H * dk]
@@ -144,15 +151,32 @@ def _gates_full(p, x, spec: LinearSpec):
 
 
 def linear_forward(p, x, spec: LinearSpec, *, initial_state=None,
-                   conv_state=None, use_kernels=True):
-    """Returns (y, cache = {"state": (B,H,dk,dv) f32 [, "conv"]})."""
+                   conv_state=None, lengths=None, use_kernels=True):
+    """Returns (y, cache = {"state": (B,H,dk,dv) f32 [, "conv"]}).
+
+    ``lengths`` (B,): valid token counts for right-padded batches (bucketed
+    prefill).  Padded positions are made state-neutral — decay forced to 1
+    and key/beta to 0, so the recurrent update degenerates to identity — and
+    the conv window is gathered at ``lengths``; the returned state is then
+    EXACTLY the state after the request's real tokens, independent of how
+    much bucket padding follows.  ``lengths=None`` (train / unpadded
+    prefill) is byte-identical to the old path.
+    """
     B, S, _ = x.shape
     kind = spec.kind
     if kind == "slstm":
-        return _slstm_forward(p, x, spec, initial_state=initial_state)
+        return _slstm_forward(p, x, spec, initial_state=initial_state,
+                              lengths=lengths)
 
-    q, k, v, new_conv = _qkv(p, x, spec, conv_state)
+    q, k, v, new_conv = _qkv(p, x, spec, conv_state, lengths=lengths)
     log_a, beta = _gates_full(p, x, spec)
+    if lengths is not None:
+        mask = jnp.arange(S)[None, :] < lengths[:, None]     # (B,S)
+        # identity state update at padded positions: a=exp(0)=1, k=0, beta=0
+        log_a = jnp.where(mask[:, None, :], log_a, 0.0)
+        if beta is not None:
+            beta = jnp.where(mask[:, None, :], beta, 0.0)
+        k = jnp.where(mask[:, None, :, None], k, jnp.zeros((), k.dtype))
 
     if kind in ("kda", "gdn"):
         k = _l2norm(k)
@@ -278,12 +302,33 @@ def slstm_init_state(B, spec: LinearSpec):
 UNROLL = False
 
 
-def _slstm_forward(p, x, spec: LinearSpec, *, initial_state=None):
+def _slstm_forward(p, x, spec: LinearSpec, *, initial_state=None,
+                   lengths=None):
     B, S, d = x.shape
     if initial_state is None:
         initial_state = slstm_init_state(B, spec)
     st0 = (initial_state["c"], initial_state["n"], initial_state["m"],
            initial_state["h"])
+
+    if lengths is not None:
+        # right-padded batch: hold the state at padded positions so the
+        # final state is the state after each row's real tokens
+        mask = jnp.arange(S)[:, None] < lengths[None, :]     # (S,B)
+
+        def step(state, inp):
+            x_t, m_t = inp
+            new = _slstm_step(p, spec, x_t, state)
+            state = tuple(jnp.where(m_t[:, None, None], nw, old)
+                          for nw, old in zip(new, state))
+            return state, state[3]
+
+        (c, n, m, h), hs = jax.lax.scan(step, st0,
+                                        (x.transpose(1, 0, 2), mask),
+                                        unroll=True if UNROLL else 1)
+        hs = hs.transpose(1, 0, 2, 3)                        # (B,S,H,dv)
+        o = rms_norm(hs.reshape(B, S, -1).astype(x.dtype), p["g_norm"])
+        y = o @ p["wo"]["w"]
+        return y, {"state": {"c": c, "n": n, "m": m, "h": h}}
 
     def step(state, x_t):
         state = _slstm_step(p, spec, x_t, state)

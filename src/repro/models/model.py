@@ -126,8 +126,15 @@ class Model:
     # ------------------------------------------------------- block dispatch
 
     def _apply_block(self, spec: BlockSpec, p, x, positions, *, causal=True,
-                     enc_out=None, aux=None):
-        """Full-sequence (train/prefill). Returns (x, cache, aux)."""
+                     enc_out=None, aux=None, lengths=None):
+        """Full-sequence (train/prefill). Returns (x, cache, aux).
+
+        ``lengths`` (B,): valid token counts of a right-padded batch
+        (bucketed prefill).  Attention needs no masking — causal attention
+        at positions < length never sees padding, and pad K/V rows are
+        trimmed/overwritten downstream — but linear mixers must hold their
+        recurrent state past each row's length (see ``linear_forward``).
+        """
         cfg = self.cfg
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         m = spec.mixer
@@ -137,6 +144,7 @@ class Model:
                 use_kernels=self.use_kernels)
         else:
             y, cache = lin_mod.linear_forward(p["mixer"], h, m,
+                                              lengths=lengths,
                                               use_kernels=self.use_kernels)
         x = x + y
         if spec.cross is not None:
@@ -194,7 +202,7 @@ class Model:
     # ------------------------------------------------------------ stacks
 
     def _run_groups(self, groups, params_groups, x, positions, *, causal=True,
-                    enc_out=None, collect_aux=False):
+                    enc_out=None, collect_aux=False, lengths=None):
         """scan over repeats of each group. Returns (x, caches, aux)."""
         aux_total = jnp.zeros((), jnp.float32) if collect_aux else None
         all_caches = []
@@ -207,7 +215,7 @@ class Model:
                          else rep_params[f"b{bi}"])
                     x, c, aux = self._apply_block(
                         bspec, p, x, positions, causal=causal,
-                        enc_out=enc_out, aux=aux)
+                        enc_out=enc_out, aux=aux, lengths=lengths)
                     caches[f"b{bi}"] = c
                 if FLAGS.sequence_parallel:
                     x = shard_hint(x, ("pod", "data"), "model", None)
@@ -244,6 +252,64 @@ class Model:
 
             x, new_caches = jax.lax.scan(body, x, (gp["stacked"], gc),
                                          unroll=True if self.unroll else 1)
+            new_all.append(new_caches)
+        return x, new_all
+
+    def _apply_block_chunk(self, spec: BlockSpec, p, x, positions, cache,
+                           lengths):
+        """One block of an incremental (chunked) prefill: attention blocks
+        append to / attend over their prior-chunk cache, linear mixers
+        continue from their carried state. Returns (x, merged cache)."""
+        cfg = self.cfg
+        if spec.cross is not None:
+            raise ValueError("chunked prefill does not support cross-attn")
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        m = spec.mixer
+        if isinstance(m, AttentionSpec):
+            y, new_cache = attn_mod.attention_forward_chunk(
+                p["mixer"], h, m, positions, cache,
+                use_kernels=self.use_kernels)
+        else:
+            y, new_cache = lin_mod.linear_forward(
+                p["mixer"], h, m, initial_state=cache["state"],
+                conv_state=cache.get("conv"), lengths=lengths,
+                use_kernels=self.use_kernels)
+        x = x + y
+        if spec.ffn.kind == "dense":
+            x = x + apply_ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                              spec.ffn)
+        elif spec.ffn.kind == "moe":
+            x = x + apply_moe(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                              spec.ffn,
+                              dropless=self._moe_dropless(
+                                  x.shape[0] * x.shape[1]))
+        return x, new_cache
+
+    def _chunk_groups(self, groups, params_groups, x, positions, caches,
+                      lengths):
+        new_all = []
+        for g, gp, gc in zip(groups, params_groups, caches):
+            def body(x, xs, _g=g, _gp=gp):
+                rep_params, rep_caches = xs
+                new_caches = {}
+                for bi, bspec in enumerate(_g.blocks):
+                    p = (_gp["shared"][f"b{bi}"] if bspec.shared
+                         else rep_params[f"b{bi}"])
+                    x, c = self._apply_block_chunk(
+                        bspec, p, x, positions, rep_caches[f"b{bi}"], lengths)
+                    new_caches[f"b{bi}"] = c
+                return x, new_caches
+
+            if gp["stacked"]:
+                x, new_caches = jax.lax.scan(
+                    body, x, (gp["stacked"], gc),
+                    unroll=True if self.unroll else 1)
+            else:  # group of only-shared blocks
+                reps = []
+                for r in range(g.repeats):
+                    x, c = body(x, ({}, jax.tree.map(lambda t: t[r], gc)))
+                    reps.append(c)
+                new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
             new_all.append(new_caches)
         return x, new_all
 
@@ -351,22 +417,76 @@ class Model:
 
     def prefill(self, params, batch):
         """Returns (last_logits (B, V) f32, caches). The caches are the
-        KVCache PrfaaS ships to the decode cluster."""
+        KVCache PrfaaS ships to the decode cluster.
+
+        ``batch["lengths"]`` (B,), optional: per-row valid token counts of a
+        right-padded batch (the serving engine's length buckets).  The
+        logits are then taken at each row's ``lengths - 1`` position and
+        linear-mixer states are held past each row's length, so outputs are
+        exactly those of an unpadded prefill; without it the batch is
+        treated as fully valid (legacy behavior, used by train/eval).
+        """
         cfg = self.cfg
         self._inference = True
+        lengths = batch.get("lengths")
         x, positions, n_prefix = self._decoder_input(params, batch)
+        eff_lengths = None
+        if lengths is not None:
+            eff_lengths = lengths.astype(jnp.int32) + n_prefix
         enc_out = None
-        enc_caches = None
         if cfg.encoder_groups is not None:
             B, S_enc = batch["frames"].shape[:2]
             enc_pos = jnp.broadcast_to(
                 jnp.arange(S_enc, dtype=jnp.int32)[None], (B, S_enc))
             enc_out = self._encode(params, batch["frames"], enc_pos)
         x, caches, _ = self._run_groups(cfg.groups, params["groups"], x,
-                                        positions, enc_out=enc_out)
-        logits = self._logits(params, x[:, -1:])[:, 0]
+                                        positions, enc_out=enc_out,
+                                        lengths=eff_lengths)
+        if eff_lengths is not None:
+            x_last = jnp.take_along_axis(
+                x, (eff_lengths - 1)[:, None, None], axis=1)
+            logits = self._logits(params, x_last)[:, 0]
+        else:
+            logits = self._logits(params, x[:, -1:])[:, 0]
         self._inference = False
         return logits, {"groups": caches}
+
+    def prefill_chunk(self, params, batch, caches=None):
+        """One fixed-shape chunk of an incremental prefill (decoder-only).
+
+        batch: {"tokens": (B, C), "positions": (B, C) absolute,
+                "lengths": (B,) valid token counts WITHIN this chunk}.
+        ``caches=None`` starts the prefill (plain bucket prefill of the
+        first chunk); afterwards attention blocks attend over prior + new
+        keys via the ``q_offset`` flash path and linear mixers carry state.
+        Returns (hidden (B, C, d) pre-final-norm, caches) — the caller
+        gathers last-token logits across chunks via ``last_logits``.
+        """
+        cfg = self.cfg
+        if cfg.encoder_groups is not None or cfg.num_image_patches:
+            raise ValueError("chunked prefill supports decoder-only token "
+                             "models (no encoder / image prefix)")
+        self._inference = True
+        x = self._embed_tokens(params, batch["tokens"])
+        positions = batch["positions"].astype(jnp.int32)
+        lengths = batch.get("lengths")
+        if lengths is not None:
+            lengths = lengths.astype(jnp.int32)
+        if caches is None:
+            x, gc, _ = self._run_groups(cfg.groups, params["groups"], x,
+                                        positions, lengths=lengths)
+        else:
+            x, gc = self._chunk_groups(cfg.groups, params["groups"], x,
+                                       positions, caches["groups"], lengths)
+        self._inference = False
+        return x, {"groups": gc}
+
+    def last_logits(self, params, hidden, lengths):
+        """Gather per-row ``lengths - 1`` positions of ``hidden`` (B, S, d)
+        and project to logits (B, V) — the chunked-prefill epilogue."""
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(hidden, idx, axis=1)
+        return self._logits(params, x_last)[:, 0]
 
     def decode_step(self, params, tokens, caches, lengths):
         """tokens: (B,) int32; lengths: (B,) current context sizes.

@@ -1,7 +1,8 @@
 from repro.serving.api import Request, Response
 from repro.serving.deployment import CrossDCDeployment, DeploymentConfig
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
-                                  slice_request_cache)
+                                  slice_request_cache, trim_request_cache)
 
 __all__ = ["Request", "Response", "CrossDCDeployment", "DeploymentConfig",
-           "DecodeEngine", "PrefillEngine", "slice_request_cache"]
+           "DecodeEngine", "PrefillEngine", "slice_request_cache",
+           "trim_request_cache"]

@@ -33,3 +33,6 @@ class Response:
     rid: int
     output_tokens: List[int] = field(default_factory=list)
     finished: bool = False
+    # retired at the decode KV-capacity wall with generation budget left
+    # (NOT a clean finish; counted in DecodeEngine.truncations)
+    truncated: bool = False

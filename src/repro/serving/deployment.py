@@ -56,7 +56,7 @@ from repro.models.kvcache import (cache_num_bytes, dequantize_cache_from_wire,
                                   kv_bytes, quantize_cache_for_wire)
 from repro.serving.api import Request, Response
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
-                                  slice_request_cache)
+                                  trim_request_cache)
 
 
 @dataclass
@@ -68,6 +68,9 @@ class DeploymentConfig:
     pd_clusters: int = 1               # regional PD clusters
     decode_slots: int = 8
     capacity: int = 2048               # decode KV capacity per slot
+    decode_block_size: int = 8         # tokens per on-device decode block
+    min_prefill_bucket: int = 32       # smallest pow2 prefill length bucket
+    max_prefill_bucket: Optional[int] = None  # chunked prefill past this
     block_tokens: int = 16
     pool_blocks: int = 4096
     layerwise_pipeline: bool = True
@@ -75,6 +78,11 @@ class DeploymentConfig:
     adapt_thresholds: bool = True      # live per-home congestion feedback
     chip: str = "h200"                 # AnalyticProfile chip for the Router
     chips_per_instance: int = 8
+    # path to a BENCH_kernel.json written by benchmarks.kernel_bench: the
+    # Router's profile (thresholds, S_kv/T_prefill trade-off) then derives
+    # from THIS machine's measured kernels (analysis.calibrate) instead of
+    # the named chip's roofline
+    calibration: Optional[str] = None
 
 
 class CrossDCDeployment:
@@ -90,12 +98,15 @@ class CrossDCDeployment:
         # region naming matches the simulator: the classic two-cluster
         # deployment keeps the legacy "pd" name
         self.pd_names = [PD] if k == 1 else [f"pd{i}" for i in range(k)]
+        bucket_kw = dict(min_bucket=cfg.min_prefill_bucket,
+                         max_bucket=cfg.max_prefill_bucket)
         self.prfaas = PrefillEngine(prfaas_model or model,
                                     prfaas_params if prfaas_params is not None
-                                    else params)
-        self.pd_prefill = PrefillEngine(model, params)
+                                    else params, **bucket_kw)
+        self.pd_prefill = PrefillEngine(model, params, **bucket_kw)
         self.decoders: Dict[str, DecodeEngine] = {
-            name: DecodeEngine(model, params, cfg.decode_slots, cfg.capacity)
+            name: DecodeEngine(model, params, cfg.decode_slots, cfg.capacity,
+                               block_size=cfg.decode_block_size)
             for name in self.pd_names}
         self.caches: Dict[str, HybridPrefixCache] = {PRFAAS: self._new_cache()}
         for name in self.pd_names:
@@ -106,8 +117,16 @@ class CrossDCDeployment:
                 else [cfg.link_gbps] * k)
         if len(star) != k:
             raise ValueError("pd_link_gbps must have one entry per region")
-        profile = AnalyticProfile(model.cfg, CHIPS[cfg.chip],
-                                  cfg.chips_per_instance)
+        if cfg.calibration:
+            from repro.analysis.calibrate import (calibrated_profile,
+                                                  load_calibration)
+            profile = calibrated_profile(model.cfg,
+                                         load_calibration(cfg.calibration),
+                                         cfg.chips_per_instance)
+        else:
+            profile = AnalyticProfile(model.cfg, CHIPS[cfg.chip],
+                                      cfg.chips_per_instance)
+        self.profile = profile
         self.throughput_model = ThroughputModel(profile, profile, Workload())
         self.system = SystemConfig(1, k, k, sum(star) * 1e9 / 8.0,
                                    float(cfg.threshold))
@@ -168,17 +187,22 @@ class CrossDCDeployment:
             if not rs:
                 continue
             engine = self.prfaas if cluster == PRFAAS else self.pd_prefill
-            # pad to the longest prompt in the group (one prefill batch)
-            maxlen = max(len(r.tokens) for r in rs)
-            toks = np.zeros((len(rs), maxlen), np.int32)
+            # one bucketed prefill batch: the engine pads to a power-of-two
+            # length bucket (compiling once per bucket) and uses lengths to
+            # keep per-request logits/states exact despite the padding
+            lengths = np.array([len(r.tokens) for r in rs], np.int32)
+            toks = np.zeros((len(rs), int(lengths.max())), np.int32)
             for i, r in enumerate(rs):
                 toks[i, :len(r.tokens)] = r.tokens   # left-aligned
-            first, caches, wall = engine.prefill(toks)
+            first, caches, wall = engine.prefill(toks, lengths)
             self.topology.advance(self.virtual_now)  # sync link clocks
             flows: Dict[int, list] = {}
+            admits: Dict[str, list] = {}
             for i, r in enumerate(rs):
                 r.prefill_s = wall
-                payload = slice_request_cache(caches, i)
+                # trim to the request's true length: bucket padding must not
+                # inflate wire bytes (or corrupt SWA ring placement)
+                payload = trim_request_cache(caches, i, len(r.tokens))
                 r.kv_bytes_raw = cache_num_bytes(payload)
                 r.transfer_s = 0.0
                 fl = []
@@ -225,8 +249,21 @@ class CrossDCDeployment:
                 self.caches[cluster].insert(list(map(int, r.tokens)))
                 if self.cfg.wire_compression and cluster == PRFAAS:
                     payload = dequantize_cache_from_wire(payload)
-                self.decoders[r.home].admit(r, int(first[i]), payload,
-                                            len(r.tokens))
+                admits.setdefault(r.home, []).append(
+                    (r, int(first[i]), payload, len(r.tokens)))
+            # batched admission: each region's shipped caches are placed
+            # into their decode slots in ONE jit'd call per region; if a
+            # region's batch exceeds its free slots, drain the active
+            # streams and admit the remainder (continuous batching at batch
+            # granularity — nothing is silently dropped)
+            for home, entries in admits.items():
+                dec = self.decoders[home]
+                pending = list(entries)
+                while pending:
+                    n = dec.admit_many(pending)
+                    pending = pending[n:]
+                    if pending:
+                        dec.run_until_drained()
             if any(flows.values()):
                 self.topology.run_until_idle()
             for r in rs:
@@ -283,6 +320,7 @@ class CrossDCDeployment:
                 if rs else 0.0,
                 "threshold": self.router.threshold_for(name),
                 "cache_hit_rate": self.caches[name].hit_rate(),
+                "truncations": self.decoders[name].truncations,
             }
         return {
             "requests": len(done),
@@ -296,6 +334,7 @@ class CrossDCDeployment:
                            for n in self.pd_names},
             "router_decisions": dict(self.router.decisions),
             "cross_transfers": self.router.cross_transfers,
+            "truncations": sum(d.truncations for d in self.decoders.values()),
             "wire_compression": self.measured_compression(),
             "clusters": per_region,
             "links": self.topology.pair_stats(),

@@ -1,17 +1,45 @@
-"""Prefill + continuous-batching decode engines (pure JAX).
+"""Prefill + continuous-batching decode engines (pure JAX), built around a
+recompile-free hot path.
 
 ``PrefillEngine`` plays the PrfaaS / PD-P role: runs full-sequence prefill
 and emits the request's KVCache (the bytes that cross the inter-DC link).
-``DecodeEngine`` plays PD-D: a slot-based continuous-batching loop over a
-single jit'd ``decode_step`` — requests are admitted into free slots (their
-shipped KV placed into the engine's preallocated buffers), step() advances
-every active stream by one token, finished streams retire and free slots.
+Prompts are padded to power-of-two **length buckets** (and batches to
+power-of-two batch buckets), so each (batch, length) bucket compiles
+exactly once; per-request ``lengths`` are threaded into ``model.prefill``
+so logits and linear-mixer states are EXACT despite the padding (see
+``models.model.prefill``).  Prompts longer than ``max_bucket`` run as
+**chunked prefill**: fixed-shape chunks of ``max_bucket`` tokens through
+``model.prefill_chunk`` — attention chunks attend over the prior chunks'
+cache via the ``q_offset`` flash path, linear mixers carry state — so the
+compile set stays bounded (one compile per chunk index) for arbitrarily
+long prompts.
+
+``DecodeEngine`` plays PD-D: a slot-based continuous-batching loop.
+
+  * **batched admission** — ``admit_many`` writes K shipped request caches
+    into their slots in ONE jit'd call (K in-place slot updates on the
+    donated buffers; K padded to a power of two so admission compiles are
+    bounded), instead of K serial one-jit-call-per-request placements.
+  * **multi-token decode** — ``step_block`` runs ``block_size`` iterations
+    of ``model.decode_step`` inside one jit'd ``lax.scan`` with the greedy
+    token fed back on-device; tokens/lengths sync to host ONCE per block
+    and slot bookkeeping is vectorized numpy between blocks.  ``step()``
+    (one host round-trip per token) is kept as the measured baseline.
+  * free slots live in a deque maintained on admit/retire (the old
+    ``free_slots()`` O(num_slots) scan ran on every admission).
+  * a stream retired at the KV-capacity wall with generation budget left is
+    flagged ``Response.truncated`` and counted in ``truncations`` instead
+    of masquerading as a clean finish.
+
+Compile counts are observable (``PrefillEngine.compiles``,
+``DecodeEngine.block_compiles``) so benchmarks and tests can assert the
+zero-recompile property instead of trusting it.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,31 +49,169 @@ from repro.models import Model, prepare_decode_caches
 from repro.models.kvcache import cache_num_bytes
 from repro.serving.api import Request, Response
 
+_SEQ_LEAVES = ("k", "v", "ckv", "kpe")
+
+
+def next_pow2(n: int, lo: int = 1) -> int:
+    v = max(int(lo), 1)
+    while v < n:
+        v *= 2
+    return v
+
+
+def _jit_cache_size(fn) -> Optional[int]:
+    size = getattr(fn, "_cache_size", None)
+    return size() if callable(size) else None
+
 
 class PrefillEngine:
-    def __init__(self, model: Model, params):
+    """Bucketed (and, past ``max_bucket``, chunked) prefill.
+
+    ``min_bucket``: smallest length bucket (pow2).  ``max_bucket``: when
+    set, prompts padded beyond it are prefetched in fixed ``max_bucket``-
+    token chunks (decoder-only models).  ``pad_batch``: round the batch
+    dimension up to a power of two as well (exactly one compile per
+    (batch-bucket, length-bucket) pair).
+    """
+
+    def __init__(self, model: Model, params, *, min_bucket: int = 32,
+                 max_bucket: Optional[int] = None, pad_batch: bool = True):
         self.model = model
         self.params = params
-        self._prefill = jax.jit(model.prefill)
+        self.min_bucket = next_pow2(min_bucket)
+        if max_bucket is not None and next_pow2(max_bucket) != max_bucket:
+            raise ValueError("max_bucket must be a power of two")
+        self.max_bucket = max_bucket
+        self.pad_batch = pad_batch
+        self._prefill = jax.jit(self._prefill_impl)
+        self._chunk = jax.jit(self.model.prefill_chunk)
+        self._carry_last = jax.jit(self._carry_last_impl)
+        self._finish = jax.jit(self._finish_impl)
+        self._shape_keys = set()         # fallback compile tracking
+        self.calls = 0
 
-    def prefill(self, tokens: np.ndarray):
-        """tokens: (B, S). Returns (first_token (B,), caches, wall_s)."""
+    # ------------------------------------------------------------- jit fns
+    def _prefill_impl(self, params, tokens, lengths):
+        logits, caches = self.model.prefill(
+            params, {"tokens": tokens, "lengths": lengths})
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    @staticmethod
+    def _carry_last_impl(hidden, last, lengths, offset):
+        """Fold a chunk's hidden states (B, C, d) into the (B, 1, d)
+        last-valid-hidden carry: rows whose final prompt position falls in
+        [offset, offset+C) take their row from this chunk."""
+        C = hidden.shape[1]
+        pos = lengths.astype(jnp.int32) - 1
+        idx = jnp.clip(pos - offset, 0, C - 1)
+        cand = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        in_chunk = (pos >= offset) & (pos < offset + C)
+        return jnp.where(in_chunk[:, None, None], cand, last)
+
+    def _finish_impl(self, params, hidden, lengths):
+        logits = self.model.last_logits(params, hidden, lengths)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------- buckets
+    def bucket_for(self, max_len: int) -> int:
+        return next_pow2(max_len, self.min_bucket)
+
+    @property
+    def compiles(self) -> int:
+        """Number of distinct compiled prefill programs (actual jit-cache
+        entries when the runtime exposes them, tracked shape keys else)."""
+        sizes = [_jit_cache_size(f)
+                 for f in (self._prefill, self._chunk, self._carry_last,
+                           self._finish)]
+        if any(s is None for s in sizes):
+            return len(self._shape_keys)
+        return sum(sizes)
+
+    def warmup(self, batch_sizes: Sequence[int], lengths: Sequence[int]):
+        """Compile every (batch-bucket, length-bucket) pair up front."""
+        for b in sorted({next_pow2(b) for b in batch_sizes}):
+            for l in sorted({self.bucket_for(l) for l in lengths}):
+                toks = np.zeros((b, l), np.int32)
+                self.prefill(toks, np.full((b,), l, np.int32))
+
+    # -------------------------------------------------------------- public
+    def prefill(self, tokens: np.ndarray, lengths=None):
+        """tokens: (B, S) right-padded prompts; lengths: (B,) valid counts
+        (defaults to S).  Returns (first_token (B,), caches, wall_s).
+
+        The returned caches are bucket-padded; slice a request out with
+        ``trim_request_cache(caches, i, length)`` before shipping so wire
+        bytes reflect the prompt, not the bucket.
+        """
         t0 = time.perf_counter()
-        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
-        logits, caches = self._prefill(self.params, batch)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = np.asarray(tokens)
+        B, S = tokens.shape
+        if lengths is None:
+            lengths = np.full((B,), S, np.int32)
+        lengths = np.asarray(lengths, np.int32)
+        max_len = int(lengths.max()) if B else S
+        Sb = self.bucket_for(max_len)
+        chunked = self.max_bucket is not None and Sb > self.max_bucket
+        if chunked:
+            C = self.max_bucket
+            Sb = -(-max_len // C) * C                    # ceil to chunks
+        Bb = next_pow2(B) if self.pad_batch else B
+        toks = np.zeros((Bb, Sb), np.int32)
+        toks[:B, :min(S, Sb)] = tokens[:, :Sb]
+        lens = np.ones((Bb,), np.int32)                  # pad rows: 1 token
+        lens[:B] = np.maximum(lengths, 1)
+        self.calls += 1
+
+        if chunked:
+            first, caches = self._chunked_prefill(toks, lens, C)
+        else:
+            self._shape_keys.add(("prefill", Bb, Sb))
+            first, caches = self._prefill(self.params, jnp.asarray(toks),
+                                          jnp.asarray(lens))
         jax.block_until_ready(first)
-        return np.asarray(first), caches, time.perf_counter() - t0
+        return np.asarray(first)[:B], caches, time.perf_counter() - t0
+
+    def _chunked_prefill(self, toks: np.ndarray, lens: np.ndarray, C: int):
+        Bb, Sb = toks.shape
+        caches = None
+        # (B, 1, d) carry of each row's hidden state at its last prompt
+        # position — O(chunk) activation memory regardless of prompt length,
+        # and the epilogue compiles once per (Bb, C), not per chunk count
+        last = None
+        lens_dev = jnp.asarray(lens)
+        for i in range(Sb // C):
+            self._shape_keys.add(("chunk", Bb, C, i))
+            pos = np.broadcast_to(
+                np.arange(i * C, (i + 1) * C, dtype=np.int32)[None],
+                (Bb, C))
+            chunk_lens = np.clip(lens - i * C, 0, C).astype(np.int32)
+            h, caches = self._chunk(
+                self.params,
+                {"tokens": jnp.asarray(toks[:, i * C:(i + 1) * C]),
+                 "positions": jnp.asarray(pos),
+                 "lengths": jnp.asarray(chunk_lens)},
+                caches)
+            if last is None:
+                last = jnp.zeros((Bb, 1, h.shape[-1]), h.dtype)
+            last = self._carry_last(h, last, lens_dev,
+                                    jnp.int32(i * C))
+            self._shape_keys.add(("carry", Bb, C))
+        self._shape_keys.add(("finish", Bb))
+        first = self._finish(self.params, last,
+                             jnp.ones((Bb,), jnp.int32))
+        return first, caches
 
 
 class DecodeEngine:
-    """Slot-based continuous batching decode cluster."""
+    """Slot-based continuous batching decode cluster (see module doc)."""
 
-    def __init__(self, model: Model, params, num_slots: int, capacity: int):
+    def __init__(self, model: Model, params, num_slots: int, capacity: int,
+                 block_size: int = 8):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.capacity = capacity
+        self.block_size = max(1, int(block_size))
         self.caches = jax.jit(
             lambda: model.init_cache(num_slots, capacity))()
         self.lengths = np.zeros((num_slots,), np.int32)
@@ -54,43 +220,82 @@ class DecodeEngine:
         self.budget = np.zeros((num_slots,), np.int32)
         self.slot_req: List[Optional[int]] = [None] * num_slots
         self.outputs: Dict[int, Response] = {}
+        self.truncations = 0
+        self._free = deque(range(num_slots))
         self._step = jax.jit(model.decode_step, donate_argnums=(2,))
-        self._place = jax.jit(self._place_impl, donate_argnums=(0,))
+        self._block = jax.jit(self._block_impl, donate_argnums=(2,))
+        self._place_many = jax.jit(self._place_many_impl, donate_argnums=(0,))
 
     # ---------------------------------------------------------------- admit
     @staticmethod
-    def _place_impl(caches, one_cache, slot):
-        def put(buf, new):
-            # write request cache (axis 1 = slot) at [slot]
-            idx = (0, slot) + (0,) * (buf.ndim - 2)
-            return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
-                                                idx)
+    def _place_many_impl(caches, payloads, slots):
+        """Write K request caches into their slots in ONE jit'd call.
 
-        return jax.tree.map(put, caches, one_cache)
+        ``payloads``: tuple of K prepared caches (slot axis = 1, size 1);
+        ``slots``: (K,) int32.  Lowered as K in-place slot updates on the
+        donated buffers — one dispatch total, vs the old one-jit-call-per-
+        request admission."""
+        def place(buf, *news):
+            for j, new in enumerate(news):
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    buf, new.astype(buf.dtype), slots[j], axis=1)
+            return buf
+
+        return jax.tree.map(place, caches, *payloads)
 
     def free_slots(self) -> List[int]:
-        return [i for i in range(self.num_slots) if not self.active[i]]
+        return list(self._free)
 
-    def admit(self, req: Request, first_token: int, one_cache, prompt_len: int):
-        """Place a request's shipped KV into a free slot."""
-        slots = self.free_slots()
-        if not slots:
-            return False
-        slot = slots[0]
-        placed = prepare_decode_caches(self.model.cfg, one_cache,
-                                       self.capacity)
-        self.caches = self._place(self.caches, placed, slot)
-        self.lengths[slot] = prompt_len
-        self.tokens[slot] = first_token
-        self.active[slot] = True
-        self.budget[slot] = req.max_new_tokens
-        self.slot_req[slot] = req.rid
-        self.outputs[req.rid] = Response(req.rid, [int(first_token)])
-        return True
+    def admit(self, req: Request, first_token: int, one_cache,
+              prompt_len: int) -> bool:
+        """Place one request's shipped KV into a free slot."""
+        return self.admit_many([(req, first_token, one_cache,
+                                 prompt_len)]) == 1
+
+    def admit_many(self, entries: Sequence[Tuple]) -> int:
+        """entries: [(req, first_token, one_cache, prompt_len), ...].
+        Admits up to the number of free slots (in order); returns the
+        number admitted.  One jit'd scatter regardless of K; K is padded to
+        a power of two (repeating the last entry) to bound compiles."""
+        n = min(len(entries), len(self._free))
+        if n == 0:
+            return 0
+        take = list(entries[:n])
+        slots = [self._free.popleft() for _ in range(n)]
+        placed = [prepare_decode_caches(self.model.cfg, c, self.capacity)
+                  for (_, _, c, _) in take]
+        K = next_pow2(n)
+        pad_slots = slots + [slots[-1]] * (K - n)   # duplicate writes of the
+        placed += [placed[-1]] * (K - n)            # same payload: harmless
+        self.caches = self._place_many(self.caches, tuple(placed),
+                                       jnp.asarray(pad_slots, jnp.int32))
+        for slot, (req, first_token, _, prompt_len) in zip(slots, take):
+            self.lengths[slot] = prompt_len
+            self.tokens[slot] = first_token
+            self.active[slot] = True
+            self.budget[slot] = req.max_new_tokens
+            self.slot_req[slot] = req.rid
+            self.outputs[req.rid] = Response(req.rid, [int(first_token)])
+        return n
 
     # ----------------------------------------------------------------- step
+    def _retire(self, slot: int):
+        rid = self.slot_req[slot]
+        resp = self.outputs[rid]
+        resp.finished = True
+        # at the KV-capacity wall with budget remaining: NOT a clean finish
+        truncated = (self.lengths[slot] >= self.capacity - 1
+                     and self.budget[slot] > 0)
+        resp.truncated = bool(truncated)
+        self.truncations += int(truncated)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self._free.append(slot)
+
     def step(self):
-        """One decode iteration for all active slots. Returns #active."""
+        """One decode iteration for all active slots (one host round-trip
+        per token — the measured baseline for ``step_block``). Returns
+        #active."""
         if not self.active.any():
             return 0
         logits, self.caches = self._step(
@@ -106,15 +311,67 @@ class DecodeEngine:
             self.tokens[i] = nxt[i]
             self.budget[i] -= 1
             if self.budget[i] <= 0 or self.lengths[i] >= self.capacity - 1:
-                self.outputs[rid].finished = True
-                self.active[i] = False
-                self.slot_req[i] = None
+                self._retire(i)
+        return int(self.active.sum())
+
+    def _block_impl(self, params, tokens, caches, lengths):
+        """``block_size`` greedy decode steps fully on-device."""
+        def body(carry, _):
+            toks, caches, lens = carry
+            logits, caches = self.model.decode_step(params, toks, caches,
+                                                    lens)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, caches, lens + 1), nxt
+
+        (_, caches, _), toks = jax.lax.scan(
+            body, (tokens, caches, lengths), None, length=self.block_size)
+        return toks, caches
+
+    @property
+    def block_compiles(self) -> Optional[int]:
+        return _jit_cache_size(self._block)
+
+    def step_block(self):
+        """Advance every active stream by up to ``block_size`` tokens with
+        ONE device dispatch and one host sync. Returns #active.
+
+        Inactive slots decode garbage into their (about-to-be-overwritten)
+        cache region; streams that hit their budget or the capacity wall
+        mid-block have the surplus tokens discarded on the host — identical
+        retirement semantics to ``step()``."""
+        if not self.active.any():
+            return 0
+        toks, self.caches = self._block(
+            self.params, jnp.asarray(self.tokens),
+            self.caches, jnp.asarray(self.lengths))
+        toks = np.asarray(toks)                       # (block, num_slots)
+        idx = np.where(self.active)[0]
+        # tokens a slot emits before retiring, exactly as step() would:
+        # min(budget, room to capacity-1) per block — floored at 1 because
+        # step() appends once BEFORE its retirement check, so a slot
+        # admitted at/over the capacity wall still emits one token
+        valid = np.clip(
+            np.minimum(self.budget[idx],
+                       self.capacity - 1 - self.lengths[idx]),
+            1, self.block_size).astype(int)
+        self.lengths[idx] += valid
+        self.budget[idx] -= valid
+        self.tokens[idx] = toks[valid - 1, idx]
+        done = (self.budget[idx] <= 0) | \
+               (self.lengths[idx] >= self.capacity - 1)
+        for j, i in enumerate(idx):
+            out = self.outputs[self.slot_req[i]].output_tokens
+            out.extend(int(t) for t in toks[:valid[j], i])
+            if done[j]:
+                self._retire(i)
         return int(self.active.sum())
 
     def run_until_drained(self, max_steps: int = 10_000):
+        """Drain all active streams via ``step_block`` (``max_steps`` counts
+        blocks)."""
         steps = 0
         while self.active.any() and steps < max_steps:
-            self.step()
+            self.step_block()
             steps += 1
         return steps
 
@@ -122,3 +379,19 @@ class DecodeEngine:
 def slice_request_cache(caches, idx: int):
     """Extract request ``idx`` from a batched prefill cache -> batch of 1."""
     return jax.tree.map(lambda x: x[:, idx:idx + 1], caches)
+
+
+def trim_request_cache(caches, idx: int, length: int):
+    """Extract request ``idx`` from a batched (bucket-padded) prefill cache
+    and trim sequence-major leaves (k/v/ckv/kpe) to ``length`` — the bytes
+    that actually need to cross the wire.  O(1) state leaves pass through.
+    (Decoder-only caches; cross-attention caches keep their encoder len.)"""
+
+    def cut(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        leaf = leaf[:, idx:idx + 1]
+        if name in _SEQ_LEAVES and "cross" not in jax.tree_util.keystr(path):
+            leaf = leaf[:, :, :min(length, leaf.shape[2])]
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(cut, caches)

@@ -30,3 +30,6 @@ def test_bench_smoke_runs_clean(tmp_path):
     assert "# FAILED" not in res.stdout
     # the harness actually produced its simulator artifacts
     assert (tmp_path / "BENCH_scenario_grid.json").exists()
+    # ... and the measured-kernel calibration + serving hot-path artifacts
+    assert (tmp_path / "BENCH_kernel.json").exists()
+    assert (tmp_path / "BENCH_engine.json").exists()

@@ -1,0 +1,83 @@
+"""Measured-kernel calibration: curve fit, profile behavior, JSON roundtrip
+(the kernel_bench -> calibrate -> CalibratedProfile -> Router flow)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.calibrate import (calibrated_profile,
+                                      calibration_from_points,
+                                      calibration_to_json, fit_mfu_curve,
+                                      load_calibration)
+from repro.configs import get_config
+from repro.core.hardware import (CHIPS, AnalyticProfile, CalibratedProfile,
+                                 Calibration)
+
+
+def _curve(l, mfu_max, l_half):
+    return mfu_max * l / (l + l_half)
+
+
+class TestFit:
+    def test_recovers_synthetic_curve(self):
+        lens = [128, 256, 512, 1024, 4096]
+        mfus = [_curve(l, 0.55, 900.0) for l in lens]
+        mfu_max, l_half = fit_mfu_curve(lens, mfus)
+        assert mfu_max == pytest.approx(0.55, rel=1e-3)
+        assert l_half == pytest.approx(900.0, rel=1e-2)
+
+    def test_noisy_fit_stays_sane(self):
+        rng = np.random.default_rng(0)
+        lens = [64, 128, 256, 512, 1024]
+        mfus = [_curve(l, 0.4, 300.0) * float(rng.uniform(0.8, 1.25))
+                for l in lens]
+        mfu_max, l_half = fit_mfu_curve(lens, mfus)
+        assert 0.0 < mfu_max <= 1.0
+        assert l_half >= 0.0
+
+    def test_needs_two_points(self):
+        with pytest.raises(ValueError):
+            fit_mfu_curve([128], [0.3])
+
+
+class TestCalibratedProfile:
+    def _calib(self):
+        lens = [128, 512, 2048]
+        pts = [(l, _curve(l, 0.5, 500.0)) for l in lens]
+        return calibration_from_points(pts, peak_flops=100e9, mem_bw=20e9)
+
+    def test_mfu_interpolates_measured_points(self):
+        calib = self._calib()
+        prof = calibrated_profile(get_config("qwen2.5-3b"), calib)
+        for l, m in calib.points:
+            assert prof.mfu(l) == pytest.approx(m, rel=1e-6)
+        # outside the sweep: fitted saturation curve
+        assert prof.mfu(1 << 20) == pytest.approx(calib.mfu_max, rel=0.05)
+
+    def test_t_prefill_uses_measured_peak(self):
+        cfg = get_config("qwen2.5-3b")
+        calib = self._calib()
+        slow = calibrated_profile(cfg, calib)
+        fast = CalibratedProfile(
+            cfg, Calibration(peak_flops=calib.peak_flops * 10,
+                             mem_bw=calib.mem_bw * 10,
+                             mfu_max=calib.mfu_max, l_half=calib.l_half,
+                             points=calib.points))
+        l = 512
+        assert slow.t_prefill(l) == pytest.approx(10 * fast.t_prefill(l),
+                                                  rel=1e-6)
+        # S_kv is model-side and must not depend on the machine
+        h200 = AnalyticProfile(cfg, CHIPS["h200"], 8)
+        assert slow.s_kv(l) == h200.s_kv(l)
+
+    def test_json_roundtrip(self, tmp_path):
+        calib = self._calib()
+        path = tmp_path / "BENCH_kernel.json"
+        path.write_text(json.dumps(
+            {"machine": {}, "calibration": calibration_to_json(calib)}))
+        back = load_calibration(str(path))
+        assert back == calib
+        # bare-dict form also loads
+        path2 = tmp_path / "bare.json"
+        path2.write_text(json.dumps(calibration_to_json(calib)))
+        assert load_calibration(str(path2)) == calib
