@@ -13,6 +13,12 @@ tiny model exposes — the quantities below are scheduling tax, not FLOPs):
     vs one batched ``admit_many`` scatter.
   * prefill compile stability — warm the (batch, length) buckets, then run
     a mixed-length workload and count recompiles.  Acceptance: 0.
+  * decode-slot occupancy + goodput at ``SLOTS`` slots under a mixed
+    long-prefill + decode load — the PR 5 alternating loop (whole-batch
+    prefill, admit waves, drain to empty) vs the continuous
+    ``RegionScheduler`` (bucket-exact units, chunk interleave, admission at
+    block boundaries).  Acceptance: continuous occupancy strictly above the
+    alternating baseline, with 0 recompiles after the warm run.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
 """
@@ -27,7 +33,7 @@ from repro.configs import get_smoke_config
 from repro.models import Model, prepare_decode_caches
 from repro.serving.api import Request
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
-                                  trim_request_cache)
+                                  RegionScheduler, trim_request_cache)
 
 # One KV-cache attention arch (SWA; windowed cache decode) and one
 # linear-state arch
@@ -175,6 +181,115 @@ def bench_prefill_buckets(model, params, cfg, smoke):
             "prefill_mean_us": round(float(np.mean(walls)) * 1e6, 1)}
 
 
+LONG_LEN = 200          # past the occupancy bench's max_bucket -> chunked
+
+
+def _reset_decode(dec: DecodeEngine):
+    """Return a DecodeEngine to its post-init state without re-jitting."""
+    dec.lengths[:] = 0
+    dec.tokens[:] = 0
+    dec.active[:] = False
+    dec.budget[:] = 0
+    dec.slot_req = [None] * dec.num_slots
+    dec.outputs = {}
+    dec.truncations = 0
+    dec.decode_wall_s = dec.slot_busy_s = 0.0
+    dec.tokens_out = 0
+    dec._free.clear()
+    dec._free.extend(range(dec.num_slots))
+
+
+def bench_occupancy(model, params, cfg, smoke):
+    """Occupancy/goodput at SLOTS decode slots, mixed long-prefill + decode
+    load: the alternating loop pays one whole-batch prefill (every prompt
+    padded to the global max) with decode idle, then drains to empty
+    between admit waves — with more requests than slots and ragged decode
+    budgets, slots sit idle while each wave's longest stream finishes; the
+    scheduler runs bucket-exact units, chunk-interleaves long prompts
+    between decode blocks, and refills freed slots at the next boundary."""
+    capacity = 384
+    n_short, n_long = (20, 4) if smoke else (28, 8)
+    hi_new = 48 if smoke else 96
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(
+                        0, cfg.vocab_size,
+                        (PROMPT_LEN if i < n_short else LONG_LEN,)
+                    ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(8, hi_new + 1)))
+            for i in range(n_short + n_long)]
+    reqs = [reqs[i] for i in rng.permutation(len(reqs))]   # arrival mix
+    peng = PrefillEngine(model, params, min_bucket=32, max_bucket=64)
+    peng.warmup([1, 8], [PROMPT_LEN, LONG_LEN])
+    dec = DecodeEngine(model, params, SLOTS, capacity, block_size=BLOCK)
+
+    def alternating():
+        # faithful PR 5 regime: ONE bucketed prefill call for the whole
+        # batch (padded to the longest prompt's chunk multiple), then admit
+        # waves that drain all active streams before admitting the rest
+        lengths = np.array([len(r.tokens) for r in reqs], np.int32)
+        toks = np.zeros((len(reqs), int(lengths.max())), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.tokens)] = r.tokens
+        first, caches, _ = peng.prefill(toks, lengths)
+        pending = [(r, int(first[i]),
+                    trim_request_cache(caches, i, int(lengths[i])),
+                    int(lengths[i])) for i, r in enumerate(reqs)]
+        while pending:
+            n = dec.admit_many(pending)
+            pending = pending[n:]
+            dec.run_until_drained()
+
+    def continuous():
+        sched = RegionScheduler(peng, dec, max_prefill_batch=8)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+
+    def timed(fn, reps=2):
+        best = (0.0, float("inf"), 0)          # (occupancy, wall, tokens)
+        for _ in range(reps):
+            _reset_decode(dec)
+            t0 = time.perf_counter()
+            fn()
+            wall = time.perf_counter() - t0
+            occ = dec.slot_busy_s / (SLOTS * wall)
+            if occ > best[0]:
+                best = (occ, wall, dec.tokens_out)
+        return best
+
+    # warm run of each regime compiles its batch shapes out of the timing
+    _reset_decode(dec)
+    alternating()
+    _reset_decode(dec)
+    continuous()
+    warm_compiles = peng.compiles
+    alt_occ, alt_wall, alt_toks = timed(alternating)
+    con_occ, con_wall, con_toks = timed(continuous)
+    recompiles = peng.compiles - warm_compiles
+    alt_good, con_good = alt_toks / alt_wall, con_toks / con_wall
+    emit("engine/occupancy_alternating", alt_wall * 1e6,
+         f"occ={alt_occ:.3f} {alt_good:.1f}tok/s slots={SLOTS}")
+    emit("engine/occupancy_continuous", con_wall * 1e6,
+         f"occ={con_occ:.3f} {con_good:.1f}tok/s "
+         f"gain={con_occ / max(alt_occ, 1e-9):.2f}x")
+    assert con_occ > alt_occ, (
+        f"continuous scheduler occupancy {con_occ:.3f} not above "
+        f"alternating baseline {alt_occ:.3f}")
+    assert recompiles == 0, (
+        f"{recompiles} prefill recompiles during occupancy bench")
+    assert dec.block_compiles in (None, 1), (
+        f"decode block recompiled: {dec.block_compiles}")
+    return {"slots": SLOTS, "block_size": BLOCK, "capacity": capacity,
+            "requests": len(reqs), "long_prompts": n_long,
+            "long_len": LONG_LEN, "new_tokens_hi": hi_new,
+            "occupancy_continuous": round(con_occ, 4),
+            "occupancy_alternating": round(alt_occ, 4),
+            "goodput_tok_s_continuous": round(con_good, 1),
+            "goodput_tok_s_alternating": round(alt_good, 1),
+            "recompiles_after_warmup": recompiles}
+
+
 def _setup(cfg, max_new):
     model = Model(cfg, use_kernels=False)
     params = model.init(jax.random.PRNGKey(0))
@@ -202,13 +317,20 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
     }
     admission = bench_admission(model_l, params_l, entries_l)
     prefill = bench_prefill_buckets(model_a, params_a, cfg_a, smoke)
+    occupancy = bench_occupancy(model_a, params_a, cfg_a, smoke)
     write_json(out_path, {
         "archs": {"linear_state": ARCH_LINEAR, "attention": ARCH_ATTN},
         "smoke": smoke, "backend": jax.default_backend(),
         # headline: block-decode speedup at SLOTS active slots vs the
         # per-token loop (linear-state regime; see module docstring)
         "decode_speedup_at_16_slots": decode["linear_state"]["speedup"],
+        # headline: continuous-scheduler decode-slot occupancy vs the
+        # alternating-loop baseline, same mixed load at SLOTS slots
+        "occupancy_at_16_slots": occupancy["occupancy_continuous"],
+        "occupancy_alternating_baseline":
+            occupancy["occupancy_alternating"],
         "decode": decode, "admission": admission, "prefill": prefill,
+        "occupancy": occupancy,
     })
     return True
 

@@ -34,9 +34,13 @@ def main(smoke: bool = False):
          f"{cv['route_agreement']:.3f} ({cv['requests']}req)")
     emit("serve/wire_compression", us, f"{dm['wire_compression']:.2f}x")
     emit("serve/egress_ratio", us, f"{cv['egress_bytes']['ratio']:.2f}")
+    emit("serve/occupancy", us,
+         f"{dm['occupancy']:.3f} goodput={dm['goodput_tok_s']:.1f}tok/s")
     assert cv["route_agreement"] == 1.0, (
         f"frozen-threshold route agreement broke: {cv['mismatches']}")
     assert dm["wire_compression"] > 1.0, "int8 wire compression inactive"
+    assert 0.0 < dm["occupancy"] <= 1.0, (
+        f"scheduler occupancy out of range: {dm['occupancy']}")
 
 
 if __name__ == "__main__":

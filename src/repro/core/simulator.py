@@ -68,6 +68,11 @@ A single priority-queue loop over exact event times — no fixed dt:
                     owner<->target pair link.
   * DECODE_DONE   — frees a decode slot in the request's home cluster
                     (slot count = N_d,c x BS_max).
+  * ADMIT         — (``decode_block_tokens`` > 0) a ready request deferred
+                    to the next decode block boundary claims its slot; both
+                    engines model the live ``RegionScheduler``'s admit-at-
+                    block-boundary cadence, and decode holds slots for
+                    whole blocks.  0 (default) = exact-time admission.
   * CONTROL       — every ``control_dt``: the router's short-term congestion
                     loop observes aggregated link telemetry, and the
                     autoscaler's long-term loop may convert P<->D roles
@@ -161,12 +166,13 @@ class InstancePool:
     def submit(self, req, service_time: float):
         self.queue.append((req, service_time))
 
-    def tick(self, now: float, dt: float, on_start):
+    def tick(self, now: float, dt: float, on_start, admit: bool = True):
         self.busy = [t for t in self.busy if t > now]
-        while self.queue and len(self.busy) < self.capacity:
-            req, st = self.queue.popleft()
-            self.busy.append(now + st)
-            on_start(req, now, now + st)
+        if admit:
+            while self.queue and len(self.busy) < self.capacity:
+                req, st = self.queue.popleft()
+                self.busy.append(now + st)
+                on_start(req, now, now + st)
         self.busy_time += dt * len(self.busy)
         self.cap_time += dt * max(1, self.capacity)
 
@@ -259,11 +265,18 @@ class SimConfig:
     # -- regionalized control plane -----------------------------------------
     roam_prob: float = 0.0              # P(continuing session switches home)
     max_open_sessions: int = 512        # live-session window (explicit evict)
+    # -- continuous-batching fidelity ---------------------------------------
+    # > 0: decode admission happens only at block boundaries (every
+    # decode_block_tokens * Workload.t_decode seconds), matching the live
+    # RegionScheduler's step_block cadence, and decode service time is
+    # rounded up to whole blocks.  0 (default) keeps the legacy exact-time
+    # admission — byte-identical traces, golden tests untouched.
+    decode_block_tokens: int = 0
 
 
 # event kinds, ordered so ties process deterministically
 (_EV_ARRIVAL, _EV_PREFILL_DONE, _EV_DECODE_DONE, _EV_CONTROL, _EV_LINK,
- _EV_WARMUP) = range(6)
+ _EV_WARMUP, _EV_ADMIT) = range(7)
 
 
 class PrfaasSimulator:
@@ -356,6 +369,11 @@ class PrfaasSimulator:
         # external arrival trace (policy/actual cross-validation): replaces
         # the generated MMPP trace when set via ``inject_trace``
         self._external_trace: Optional[List[Request]] = None
+        # continuous-batching fidelity: decode admission quantized to the
+        # live scheduler's step_block cadence (0 = legacy exact-time)
+        if sim.decode_block_tokens < 0:
+            raise ValueError("decode_block_tokens must be >= 0")
+        self._block_s = sim.decode_block_tokens * workload.t_decode
 
     def _build_topology(self) -> LinkTopology:
         """Star topology PrfaaS->each region (+ optional PD mesh).  The
@@ -539,6 +557,23 @@ class PrfaasSimulator:
         return self.prfaas_pool if cluster == PRFAAS \
             else self.pdp_pools[cluster]
 
+    # -------------------------------------------- decode block granularity
+    def _block_boundary(self, t: float) -> float:
+        """Next decode block boundary at or after ``t`` (t itself when it
+        lies on one, or always when block granularity is off)."""
+        if self._block_s <= 0:
+            return t
+        return math.ceil((t - 1e-9) / self._block_s) * self._block_s
+
+    def _decode_service_time(self) -> float:
+        """Per-request decode slot hold time; with block granularity on,
+        the slot is held for whole blocks (output_len rounded up)."""
+        n = self.w.output_len
+        b = self.sim.decode_block_tokens
+        if b > 0:
+            n = -(-n // b) * b
+        return n * self.w.t_decode
+
     def _route(self, req: Request) -> Tuple[str, float]:
         n_blocks = req.total_len // self.sim.block_tokens
         matches = {name: c.match(req.session, n_blocks)
@@ -657,7 +692,7 @@ class PrfaasSimulator:
         idx = 0
         now = 0.0
         self._inflight: List[Request] = []
-        decode_time = w.output_len * w.t_decode
+        decode_time = self._decode_service_time()
         t0 = sim.sim_time * sim.warmup_frac
         egress_snapped = False
         steps = int(sim.sim_time / sim.dt)
@@ -677,6 +712,11 @@ class PrfaasSimulator:
             for name, pool in self.pdp_pools.items():
                 pool.tick(now, sim.dt, self._on_prefill_start(name))
             self.topology.tick(now, sim.dt)
+            # decode block granularity: only ticks whose interval crosses a
+            # block boundary admit into decode slots (all ticks when off)
+            at_boundary = (self._block_s <= 0 or math.floor(
+                (now + 1e-9) / self._block_s) != math.floor(
+                (now - sim.dt + 1e-9) / self._block_s) or step == 0)
             # prefill+transfer complete -> decode queue (+cache insert)
             still = []
             for req in self._inflight:
@@ -691,7 +731,8 @@ class PrfaasSimulator:
                     still.append(req)
             self._inflight = still
             for pool in self.decode_pools.values():
-                pool.tick(now, sim.dt, self._on_decode_start)
+                pool.tick(now, sim.dt, self._on_decode_start,
+                          admit=at_boundary)
             self._observe_regions()
             for name in (self._pd_names if self.autoscalers else ()):
                 new_sys = self.autoscalers[name].maybe_rebalance(
@@ -741,8 +782,19 @@ class PrfaasSimulator:
         self._ready_seen.add(req.rid)
         self.kv.clusters[req.decision.target].insert(
             req.session, req.total_len // self.sim.block_tokens)
-        if self.decode_pools[req.home].submit(req, t):
-            self._start_decode(req, t)
+        self._admit_decode(req, t)
+
+    def _admit_decode(self, req: Request, t: float):
+        """Hand a ready request to its home decode pool — at the exact
+        ready time by default, or deferred to the next block boundary when
+        ``decode_block_tokens`` models the live scheduler's admit-at-
+        boundary cadence."""
+        tb = self._block_boundary(t)
+        if tb > t + 1e-12:
+            self._push(tb, _EV_ADMIT, req)
+            return
+        if self.decode_pools[req.home].submit(req, tb):
+            self._start_decode(req, tb)
 
     def _start_decode(self, req: Request, now: float):
         req.decode_start = now
@@ -769,7 +821,7 @@ class PrfaasSimulator:
                 self._start_prefill(req, st, name, now)
             for req in self.decode_pools[name].set_capacity(
                     new_sys.n_d * self.w.bs_max, now):
-                self._start_decode(req, now)
+                self._start_decode(req, self._block_boundary(now))
         nxt = now + self.sim.control_dt
         if nxt <= self.sim.sim_time:
             self._push(nxt, _EV_CONTROL)
@@ -783,7 +835,7 @@ class PrfaasSimulator:
         self.decode_pools = {
             name: EventPool(n_d_c * w.bs_max)
             for name, (_, n_d_c) in zip(self._pd_names, self._per_cluster)}
-        self._decode_time = w.output_len * w.t_decode
+        self._decode_time = self._decode_service_time()
         self._heap: List[tuple] = []
         self._seq = itertools.count()
         self._link_wake = math.inf
@@ -813,7 +865,13 @@ class PrfaasSimulator:
             elif kind == _EV_DECODE_DONE:
                 nxt = self.decode_pools[payload.home].release(t)
                 if nxt is not None:
-                    self._start_decode(nxt, t)
+                    # a freed slot refills at the next block boundary (==
+                    # t when block granularity is off: done times already
+                    # lie on the admitting request's block grid)
+                    self._start_decode(nxt, self._block_boundary(t))
+            elif kind == _EV_ADMIT:
+                if self.decode_pools[payload.home].submit(payload, t):
+                    self._start_decode(payload, t)
             elif kind == _EV_CONTROL:
                 self._ev_control(t)
             elif kind == _EV_WARMUP:

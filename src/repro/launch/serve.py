@@ -71,6 +71,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "PrfaasSimulator and report route agreement")
     ap.add_argument("--session-prob", type=float, default=0.35,
                     help="P(request continues an open session)")
+    ap.add_argument("--decode-block-size", type=int, default=8,
+                    help="tokens per on-device decode block (admission "
+                         "happens at these boundaries, live and replayed)")
+    ap.add_argument("--max-prefill-bucket", type=int, default=None,
+                    help="pow2 bucket cap; longer prompts run as chunked "
+                         "prefill interleaved between decode blocks")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the top-k logits (0 = full vocab)")
     ap.add_argument("--batch-gap-s", type=float, default=120.0,
                     help="virtual seconds between batches (replay spacing)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
@@ -163,6 +173,9 @@ def cross_validate(args, model_cfg, dep: CrossDCDeployment, trace,
         pd_link_gbps=_parse_floats(args.pd_link_gbps, k, "--pd-link-gbps"),
         pd_mesh_gbps=args.pd_mesh_gbps,
         block_tokens=dep.cfg.block_tokens,
+        # replay decode admission at the live engine's block-boundary
+        # cadence (the RegionScheduler admits at step_block boundaries)
+        decode_block_tokens=dep.cfg.decode_block_size,
         pool_blocks=200_000, engine="event",
         # frozen: no control epochs -> per-home thresholds never move on
         # either side, so routing must agree exactly
@@ -219,6 +232,10 @@ def run_serve(args) -> dict:
         decode_slots=max(4, -(-args.requests // max(1, args.batches))),
         capacity=512, wire_compression=args.wire_compression,
         adapt_thresholds=not args.freeze_thresholds,
+        decode_block_size=args.decode_block_size,
+        max_prefill_bucket=args.max_prefill_bucket,
+        temperature=args.temperature, top_k=args.top_k,
+        sample_seed=args.seed,
         calibration=args.calibration)
     model = Model(cfg, use_kernels=False)
     params = model.init(jax.random.PRNGKey(0))

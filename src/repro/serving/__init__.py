@@ -1,8 +1,9 @@
 from repro.serving.api import Request, Response
 from repro.serving.deployment import CrossDCDeployment, DeploymentConfig
-from repro.serving.engine import (DecodeEngine, PrefillEngine,
+from repro.serving.engine import (ChunkedPrefill, DecodeEngine,
+                                  PrefillEngine, RegionScheduler,
                                   slice_request_cache, trim_request_cache)
 
 __all__ = ["Request", "Response", "CrossDCDeployment", "DeploymentConfig",
-           "DecodeEngine", "PrefillEngine", "slice_request_cache",
-           "trim_request_cache"]
+           "ChunkedPrefill", "DecodeEngine", "PrefillEngine",
+           "RegionScheduler", "slice_request_cache", "trim_request_cache"]

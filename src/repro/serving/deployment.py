@@ -5,10 +5,20 @@ Topology (``DeploymentConfig.pd_clusters`` = N regions):
 
   * "PrfaaS cluster"   — a shared ``PrefillEngine`` (long requests, l > t)
                          with its own ``HybridPrefixCache``
-  * N "PD regions"     — each with its own ``DecodeEngine`` and
-                         ``HybridPrefixCache`` (local prefill runs on a
-                         shared PD ``PrefillEngine``: in-process the compute
-                         is identical, the policy state is per-region)
+  * N "PD regions"     — each with its own ``DecodeEngine``,
+                         ``HybridPrefixCache``, and ``RegionScheduler``
+                         (local prefill runs on a shared PD
+                         ``PrefillEngine``: in-process the compute is
+                         identical, the policy state is per-region).
+                         Routed requests feed the home region's scheduler
+                         immediately; each scheduler tick interleaves one
+                         prefill unit (bucket batch or long-prompt chunk)
+                         with one decode block, admitting finished prefills
+                         at block boundaries — no drain-and-re-admit batch
+                         loop, no decode idle while prefill runs.  Every
+                         finished unit passes through ``_unit_done``, which
+                         keeps the wire/TTFT/truncation accounting of the
+                         old batch loop at unit granularity.
   * inter-DC links     — a ``core.transfer.LinkTopology``: one exact
                          fair-share ``Link`` per PrfaaS<->region star pair,
                          plus an optional PD<->PD mesh for cross-region
@@ -56,7 +66,7 @@ from repro.models.kvcache import (cache_num_bytes, dequantize_cache_from_wire,
                                   kv_bytes, quantize_cache_for_wire)
 from repro.serving.api import Request, Response
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
-                                  trim_request_cache)
+                                  RegionScheduler, trim_request_cache)
 
 
 @dataclass
@@ -71,6 +81,10 @@ class DeploymentConfig:
     decode_block_size: int = 8         # tokens per on-device decode block
     min_prefill_bucket: int = 32       # smallest pow2 prefill length bucket
     max_prefill_bucket: Optional[int] = None  # chunked prefill past this
+    max_prefill_batch: int = 8         # requests per scheduler prefill unit
+    temperature: float = 0.0           # 0 = greedy (bit-identical default)
+    top_k: int = 0                     # 0 = full vocab when sampling
+    sample_seed: int = 0               # decode sampling PRNG seed
     block_tokens: int = 16
     pool_blocks: int = 4096
     layerwise_pipeline: bool = True
@@ -106,7 +120,17 @@ class CrossDCDeployment:
         self.pd_prefill = PrefillEngine(model, params, **bucket_kw)
         self.decoders: Dict[str, DecodeEngine] = {
             name: DecodeEngine(model, params, cfg.decode_slots, cfg.capacity,
-                               block_size=cfg.decode_block_size)
+                               block_size=cfg.decode_block_size,
+                               temperature=cfg.temperature, top_k=cfg.top_k,
+                               seed=cfg.sample_seed)
+            for name in self.pd_names}
+        # one continuously-batched scheduler loop per region: it owns the
+        # region's prefill queue and decode slots together; every finished
+        # unit flows through _unit_done for wire/metrics accounting
+        self.schedulers: Dict[str, RegionScheduler] = {
+            name: RegionScheduler(self.pd_prefill, self.decoders[name],
+                                  max_prefill_batch=cfg.max_prefill_batch,
+                                  on_unit_done=self._unit_done)
             for name in self.pd_names}
         self.caches: Dict[str, HybridPrefixCache] = {PRFAAS: self._new_cache()}
         for name in self.pd_names:
@@ -176,113 +200,110 @@ class CrossDCDeployment:
         return decision
 
     # ------------------------------------------------------------ lifecycle
-    def submit_batch(self, reqs: List[Request]) -> Dict[int, Response]:
-        """Serve a batch of requests end-to-end; returns responses."""
-        groups: Dict[str, List[Request]] = {PRFAAS: []}
-        groups.update({name: [] for name in self.pd_names})
-        for r in reqs:
-            groups[self._route(r).target].append(r)
-
-        for cluster, rs in groups.items():
-            if not rs:
-                continue
-            engine = self.prfaas if cluster == PRFAAS else self.pd_prefill
-            # one bucketed prefill batch: the engine pads to a power-of-two
-            # length bucket (compiling once per bucket) and uses lengths to
-            # keep per-request logits/states exact despite the padding
-            lengths = np.array([len(r.tokens) for r in rs], np.int32)
-            toks = np.zeros((len(rs), int(lengths.max())), np.int32)
-            for i, r in enumerate(rs):
-                toks[i, :len(r.tokens)] = r.tokens   # left-aligned
-            first, caches, wall = engine.prefill(toks, lengths)
-            self.topology.advance(self.virtual_now)  # sync link clocks
-            flows: Dict[int, list] = {}
-            admits: Dict[str, list] = {}
-            for i, r in enumerate(rs):
-                r.prefill_s = wall
-                # trim to the request's true length: bucket padding must not
-                # inflate wire bytes (or corrupt SWA ring placement)
-                payload = trim_request_cache(caches, i, len(r.tokens))
-                r.kv_bytes_raw = cache_num_bytes(payload)
-                r.transfer_s = 0.0
-                fl = []
-                if cluster == PRFAAS:
-                    if self.cfg.wire_compression:
-                        # the quantized pytree IS what crosses the link:
-                        # bytes come from the quantized leaves, and the
-                        # cache is dequantized before decode admission
-                        payload, nbytes = quantize_cache_for_wire(payload)
-                        self._wire_raw += r.kv_bytes_raw
-                        self._wire_quant += nbytes
-                    else:
-                        nbytes = r.kv_bytes_raw
-                    r.kv_bytes = nbytes
-                    # layer-wise pipelined: KV becomes wire-eligible as
-                    # prefill computes (linear ramp over the prefill);
-                    # unpipelined: the flow only starts once prefill ends.
-                    # Either way the batch's flows contend on the exact
-                    # fair-share pair link solver.
-                    start = (self.virtual_now if self.cfg.layerwise_pipeline
-                             else self.virtual_now + wall)
-                    fl.append(("kv", PRFAAS, r.home, self.topology.submit(
-                        PRFAAS, r.home, max(float(nbytes), 1.0), start,
-                        ramp_end=self.virtual_now + wall)))
+    def _unit_done(self, engine: PrefillEngine, rs: List[Request], lengths,
+                   first, caches, wall: float) -> list:
+        """Per-unit accounting hook the region schedulers call when a
+        prefill unit (bucketed batch or chunked prompt) finishes: trim to
+        true lengths, quantize + submit wire flows, insert prefix-cache
+        entries, compute transfer exposure and TTFT — exactly the
+        accounting the old per-cluster batch loop did, at unit granularity.
+        Returns the decode admit entries for the scheduler's ready queue."""
+        self.topology.advance(self.virtual_now)      # sync link clocks
+        flows: Dict[int, list] = {}
+        entries = []
+        for i, r in enumerate(rs):
+            cluster = r.decision.target
+            r.prefill_s = wall
+            # trim to the request's true length: bucket padding must not
+            # inflate wire bytes (or corrupt SWA ring placement)
+            payload = trim_request_cache(caches, i, len(r.tokens))
+            r.kv_bytes_raw = cache_num_bytes(payload)
+            r.transfer_s = 0.0
+            fl = []
+            if cluster == PRFAAS:
+                if self.cfg.wire_compression:
+                    # the quantized pytree IS what crosses the link: bytes
+                    # come from the quantized leaves, and the cache is
+                    # dequantized before decode admission
+                    payload, nbytes = quantize_cache_for_wire(payload)
+                    self._wire_raw += r.kv_bytes_raw
+                    self._wire_quant += nbytes
                 else:
-                    r.kv_bytes = r.kv_bytes_raw      # intra-cluster RDMA
-                d = r.decision
-                if d.cross_cache_transfer and d.cached_tokens:
-                    # cached prefix lives in another cluster: the copy is
-                    # already materialized (eager flow), charged to the
-                    # owner<->target pair link, compressed like the rest of
-                    # the wire traffic
-                    nb = float(kv_bytes(self.model.cfg, d.cached_tokens))
-                    if self.cfg.wire_compression:
-                        nb /= self.measured_compression()
-                    nb = max(nb, 1.0)
-                    r.cross_kv_bytes = nb
-                    fl.append(("copy", d.cache_cluster, d.target,
-                               self.topology.submit(
-                                   d.cache_cluster, d.target, nb,
-                                   self.virtual_now,
-                                   ramp_end=self.virtual_now)))
-                flows[r.rid] = fl
-                self.caches[cluster].insert(list(map(int, r.tokens)))
-                if self.cfg.wire_compression and cluster == PRFAAS:
-                    payload = dequantize_cache_from_wire(payload)
-                admits.setdefault(r.home, []).append(
-                    (r, int(first[i]), payload, len(r.tokens)))
-            # batched admission: each region's shipped caches are placed
-            # into their decode slots in ONE jit'd call per region; if a
-            # region's batch exceeds its free slots, drain the active
-            # streams and admit the remainder (continuous batching at batch
-            # granularity — nothing is silently dropped)
-            for home, entries in admits.items():
-                dec = self.decoders[home]
-                pending = list(entries)
-                while pending:
-                    n = dec.admit_many(pending)
-                    pending = pending[n:]
-                    if pending:
-                        dec.run_until_drained()
-            if any(flows.values()):
-                self.topology.run_until_idle()
-            for r in rs:
-                exposure = 0.0
-                for kind, a, b, f in flows.get(r.rid, ()):
-                    tail = 0.0
-                    if kind == "kv":
-                        # the pipelined prefill KV's last layer can never
-                        # overlap its own compute (eager "copy" flows are
-                        # already materialized: no serial tail)
-                        floor = 1.0 / max(1, self.model.cfg.n_layers)
-                        tail = f.total_bytes * floor \
-                            / self.topology.link(a, b).current_capacity()
-                    exposed = f.done_time - (self.virtual_now + wall)
-                    exposure = max(exposure, exposed, tail)
-                if flows.get(r.rid):
-                    r.transfer_s = max(exposure, 0.0)
-                r.ttft_s = r.prefill_s + r.transfer_s
-            self.virtual_now += wall
+                    nbytes = r.kv_bytes_raw
+                r.kv_bytes = nbytes
+                # layer-wise pipelined: KV becomes wire-eligible as prefill
+                # computes (linear ramp over the prefill); unpipelined: the
+                # flow only starts once prefill ends.  Either way the
+                # unit's flows contend on the exact fair-share pair link
+                # solver.
+                start = (self.virtual_now if self.cfg.layerwise_pipeline
+                         else self.virtual_now + wall)
+                fl.append(("kv", PRFAAS, r.home, self.topology.submit(
+                    PRFAAS, r.home, max(float(nbytes), 1.0), start,
+                    ramp_end=self.virtual_now + wall)))
+            else:
+                r.kv_bytes = r.kv_bytes_raw          # intra-cluster RDMA
+            d = r.decision
+            if d.cross_cache_transfer and d.cached_tokens:
+                # cached prefix lives in another cluster: the copy is
+                # already materialized (eager flow), charged to the
+                # owner<->target pair link, compressed like the rest of the
+                # wire traffic
+                nb = float(kv_bytes(self.model.cfg, d.cached_tokens))
+                if self.cfg.wire_compression:
+                    nb /= self.measured_compression()
+                nb = max(nb, 1.0)
+                r.cross_kv_bytes = nb
+                fl.append(("copy", d.cache_cluster, d.target,
+                           self.topology.submit(
+                               d.cache_cluster, d.target, nb,
+                               self.virtual_now,
+                               ramp_end=self.virtual_now)))
+            flows[r.rid] = fl
+            self.caches[cluster].insert(list(map(int, r.tokens)))
+            if self.cfg.wire_compression and cluster == PRFAAS:
+                payload = dequantize_cache_from_wire(payload)
+            entries.append((r, int(first[i]), payload, len(r.tokens)))
+        if any(flows.values()):
+            self.topology.run_until_idle()
+        for r in rs:
+            exposure = 0.0
+            for kind, a, b, f in flows.get(r.rid, ()):
+                tail = 0.0
+                if kind == "kv":
+                    # the pipelined prefill KV's last layer can never
+                    # overlap its own compute (eager "copy" flows are
+                    # already materialized: no serial tail)
+                    floor = 1.0 / max(1, self.model.cfg.n_layers)
+                    tail = f.total_bytes * floor \
+                        / self.topology.link(a, b).current_capacity()
+                exposed = f.done_time - (self.virtual_now + wall)
+                exposure = max(exposure, exposed, tail)
+            if flows.get(r.rid):
+                r.transfer_s = max(exposure, 0.0)
+            r.ttft_s = r.prefill_s + r.transfer_s
+        self.virtual_now += wall
+        return entries
+
+    def submit_batch(self, reqs: List[Request]) -> Dict[int, Response]:
+        """Serve a batch of requests end-to-end; returns responses.
+
+        Requests feed their home region's ``RegionScheduler`` as they
+        route; the scheduler loops then run concurrently (round-robin
+        ticks, in-process) — prefill units interleave with decode blocks
+        and admission happens at block boundaries, never by draining a
+        region to empty first."""
+        for r in reqs:
+            decision = self._route(r)
+            engine = (self.prfaas if decision.target == PRFAAS
+                      else self.pd_prefill)
+            self.schedulers[r.home].submit(r, engine)
+
+        scheds = list(self.schedulers.values())
+        while any(s.has_work for s in scheds):
+            for s in scheds:
+                if s.has_work:
+                    s.tick()
 
         # live short-term loop: every region feeds its OWN aggregated
         # congestion view back into the shared Router, adapting that home's
@@ -294,7 +315,6 @@ class CrossDCDeployment:
 
         out: Dict[int, Response] = {}
         for dec in self.decoders.values():
-            dec.run_until_drained()
             out.update(dec.outputs)
         self.completed.extend(reqs)
         return out
@@ -321,7 +341,13 @@ class CrossDCDeployment:
                 "threshold": self.router.threshold_for(name),
                 "cache_hit_rate": self.caches[name].hit_rate(),
                 "truncations": self.decoders[name].truncations,
+                "occupancy": self.schedulers[name].occupancy(),
+                "goodput_tok_s": self.schedulers[name].goodput_tok_s(),
+                "max_admit_wait": self.schedulers[name].max_admit_wait,
             }
+        busy = sum(d.slot_busy_s for d in self.decoders.values())
+        span = sum(self.cfg.decode_slots * s.wall_s
+                   for s in self.schedulers.values())
         return {
             "requests": len(done),
             "offloaded": sum(1 for r in done if r.route == PRFAAS),
@@ -335,6 +361,9 @@ class CrossDCDeployment:
             "router_decisions": dict(self.router.decisions),
             "cross_transfers": self.router.cross_transfers,
             "truncations": sum(d.truncations for d in self.decoders.values()),
+            "occupancy": busy / span if span > 0 else 0.0,
+            "goodput_tok_s": sum(s.goodput_tok_s()
+                                 for s in self.schedulers.values()),
             "wire_compression": self.measured_compression(),
             "clusters": per_region,
             "links": self.topology.pair_stats(),

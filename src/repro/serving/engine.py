@@ -1,35 +1,50 @@
-"""Prefill + continuous-batching decode engines (pure JAX), built around a
-recompile-free hot path.
+"""Continuously-batched region engine: ONE scheduler loop for prefill
+chunks and decode blocks.
 
-``PrefillEngine`` plays the PrfaaS / PD-P role: runs full-sequence prefill
-and emits the request's KVCache (the bytes that cross the inter-DC link).
-Prompts are padded to power-of-two **length buckets** (and batches to
-power-of-two batch buckets), so each (batch, length) bucket compiles
-exactly once; per-request ``lengths`` are threaded into ``model.prefill``
-so logits and linear-mixer states are EXACT despite the padding (see
-``models.model.prefill``).  Prompts longer than ``max_bucket`` run as
-**chunked prefill**: fixed-shape chunks of ``max_bucket`` tokens through
-``model.prefill_chunk`` — attention chunks attend over the prior chunks'
-cache via the ``q_offset`` flash path, linear mixers carry state — so the
-compile set stays bounded (one compile per chunk index) for arbitrarily
-long prompts.
+``RegionScheduler`` is the region's state machine.  Every request moves
 
-``DecodeEngine`` plays PD-D: a slot-based continuous-batching loop.
+    queued -> prefilling -> [chunk-interleaved] -> ready -> decoding
+           -> retired
 
-  * **batched admission** — ``admit_many`` writes K shipped request caches
-    into their slots in ONE jit'd call (K in-place slot updates on the
-    donated buffers; K padded to a power of two so admission compiles are
-    bounded), instead of K serial one-jit-call-per-request placements.
-  * **multi-token decode** — ``step_block`` runs ``block_size`` iterations
-    of ``model.decode_step`` inside one jit'd ``lax.scan`` with the greedy
-    token fed back on-device; tokens/lengths sync to host ONCE per block
-    and slot bookkeeping is vectorized numpy between blocks.  ``step()``
-    (one host round-trip per token) is kept as the measured baseline.
-  * free slots live in a deque maintained on admit/retire (the old
-    ``free_slots()`` O(num_slots) scan ran on every admission).
-  * a stream retired at the KV-capacity wall with generation budget left is
-    flagged ``Response.truncated`` and counted in ``truncations`` instead
-    of masquerading as a clean finish.
+  * **queued** — routed requests wait in a FIFO prefill queue owned by the
+    scheduler (grouped on dequeue into same-bucket batches, so the
+    recompile-free bucket property is preserved).
+  * **prefilling** — one bucketed ``PrefillEngine.prefill`` call per unit;
+    prompts past ``max_bucket`` become a **chunk-interleaved** unit instead:
+    a ``ChunkedPrefill`` that advances ONE fixed-shape chunk per scheduler
+    tick, so a long prompt never blocks decode for more than one chunk.
+  * **ready** — prefill finished (KV trimmed / shipped); the request waits
+    for the next decode block boundary.
+  * **decoding** — ``admit_many`` places every ready request into free
+    slots in one jit'd call at the block boundary, then ``step_block``
+    advances all active streams ``block_size`` tokens in one dispatch.
+    Slots freed by retiring streams are refilled at the NEXT boundary —
+    decode never drains to empty while work is queued.
+  * **retired** — budget exhausted or KV-capacity wall (the latter flagged
+    ``Response.truncated`` and counted, never a fake clean finish).
+
+One ``tick()`` = admit ready -> advance one prefill unit -> one decode
+block.  The old alternating regime (prefill a whole batch, admit, drain to
+empty, repeat) exists only as the measured baseline in
+``benchmarks.engine_bench``.
+
+``PrefillEngine`` (PrfaaS / PD-P): pow2 length x batch buckets compile
+exactly once; per-request ``lengths`` keep padded results EXACT; past
+``max_bucket`` prompts run as fixed-shape ``ChunkedPrefill`` chunks (the
+``q_offset`` flash path + linear-mixer state carry), with compiles bounded
+per chunk index.  ``warmup()`` precompiles the bucket grid AND the chunk
+programs for past-``max_bucket`` lengths (chunk-count exact).
+
+``DecodeEngine`` (PD-D): slot-based batched decode.  ``admit_many`` writes
+K caches in one jit'd scatter; ``step_block`` runs ``block_size`` steps of
+``model.decode_step`` in one jit'd ``lax.scan`` with the next token fed
+back on-device.  An RNG key is threaded through the scan: with
+``temperature > 0`` tokens are sampled (optionally top-k) from a
+deterministic per-block key; the default ``temperature=0`` takes the
+argmax through the identical program and stays bit-identical to the
+pre-sampling engine.  The engine also integrates slot-occupancy telemetry
+(``slot_busy_s`` / ``decode_wall_s`` / ``tokens_out``) so schedulers and
+benchmarks can report decode-slot occupancy and goodput.
 
 Compile counts are observable (``PrefillEngine.compiles``,
 ``DecodeEngine.block_compiles``) so benchmarks and tests can assert the
@@ -116,6 +131,12 @@ class PrefillEngine:
     def bucket_for(self, max_len: int) -> int:
         return next_pow2(max_len, self.min_bucket)
 
+    def is_chunked(self, length: int) -> bool:
+        """True when a prompt of ``length`` tokens runs as chunked prefill
+        (its bucket exceeds ``max_bucket``)."""
+        return (self.max_bucket is not None
+                and self.bucket_for(int(length)) > self.max_bucket)
+
     @property
     def compiles(self) -> int:
         """Number of distinct compiled prefill programs (actual jit-cache
@@ -128,22 +149,30 @@ class PrefillEngine:
         return sum(sizes)
 
     def warmup(self, batch_sizes: Sequence[int], lengths: Sequence[int]):
-        """Compile every (batch-bucket, length-bucket) pair up front."""
+        """Compile every (batch-bucket, length-bucket) pair up front — and,
+        for engines with ``max_bucket`` set, the chunked-prefill chunk
+        programs past it.  Chunk warmup is chunk-count exact: a length L
+        past the max bucket warms ``ceil(L / max_bucket)`` chunk programs
+        (each chunk index is its own program — the prior-cache operand
+        grows with the index), which covers every shorter chunked prompt;
+        the pre-fix code rounded L up to a power of two first, compiling
+        chunk programs no real prompt of length <= L ever reaches."""
+        shapes = set()
+        for l in lengths:
+            if self.is_chunked(l):
+                C = self.max_bucket
+                shapes.add(-(-int(l) // C) * C)     # ceil to chunk multiple
+            else:
+                shapes.add(self.bucket_for(l))
         for b in sorted({next_pow2(b) for b in batch_sizes}):
-            for l in sorted({self.bucket_for(l) for l in lengths}):
+            for l in sorted(shapes):
                 toks = np.zeros((b, l), np.int32)
                 self.prefill(toks, np.full((b,), l, np.int32))
 
-    # -------------------------------------------------------------- public
-    def prefill(self, tokens: np.ndarray, lengths=None):
-        """tokens: (B, S) right-padded prompts; lengths: (B,) valid counts
-        (defaults to S).  Returns (first_token (B,), caches, wall_s).
-
-        The returned caches are bucket-padded; slice a request out with
-        ``trim_request_cache(caches, i, length)`` before shipping so wire
-        bytes reflect the prompt, not the bucket.
-        """
-        t0 = time.perf_counter()
+    def _pad(self, tokens: np.ndarray, lengths):
+        """Pad a (B, S) prompt batch to its schedulable shape: pow2 length
+        bucket (or chunk-multiple past ``max_bucket``) x pow2 batch bucket.
+        Returns (toks, lens, B, chunked)."""
         tokens = np.asarray(tokens)
         B, S = tokens.shape
         if lengths is None:
@@ -160,58 +189,132 @@ class PrefillEngine:
         toks[:B, :min(S, Sb)] = tokens[:, :Sb]
         lens = np.ones((Bb,), np.int32)                  # pad rows: 1 token
         lens[:B] = np.maximum(lengths, 1)
-        self.calls += 1
+        return toks, lens, B, chunked
 
+    # -------------------------------------------------------------- public
+    def prefill(self, tokens: np.ndarray, lengths=None):
+        """tokens: (B, S) right-padded prompts; lengths: (B,) valid counts
+        (defaults to S).  Returns (first_token (B,), caches, wall_s).
+
+        The returned caches are bucket-padded; slice a request out with
+        ``trim_request_cache(caches, i, length)`` before shipping so wire
+        bytes reflect the prompt, not the bucket.
+        """
+        t0 = time.perf_counter()
+        toks, lens, B, chunked = self._pad(tokens, lengths)
+        self.calls += 1
         if chunked:
-            first, caches = self._chunked_prefill(toks, lens, C)
+            cp = ChunkedPrefill(self, toks, lens, B)
+            while not cp.done:
+                cp.step()
+            first, caches = cp.finish()
         else:
+            Bb, Sb = toks.shape
             self._shape_keys.add(("prefill", Bb, Sb))
             first, caches = self._prefill(self.params, jnp.asarray(toks),
                                           jnp.asarray(lens))
         jax.block_until_ready(first)
         return np.asarray(first)[:B], caches, time.perf_counter() - t0
 
-    def _chunked_prefill(self, toks: np.ndarray, lens: np.ndarray, C: int):
-        Bb, Sb = toks.shape
-        caches = None
-        # (B, 1, d) carry of each row's hidden state at its last prompt
-        # position — O(chunk) activation memory regardless of prompt length,
-        # and the epilogue compiles once per (Bb, C), not per chunk count
-        last = None
-        lens_dev = jnp.asarray(lens)
-        for i in range(Sb // C):
-            self._shape_keys.add(("chunk", Bb, C, i))
-            pos = np.broadcast_to(
-                np.arange(i * C, (i + 1) * C, dtype=np.int32)[None],
-                (Bb, C))
-            chunk_lens = np.clip(lens - i * C, 0, C).astype(np.int32)
-            h, caches = self._chunk(
-                self.params,
-                {"tokens": jnp.asarray(toks[:, i * C:(i + 1) * C]),
-                 "positions": jnp.asarray(pos),
-                 "lengths": jnp.asarray(chunk_lens)},
-                caches)
-            if last is None:
-                last = jnp.zeros((Bb, 1, h.shape[-1]), h.dtype)
-            last = self._carry_last(h, last, lens_dev,
-                                    jnp.int32(i * C))
-            self._shape_keys.add(("carry", Bb, C))
-        self._shape_keys.add(("finish", Bb))
-        first = self._finish(self.params, last,
-                             jnp.ones((Bb,), jnp.int32))
-        return first, caches
+    def start_chunked(self, tokens: np.ndarray, lengths=None
+                      ) -> "ChunkedPrefill":
+        """Begin an incremental chunked prefill the scheduler can advance
+        one chunk at a time (``ChunkedPrefill.step`` between decode
+        blocks).  The prompt batch must be past ``max_bucket``."""
+        toks, lens, B, chunked = self._pad(tokens, lengths)
+        if not chunked:
+            raise ValueError("prompt fits a plain bucket; use prefill()")
+        self.calls += 1
+        return ChunkedPrefill(self, toks, lens, B)
+
+
+class ChunkedPrefill:
+    """One in-flight chunked prefill, schedulable a fixed-shape chunk at a
+    time — the unit ``RegionScheduler`` interleaves between decode blocks.
+
+    ``step()`` runs ONE ``max_bucket``-token chunk through
+    ``model.prefill_chunk`` (attention chunks attend over the prior cache
+    via ``q_offset``; linear mixers carry state) and folds the chunk's
+    hidden states into the (B, 1, d) last-valid-hidden carry;
+    ``finish()`` computes the first decode token from the carry.  Wall time
+    is accumulated across steps so callers account the full prefill cost.
+    """
+
+    def __init__(self, eng: PrefillEngine, toks: np.ndarray,
+                 lens: np.ndarray, n_valid: int):
+        self.eng = eng
+        self.toks = toks                     # (Bb, Sb), Sb = n_chunks * C
+        self.lens = lens
+        self.n_valid = n_valid               # real (unpadded) rows
+        self.C = eng.max_bucket
+        self.n_chunks = toks.shape[1] // self.C
+        self.i = 0                           # next chunk index
+        self.caches = None
+        self._last = None                    # (Bb, 1, d) last-hidden carry
+        self._lens_dev = jnp.asarray(lens)
+        self.wall_s = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.i >= self.n_chunks
+
+    def step(self) -> bool:
+        """Advance one chunk; returns True once all chunks have run."""
+        t0 = time.perf_counter()
+        eng, C, i = self.eng, self.C, self.i
+        Bb = self.toks.shape[0]
+        eng._shape_keys.add(("chunk", Bb, C, i))
+        pos = np.broadcast_to(
+            np.arange(i * C, (i + 1) * C, dtype=np.int32)[None], (Bb, C))
+        chunk_lens = np.clip(self.lens - i * C, 0, C).astype(np.int32)
+        h, self.caches = eng._chunk(
+            eng.params,
+            {"tokens": jnp.asarray(self.toks[:, i * C:(i + 1) * C]),
+             "positions": jnp.asarray(pos),
+             "lengths": jnp.asarray(chunk_lens)},
+            self.caches)
+        if self._last is None:
+            self._last = jnp.zeros((Bb, 1, h.shape[-1]), h.dtype)
+        self._last = eng._carry_last(h, self._last, self._lens_dev,
+                                     jnp.int32(i * C))
+        eng._shape_keys.add(("carry", Bb, C))
+        self.i += 1
+        if self.done:
+            jax.block_until_ready(self._last)
+        self.wall_s += time.perf_counter() - t0
+        return self.done
+
+    def finish(self):
+        """Epilogue after the last ``step()``: returns (first_token
+        (n_valid,) np.int32, caches)."""
+        if not self.done:
+            raise RuntimeError(f"chunked prefill at chunk {self.i}"
+                               f"/{self.n_chunks}; not finished")
+        t0 = time.perf_counter()
+        Bb = self.toks.shape[0]
+        self.eng._shape_keys.add(("finish", Bb))
+        first = self.eng._finish(self.eng.params, self._last,
+                                 jnp.ones((Bb,), jnp.int32))
+        jax.block_until_ready(first)
+        self.wall_s += time.perf_counter() - t0
+        return np.asarray(first)[:self.n_valid], self.caches
 
 
 class DecodeEngine:
     """Slot-based continuous batching decode cluster (see module doc)."""
 
     def __init__(self, model: Model, params, num_slots: int, capacity: int,
-                 block_size: int = 8):
+                 block_size: int = 8, *, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0):
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.capacity = capacity
         self.block_size = max(1, int(block_size))
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._key = jax.random.PRNGKey(int(seed))
+        self._blocks = 0               # step_block dispatch counter (RNG)
         self.caches = jax.jit(
             lambda: model.init_cache(num_slots, capacity))()
         self.lengths = np.zeros((num_slots,), np.int32)
@@ -221,6 +324,13 @@ class DecodeEngine:
         self.slot_req: List[Optional[int]] = [None] * num_slots
         self.outputs: Dict[int, Response] = {}
         self.truncations = 0
+        # occupancy telemetry: wall seconds spent inside step_block, the
+        # same seconds weighted by #active slots, and tokens emitted —
+        # occupancy = slot_busy_s / (num_slots * makespan), goodput =
+        # tokens_out / makespan for whatever makespan the caller measures
+        self.decode_wall_s = 0.0
+        self.slot_busy_s = 0.0
+        self.tokens_out = 0
         self._free = deque(range(num_slots))
         self._step = jax.jit(model.decode_step, donate_argnums=(2,))
         self._block = jax.jit(self._block_impl, donate_argnums=(2,))
@@ -314,17 +424,34 @@ class DecodeEngine:
                 self._retire(i)
         return int(self.active.sum())
 
-    def _block_impl(self, params, tokens, caches, lengths):
-        """``block_size`` greedy decode steps fully on-device."""
+    def _select(self, logits, key):
+        """Next-token rule traced into the block program.  ``temperature``
+        and ``top_k`` are Python-static, so the default greedy engine traces
+        the exact pre-sampling argmax graph (bit-identical tokens); with
+        ``temperature > 0`` tokens are sampled, optionally from the top-k
+        renormalized logits (``top_k=1`` degenerates to greedy)."""
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits = logits / jnp.float32(self.temperature)
+        if self.top_k > 0:
+            kth = jax.lax.top_k(logits, self.top_k)[0][..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+    def _block_impl(self, params, tokens, caches, lengths, key):
+        """``block_size`` decode steps fully on-device; the RNG key rides
+        the scan carry, split once per step."""
         def body(carry, _):
-            toks, caches, lens = carry
+            toks, caches, lens, key = carry
+            key, sub = jax.random.split(key)
             logits, caches = self.model.decode_step(params, toks, caches,
                                                     lens)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return (nxt, caches, lens + 1), nxt
+            nxt = self._select(logits, sub)
+            return (nxt, caches, lens + 1, key), nxt
 
-        (_, caches, _), toks = jax.lax.scan(
-            body, (tokens, caches, lengths), None, length=self.block_size)
+        (_, caches, _, _), toks = jax.lax.scan(
+            body, (tokens, caches, lengths, key), None,
+            length=self.block_size)
         return toks, caches
 
     @property
@@ -341,11 +468,17 @@ class DecodeEngine:
         retirement semantics to ``step()``."""
         if not self.active.any():
             return 0
+        t0 = time.perf_counter()
+        key = jax.random.fold_in(self._key, self._blocks)
+        self._blocks += 1
         toks, self.caches = self._block(
             self.params, jnp.asarray(self.tokens),
-            self.caches, jnp.asarray(self.lengths))
+            self.caches, jnp.asarray(self.lengths), key)
         toks = np.asarray(toks)                       # (block, num_slots)
         idx = np.where(self.active)[0]
+        wall = time.perf_counter() - t0
+        self.decode_wall_s += wall
+        self.slot_busy_s += len(idx) * wall
         # tokens a slot emits before retiring, exactly as step() would:
         # min(budget, room to capacity-1) per block — floored at 1 because
         # step() appends once BEFORE its retirement check, so a slot
@@ -354,6 +487,7 @@ class DecodeEngine:
             np.minimum(self.budget[idx],
                        self.capacity - 1 - self.lengths[idx]),
             1, self.block_size).astype(int)
+        self.tokens_out += int(valid.sum())
         self.lengths[idx] += valid
         self.budget[idx] -= valid
         self.tokens[idx] = toks[valid - 1, idx]
@@ -374,6 +508,170 @@ class DecodeEngine:
             self.step_block()
             steps += 1
         return steps
+
+
+class RegionScheduler:
+    """One continuously-batched loop per region: owns the prefill queue and
+    the decode slot pool together (module doc has the state machine).
+
+    ``submit`` enqueues a routed request, optionally naming which
+    ``PrefillEngine`` runs it — deployments share one PrfaaS engine and one
+    PD engine across regions, so the engine is per-request state, not
+    per-scheduler.  ``tick()`` is one scheduler iteration:
+
+      1. admit every READY request into free decode slots in one
+         ``admit_many`` scatter — each tick IS a decode block boundary;
+      2. advance ONE prefill unit: the next fixed-shape chunk of an
+         in-flight ``ChunkedPrefill``, or a freshly formed same-(engine,
+         bucket) FIFO batch run in a single bucketed ``prefill`` call;
+      3. one ``step_block`` over all active decode slots.
+
+    Finished units pass through ``on_unit_done`` (when set) so callers can
+    do trim/wire/metrics accounting and hand back admit entries; the
+    default trims each request's cache out of the bucket-padded batch.
+    Starvation is impossible by construction — ``_admit`` runs FIFO at
+    every boundary — and ``max_admit_wait`` (boundaries a request spent
+    ready-but-unadmitted) makes that assertable instead of trusted.
+    """
+
+    def __init__(self, prefill: PrefillEngine, decode: DecodeEngine, *,
+                 max_prefill_batch: int = 8, on_unit_done=None):
+        self.prefill = prefill
+        self.decode = decode
+        self.max_prefill_batch = max(1, int(max_prefill_batch))
+        self.on_unit_done = on_unit_done
+        self.queue: deque = deque()          # (req, engine) — FIFO
+        self.ready: deque = deque()          # (admit entry, ready boundary)
+        self._inflight = None                # (ChunkedPrefill, reqs, lens)
+        self.boundaries = 0                  # ticks == block boundaries
+        self.max_admit_wait = 0
+        self.starved_boundaries = 0          # ready waited w/ free slots
+        self.wall_s = 0.0                    # scheduler makespan
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request, engine: Optional[PrefillEngine] = None):
+        """Enqueue one routed request (state: queued)."""
+        self.queue.append((req, engine if engine is not None
+                           else self.prefill))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.ready or self._inflight is not None
+                    or self.decode.active.any())
+
+    # -------------------------------------------------------------- phases
+    def _admit(self) -> int:
+        """Block boundary: move ready -> decoding, as many as slots allow."""
+        if not self.ready:
+            return 0
+        n = self.decode.admit_many([e for e, _ in self.ready])
+        for _ in range(n):
+            _, born = self.ready.popleft()
+            self.max_admit_wait = max(self.max_admit_wait,
+                                      self.boundaries - born)
+        # the starvation guard: after a boundary admit, a request may only
+        # remain ready because every slot is occupied
+        if self.ready and self.decode.free_slots():
+            self.starved_boundaries += 1
+        return n
+
+    def _finish_unit(self, engine, reqs, lengths, first, caches,
+                     wall_s: float):
+        if self.on_unit_done is not None:
+            entries = self.on_unit_done(engine, reqs, lengths, first,
+                                        caches, wall_s)
+        else:
+            entries = [(r, int(first[i]),
+                        trim_request_cache(caches, i, int(lengths[i])),
+                        int(lengths[i]))
+                       for i, r in enumerate(reqs)]
+        for e in entries:
+            self.ready.append((e, self.boundaries))
+
+    def _prefill_one(self):
+        """Advance exactly one prefill unit: a chunk of the in-flight
+        chunked prefill, or one bucketed batch from the queue head."""
+        if self._inflight is not None:
+            cp, reqs, lengths = self._inflight
+            cp.step()
+            if cp.done:
+                self._inflight = None
+                first, caches = cp.finish()
+                self._finish_unit(cp.eng, reqs, lengths, first, caches,
+                                  cp.wall_s)
+            return
+        if not self.queue:
+            return
+        req0, e0 = self.queue[0]
+        if e0.is_chunked(len(req0.tokens)):
+            # long prompt: becomes the chunk-interleaved unit (batch of 1 —
+            # one fixed-shape chunk advances per tick, decode keeps running)
+            self.queue.popleft()
+            lengths = np.array([len(req0.tokens)], np.int32)
+            toks = np.asarray(req0.tokens, np.int32)[None, :]
+            self._inflight = (e0.start_chunked(toks, lengths), [req0],
+                              lengths)
+            self._prefill_one()              # run its first chunk this tick
+            return
+        # form one same-(engine, bucket) unit in FIFO order
+        bucket = e0.bucket_for(len(req0.tokens))
+        unit: List[Request] = []
+        rest: deque = deque()
+        while self.queue:
+            r, e = self.queue.popleft()
+            if (len(unit) < self.max_prefill_batch and e is e0
+                    and not e.is_chunked(len(r.tokens))
+                    and e.bucket_for(len(r.tokens)) == bucket):
+                unit.append(r)
+            else:
+                rest.append((r, e))
+        self.queue = rest
+        lengths = np.array([len(r.tokens) for r in unit], np.int32)
+        toks = np.zeros((len(unit), int(lengths.max())), np.int32)
+        for i, r in enumerate(unit):
+            toks[i, :len(r.tokens)] = r.tokens
+        first, caches, wall = e0.prefill(toks, lengths)
+        self._finish_unit(e0, unit, lengths, first, caches, wall)
+
+    # ---------------------------------------------------------------- loop
+    def tick(self):
+        """One scheduler iteration: admit -> one prefill unit -> one decode
+        block.  Returns #active decode slots after the block."""
+        t0 = time.perf_counter()
+        self._admit()
+        self._prefill_one()
+        n = self.decode.step_block()
+        self.boundaries += 1
+        self.wall_s += time.perf_counter() - t0
+        return n
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        """Tick until every submitted request has retired."""
+        ticks = 0
+        while self.has_work and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks
+
+    # ------------------------------------------------------------- metrics
+    def occupancy(self) -> float:
+        """Fraction of decode-slot-time occupied over the scheduler's own
+        makespan (prefill gaps count against it — that is the point)."""
+        denom = self.decode.num_slots * self.wall_s
+        return self.decode.slot_busy_s / denom if denom > 0 else 0.0
+
+    def goodput_tok_s(self) -> float:
+        return (self.decode.tokens_out / self.wall_s
+                if self.wall_s > 0 else 0.0)
+
+    def stats(self) -> dict:
+        return {"boundaries": self.boundaries,
+                "max_admit_wait": self.max_admit_wait,
+                "starved_boundaries": self.starved_boundaries,
+                "occupancy": self.occupancy(),
+                "goodput_tok_s": self.goodput_tok_s(),
+                "tokens_out": self.decode.tokens_out,
+                "truncations": self.decode.truncations}
 
 
 def slice_request_cache(caches, idx: int):

@@ -5,6 +5,7 @@ Runs in a temporary working directory so the harness's BENCH_*.json
 artifacts never clobber the checked-in full-run results.  Marked ``slow``
 (it compiles JAX kernels and runs every simulator scenario once).
 """
+import json
 import os
 import subprocess
 import sys
@@ -33,3 +34,12 @@ def test_bench_smoke_runs_clean(tmp_path):
     # ... and the measured-kernel calibration + serving hot-path artifacts
     assert (tmp_path / "BENCH_kernel.json").exists()
     assert (tmp_path / "BENCH_engine.json").exists()
+    # continuous-batching telemetry: the region scheduler must beat the
+    # PR 5 alternating loop on slot occupancy, with a recompile-free hot
+    # path after warmup
+    eng = json.loads((tmp_path / "BENCH_engine.json").read_text())
+    assert "occupancy_at_16_slots" in eng
+    assert "occupancy_alternating_baseline" in eng
+    occ = eng["occupancy"]
+    assert occ["occupancy_continuous"] > occ["occupancy_alternating"]
+    assert occ["recompiles_after_warmup"] == 0

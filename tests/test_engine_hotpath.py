@@ -92,6 +92,23 @@ class TestPrefillBuckets:
             eng.prefill(toks, l)
         assert eng.compiles == warm
 
+    def test_warmup_covers_chunked_prompts(self, danube):
+        """Warmup lengths past max_bucket pre-trace the chunk programs for
+        their exact chunk count, so serving a past-max-bucket prompt later
+        never recompiles (the PR 6 chunk-interleaving hot path)."""
+        cfg, model, params = danube
+        eng = PrefillEngine(model, params, min_bucket=32, max_bucket=64)
+        # 300 -> ceil(300/64)=5 chunks: warms every chunk index 0..4, which
+        # also covers any shorter chunked prompt (fewer chunks, same shapes)
+        eng.warmup([2], [32, 64, 300])
+        warm = eng.compiles
+        rng = np.random.default_rng(11)
+        for _ in range(4):
+            lens = rng.integers(9, 300, (2,)).tolist()
+            toks, l = _prompts(cfg, lens, seed=int(rng.integers(1 << 30)))
+            eng.prefill(toks, l)
+        assert eng.compiles == warm
+
     # kimi = KDA conv + MLA latents; qwen = plain GQA; danube = SWA with a
     # 64-token window, so chunk-2 queries straddle the band across the
     # chunk boundary (the q_offset + window path in gqa_forward_chunk)

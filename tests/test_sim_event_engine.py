@@ -171,6 +171,41 @@ class TestEngineEquivalence:
         assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
         assert e["ttft_p90"] == pytest.approx(t["ttft_p90"], rel=0.05)
 
+    def test_block_boundary_admission_within_5pct(self, setup):
+        """decode_block_tokens > 0 quantizes decode admission to the block
+        grid (mirroring the serving RegionScheduler); both engines snap to
+        the same absolute boundaries so equivalence must survive."""
+        tm, sc, rate, w = setup
+        t, e = self._both(tm, sc, w, 0.85 * rate, decode_block_tokens=8)
+        assert e["throughput_rps"] == pytest.approx(t["throughput_rps"],
+                                                    rel=0.05)
+        assert e["ttft_mean"] == pytest.approx(t["ttft_mean"], rel=0.05)
+        assert e["ttft_p90"] == pytest.approx(t["ttft_p90"], rel=0.05)
+
+    def test_block_boundary_math(self, setup):
+        """Boundary snap rounds up to the block grid (exact multiples stay
+        put) and decode service time rounds up to whole blocks; the
+        default ``decode_block_tokens=0`` keeps both exact, preserving the
+        golden trace byte for byte."""
+        tm, sc, rate, w = setup
+        sim = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=1.0, engine="event", decode_block_tokens=8))
+        bs = 8 * w.t_decode
+        assert sim._block_boundary(0.0) == pytest.approx(0.0, abs=1e-12)
+        assert sim._block_boundary(bs) == pytest.approx(bs, abs=1e-12)
+        assert sim._block_boundary(0.3 * bs) == pytest.approx(bs, abs=1e-12)
+        assert sim._block_boundary(2.5 * bs) == pytest.approx(3 * bs,
+                                                             abs=1e-12)
+        # output_len rounded up to a multiple of 8 tokens
+        blocks = -(-w.output_len // 8)
+        assert sim._decode_service_time() == pytest.approx(
+            blocks * 8 * w.t_decode, rel=1e-12)
+        exact = PrfaasSimulator(tm, sc, w, SimConfig(
+            arrival_rate=1.0, engine="event"))
+        assert exact._block_boundary(0.1234) == 0.1234
+        assert exact._decode_service_time() == pytest.approx(
+            w.output_len * w.t_decode, rel=1e-12)
+
     def test_unknown_engine_rejected(self, setup):
         tm, sc, rate, w = setup
         sim = PrfaasSimulator(tm, sc, w, SimConfig(
