@@ -19,6 +19,14 @@ tiny model exposes — the quantities below are scheduling tax, not FLOPs):
     ``RegionScheduler`` (bucket-exact units, chunk interleave, admission at
     block boundaries).  Acceptance: continuous occupancy strictly above the
     alternating baseline, with 0 recompiles after the warm run.
+  * paged KV (PR 7) — (a) admission latency of the paged page-write
+    scatter vs the dense full-slot placement, with 0 admission recompiles
+    after ``warmup_admission``; (b) prefix-hit suffix-only prefill at a
+    50% hit rate: measured prefilled-token savings plus the analytic
+    prefill-FLOP savings, with 0 decode-block recompiles; (c) resident-KV
+    headroom — device bytes held by LRU-resident (reusable, reclaimable)
+    prefix pages after the workload drains, a capacity the dense layout
+    has no counterpart for.
 
     PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
 """
@@ -30,8 +38,12 @@ import numpy as np
 
 from benchmarks.common import emit, write_json
 from repro.configs import get_smoke_config
-from repro.models import Model, prepare_decode_caches
-from repro.serving.api import Request
+from repro.configs.base import AttentionSpec
+from repro.core.blockpool import BlockPool
+from repro.core.hardware import CHIPS, AnalyticProfile
+from repro.core.prefix_cache import HybridPrefixCache
+from repro.models import Model, paged_layout, prepare_decode_caches
+from repro.serving.api import PagePin, Request
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
                                   RegionScheduler, trim_request_cache)
 
@@ -44,10 +56,12 @@ from repro.serving.engine import (DecodeEngine, PrefillEngine,
 # whereas on an accelerator the per-token loop's host tax dominates both.
 ARCH_ATTN = "h2o-danube-1.8b"
 ARCH_LINEAR = "xlstm-350m"
+ARCH_PAGED = "mistral-nemo-12b"     # full attention: seq pages stay resident
 SLOTS = 16
 CAPACITY = 192
 PROMPT_LEN = 24
 BLOCK = 16
+PAGE = 16
 
 
 def _mk_requests(cfg, n, max_new, seed=0):
@@ -290,6 +304,139 @@ def bench_occupancy(model, params, cfg, smoke):
             "recompiles_after_warmup": recompiles}
 
 
+def bench_paged_admission(model, params, entries):
+    """Paged page-write admission scatter vs the dense full-slot placement,
+    same prefilled entries.  The paged path must run recompile-free after
+    ``warmup_admission`` on the same traffic shape."""
+    def timed_admit(eng, reps=5):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            eng.admit_many(entries)
+            jax.block_until_ready(jax.tree.leaves(eng.caches)[0])
+            best = min(best, time.perf_counter() - t0)
+            for slot in range(SLOTS):
+                if eng.active[slot]:
+                    eng._retire(slot)
+            eng.outputs.clear()
+        return best
+
+    dense = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK)
+    timed_admit(dense, reps=1)                    # warm the dense scatter
+    dense_s = timed_admit(dense)
+
+    dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                       paged=True, page_tokens=PAGE)
+    dec.warmup_admission([SLOTS], [PROMPT_LEN])
+    warm = dec.admit_compiles
+    paged_s = timed_admit(dec)
+    recompiles = dec.admit_compiles - warm
+    speedup = dense_s / paged_s
+    emit("engine/admit_dense_layout", dense_s * 1e6,
+         f"K={len(entries)} full-slot placement")
+    emit("engine/admit_paged_layout", paged_s * 1e6,
+         f"K={len(entries)} page scatter, vs dense={speedup:.2f}x, "
+         f"{recompiles} recompiles")
+    assert recompiles == 0, (
+        f"{recompiles} paged-admission recompiles after warmup_admission")
+    s = dec.pool.stats
+    assert s["allocated"] == s["freed"] + s["evicted"] + dec.pool.resident
+    return {"K": len(entries), "dense_us": round(dense_s * 1e6, 1),
+            "paged_us": round(paged_s * 1e6, 1),
+            "speedup_vs_dense": round(speedup, 2),
+            "admit_warmup_compiles": warm,
+            "admit_recompiles_after_warmup": recompiles}
+
+
+def bench_paged_prefix(model, params, cfg, smoke):
+    """Suffix-only prefill at a 50% prefix-hit rate: half the workload
+    shares a registered 64-token prefix and resumes from its device pages,
+    so only the suffix is prefilled.  Reports the measured prefilled-token
+    savings, the analytic prefill-FLOP savings (incremental
+    ``prefill_flops(L) - prefill_flops(c)`` charge per hit), and the
+    resident-KV headroom the paged pool retains after the drain."""
+    capacity = 192
+    lay = paged_layout(cfg, capacity, PAGE, 1)
+    has_state = any(not isinstance(b.mixer, AttentionSpec)
+                    for g in cfg.groups for b in g.blocks)
+    pool = BlockPool(SLOTS * capacity // PAGE, PAGE)
+    cache = HybridPrefixCache(pool, 0, 1, has_full_attn=lay.seq_cols > 0,
+                              has_linear=lay.ring_cols > 0 or has_state)
+    peng = PrefillEngine(model, params, min_bucket=32, max_bucket=64)
+    dec = DecodeEngine(model, params, SLOTS, capacity, block_size=BLOCK,
+                       paged=True, pool=pool, page_tokens=PAGE)
+    dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+        [int(t) for t in req.tokens], ids, snap)
+    sched = RegionScheduler(peng, dec, max_prefill_batch=8)
+
+    rng = np.random.default_rng(7)
+    c_len, total_len = 64, 128
+    prefix = rng.integers(0, cfg.vocab_size, (c_len,)).astype(np.int32)
+    sched.submit(Request(rid=999, tokens=prefix, max_new_tokens=2))
+    sched.run()                        # registers the prefix pages
+    blocks_warm = dec.block_compiles
+
+    n = 8 if smoke else 12
+    reqs = []
+    for i in range(n):
+        rest = rng.integers(0, cfg.vocab_size,
+                            (total_len - c_len,)).astype(np.int32)
+        if i % 2 == 0:                 # 50% of the workload hits
+            toks = np.concatenate([prefix, rest])
+            c, ids, snap = cache.match_resume([int(t) for t in toks])
+            assert c == c_len, "registered prefix must be resumable"
+            pool.retain(ids)
+            reqs.append(Request(rid=i, tokens=toks, max_new_tokens=8,
+                                device_pin=PagePin(c, ids, snap)))
+        else:
+            cold = rng.integers(0, cfg.vocab_size,
+                                (c_len,)).astype(np.int32)
+            reqs.append(Request(rid=i, tokens=np.concatenate([cold, rest]),
+                                max_new_tokens=8))
+    before = peng.tokens_prefilled
+    t0 = time.perf_counter()
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    wall = time.perf_counter() - t0
+    prefilled = peng.tokens_prefilled - before
+    total = sum(len(r.tokens) for r in reqs)
+    assert prefilled == total - (n // 2) * c_len, (
+        "prefix hits must prefill only the uncached suffix")
+    token_savings = 1.0 - prefilled / total
+
+    profile = AnalyticProfile(cfg, CHIPS["h200"], 8)
+    f_full = profile.prefill_flops(total_len)
+    f_inc = f_full - profile.prefill_flops(c_len)
+    flop_savings = 1.0 - ((n // 2) * f_inc + (n - n // 2) * f_full) \
+        / (n * f_full)
+
+    decode_recompiles = dec.block_compiles - blocks_warm
+    s = pool.stats
+    assert s["allocated"] == s["freed"] + s["evicted"] + pool.resident
+    resident_bytes = pool.resident * dec.page_bytes
+    emit("engine/paged_prefix_hits", wall * 1e6,
+         f"n={n} hit_rate=0.5 token_savings={token_savings:.3f} "
+         f"flop_savings={flop_savings:.3f}")
+    emit("engine/paged_resident_kv", float(resident_bytes),
+         f"{pool.resident}/{pool.num_blocks} pages resident after drain, "
+         f"{decode_recompiles} decode recompiles")
+    assert decode_recompiles == 0, (
+        f"{decode_recompiles} paged decode-block recompiles after warm run")
+    assert resident_bytes > 0, "registered prefix pages must stay resident"
+    return {"requests": n, "hit_rate": 0.5, "prompt_len": total_len,
+            "cached_len": c_len,
+            "tokens_prefilled": int(prefilled),
+            "tokens_submitted": int(total),
+            "token_savings_frac": round(token_savings, 4),
+            "flop_savings_frac": round(flop_savings, 4),
+            "decode_recompiles": decode_recompiles,
+            "resident_kv_bytes": int(resident_bytes),
+            "resident_pages": pool.resident,
+            "pool_pages": pool.num_blocks,
+            "wall_us": round(wall * 1e6, 1)}
+
+
 def _setup(cfg, max_new):
     model = Model(cfg, use_kernels=False)
     params = model.init(jax.random.PRNGKey(0))
@@ -318,8 +465,15 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
     admission = bench_admission(model_l, params_l, entries_l)
     prefill = bench_prefill_buckets(model_a, params_a, cfg_a, smoke)
     occupancy = bench_occupancy(model_a, params_a, cfg_a, smoke)
+    cfg_p, model_p, params_p, entries_p = _setup(get_smoke_config(ARCH_PAGED),
+                                                 max_new)
+    paged = {
+        "admission": bench_paged_admission(model_p, params_p, entries_p),
+        "prefix": bench_paged_prefix(model_p, params_p, cfg_p, smoke),
+    }
     write_json(out_path, {
-        "archs": {"linear_state": ARCH_LINEAR, "attention": ARCH_ATTN},
+        "archs": {"linear_state": ARCH_LINEAR, "attention": ARCH_ATTN,
+                  "paged": ARCH_PAGED},
         "smoke": smoke, "backend": jax.default_backend(),
         # headline: block-decode speedup at SLOTS active slots vs the
         # per-token loop (linear-state regime; see module docstring)
@@ -329,8 +483,14 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
         "occupancy_at_16_slots": occupancy["occupancy_continuous"],
         "occupancy_alternating_baseline":
             occupancy["occupancy_alternating"],
+        # headline: measured prefilled-token savings from device-resident
+        # prefix pages at a 50% hit rate, and the KV bytes those resident
+        # pages keep reusable after the workload drains
+        "paged_token_savings_at_50pct_hits":
+            paged["prefix"]["token_savings_frac"],
+        "paged_resident_kv_bytes": paged["prefix"]["resident_kv_bytes"],
         "decode": decode, "admission": admission, "prefill": prefill,
-        "occupancy": occupancy,
+        "occupancy": occupancy, "paged": paged,
     })
     return True
 

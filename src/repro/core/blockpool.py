@@ -1,8 +1,11 @@
 """Unified KV block pool (paper §3.2, Fig. 4).
 
-All KVCache groups (full-attn block-level, linear-state request-level)
-allocate fixed-size blocks from one shared pool. Blocks are ref-counted and
-carry a category:
+The pool is the allocation authority for KV blocks. Full-attn/MLA/SWA
+KVCache groups allocate fixed-size *device pages* from it when the paged
+layout is on (``DeploymentConfig(paged_kv=True)``); linear-state groups
+allocate metadata blocks for their request-level snapshots. With the paged
+layout off the pool still runs the same lifecycle purely as a byte-accounting
+twin of the dense buffers. Blocks are ref-counted and carry a category:
 
   * prefix-cache blocks — reusable across requests once fully populated;
     evictable LRU when free space runs out;
@@ -52,6 +55,12 @@ class BlockPool:
     @property
     def used_blocks(self) -> int:
         return self.num_blocks - self.free_blocks
+
+    @property
+    def resident(self) -> int:
+        """Blocks with live metadata: ref-held or cached (LRU). Conservation
+        invariant: ``allocated == freed + evicted + resident``."""
+        return len(self._blocks)
 
     def utilization(self) -> float:
         return self.used_blocks / max(1, self.num_blocks)

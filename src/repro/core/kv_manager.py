@@ -33,10 +33,16 @@ class GlobalKVManager:
         self.node_affinity[name] = nodes
 
     # ------------------------------------------------------------- matching
-    def match_all(self, tokens: Sequence[int]) -> Dict[str, int]:
-        """Paper: 'computes prefix-match information for every cluster'."""
-        return {name: cache.match(tokens)
-                for name, cache in self.clusters.items()}
+    def match_all(self, tokens: Sequence[int],
+                  names: Optional[Sequence[str]] = None) -> Dict[str, int]:
+        """Paper: 'computes prefix-match information for every cluster'.
+
+        ``names`` optionally restricts the match to reachable clusters (the
+        live deployment filters by link topology)."""
+        if names is None:
+            names = self.clusters.keys()
+        return {name: self.clusters[name].match(tokens)
+                for name in names if name in self.clusters}
 
     def best_match(self, tokens: Sequence[int]) -> MatchInfo:
         matches = self.match_all(tokens)
@@ -70,5 +76,9 @@ class GlobalKVManager:
     def stats(self) -> dict:
         return {name: {"hit_rate": c.hit_rate(),
                        "pool_util": c.pool.utilization(),
-                       "evicted": c.pool.stats["evicted"]}
+                       "evicted": c.pool.stats["evicted"],
+                       "pool": {**c.pool.stats,
+                                "resident": c.pool.resident,
+                                "used_blocks": c.pool.used_blocks,
+                                "num_blocks": c.pool.num_blocks}}
                 for name, c in self.clusters.items()}

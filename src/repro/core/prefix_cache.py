@@ -74,6 +74,7 @@ class LinearSnapshot:
     length: int                   # block-aligned prefix length
     chain_hash: int
     block_ids: List[int]          # pool blocks holding the state bytes
+    payload: Optional[object] = None   # device state (SWA ring + linear leaves)
 
 
 class LinearStateGroup:
@@ -98,14 +99,18 @@ class LinearStateGroup:
                 del self.index[hashes[i]]
         return None
 
-    def insert(self, length: int, chain_hash: int) -> Optional[LinearSnapshot]:
+    def insert(self, length: int, chain_hash: int,
+               payload: Optional[object] = None) -> Optional[LinearSnapshot]:
         if chain_hash in self.index:
-            return self.index[chain_hash]
+            snap = self.index[chain_hash]
+            if payload is not None and snap.payload is None:
+                snap.payload = payload
+            return snap
         bids = self.pool.allocate(self.blocks_per_state, PREFIX)
         if bids is None:
             return None
         self.pool.mark_populated(bids)
-        snap = LinearSnapshot(length, chain_hash, bids)
+        snap = LinearSnapshot(length, chain_hash, bids, payload=payload)
         self.index[chain_hash] = snap
         self.pool.release(bids)            # cached (LRU), not pinned
         return snap
@@ -155,6 +160,76 @@ class HybridPrefixCache:
         else:
             self.misses += 1
         return matched
+
+    def match_resume(self, tokens: Sequence[int], *,
+                     require_payload: bool = True
+                     ) -> Tuple[int, List[int], Optional[LinearSnapshot]]:
+        """Device-resumable prefix: ``(cached_len, seq_page_ids, snapshot)``.
+
+        Unlike :meth:`match` (routing metadata), this returns the actual
+        page handles a paged `DecodeEngine` can resume from. The cached
+        length is capped at the last *full* page strictly before the prompt
+        end so at least the final token is always recomputed (its logits
+        seed decode). For models whose resume needs an exact-length state
+        (SWA ring / linear mixers — ``has_linear``), a snapshot carrying a
+        device payload must exist at exactly the cached length; otherwise
+        the hit degrades to a miss. Does not touch hit/miss counters (the
+        routing-level ``match`` already accounts those); the caller must
+        ``pool.retain`` the returned ids to pin them.
+        """
+        L = len(tokens)
+        hashes = token_block_hashes(tokens, self.block_tokens)
+        max_blocks = max(0, (L - 1) // self.block_tokens)
+        hashes = hashes[:max_blocks]
+        if not hashes:
+            return 0, [], None
+        if self.full is not None:
+            ids = self.full.match(hashes)
+            covered = len(ids)
+        else:
+            ids = []
+            covered = len(hashes)
+        if covered == 0:
+            return 0, [], None
+        if self.linear is None:
+            return covered * self.block_tokens, ids, None
+        snap = self.linear.match(hashes[:covered])
+        if snap is None or (require_payload and snap.payload is None):
+            return 0, [], None
+        c = min(snap.length, covered * self.block_tokens)
+        if c != snap.length:
+            # exact-length state does not cover the full-attn match; the
+            # state is only valid at snap.length, so no resumable prefix
+            return 0, [], None
+        return c, ids[:c // self.block_tokens], snap
+
+    def insert_device(self, tokens: Sequence[int], seq_ids: Sequence[int] = (),
+                      snapshot_payload: Optional[object] = None) -> int:
+        """Register *device* pages holding a prompt's prefix.
+
+        ``seq_ids``: ref-held pool pages (one per full prompt page, in
+        order) that a paged DecodeEngine wrote the full-attn/MLA KV into;
+        indexed under the chain hashes so later requests can resume from
+        them. ``snapshot_payload``: exact-length device state (SWA ring +
+        linear leaves) — only registered when the prompt length is
+        page-aligned, because prefill yields the state at exactly L.
+        Caller keeps its refs; pages become LRU-cached when those drop.
+        """
+        hashes = token_block_hashes(tokens, self.block_tokens)
+        if not hashes:
+            return 0
+        cached = 0
+        if self.full is not None and seq_ids:
+            n = min(len(hashes), len(seq_ids))
+            self.full.insert(hashes[:n], list(seq_ids)[:n])
+            cached = n * self.block_tokens
+        if (self.linear is not None and snapshot_payload is not None
+                and len(tokens) % self.block_tokens == 0):
+            snap = self.linear.insert(len(hashes) * self.block_tokens,
+                                      hashes[-1], payload=snapshot_payload)
+            if snap is not None and self.full is None:
+                cached = max(cached, snap.length)
+        return cached
 
     # ---------------------------------------------------------------- insert
     def insert(self, tokens: Sequence[int]) -> int:

@@ -41,6 +41,17 @@ class _PoolStats:
     def utilization(self) -> float:
         return self.used / max(1, self.num_blocks)
 
+    @property
+    def used_blocks(self) -> int:
+        return self.used
+
+    @property
+    def resident(self) -> int:
+        # the simulator's pool twin has no ref-counts: every used block is
+        # resident (allocated == freed + evicted + resident holds by
+        # construction)
+        return self.used
+
 
 class SimPrefixCache:
     """Drop-in for ``HybridPrefixCache`` inside ``PrfaasSimulator``: exposes

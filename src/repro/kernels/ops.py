@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attn as _decode
+from repro.kernels import paged_decode_attn as _paged_decode
 from repro.kernels import delta as _delta
 from repro.kernels import flash_attn as _flash
 from repro.kernels import gla as _gla
@@ -209,6 +210,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, scale=None,
     return _decode.decode_attention(q, k_cache, v_cache, lengths,
                                     window=window, scale=scale,
                                     block_k=block_k, interpret=_on_cpu())
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *, window=0,
+                           scale=None, use_kernel=True):
+    """Block-table flash-decode: KV gathered from a shared page pool.
+
+    q: (B, Hq, D); pages: (Hkv, P, T, D); tables: (B, N) int32."""
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(
+            tables.shape[1] * k_pages.shape[2]):
+        return ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                              lengths, window=window,
+                                              scale=scale)
+    return _paged_decode.paged_decode_attention(
+        q, k_pages, v_pages, tables, lengths, window=window, scale=scale,
+        interpret=_on_cpu())
 
 
 # single-step recurrent updates are trivially jnp (no kernel needed)

@@ -163,6 +163,29 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
     return jnp.einsum("bhk,bhkd->bhd", probs, vf).astype(dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, tables, lengths, *,
+                               window: int = 0, scale: float | None = None):
+    """Paged flash-decode oracle: gather pages through the block table, then
+    run the dense decode oracle over the gathered cache.
+
+    q: (B, Hq, D); k_pages, v_pages: (Hkv, P, T, D) page pools; tables:
+    (B, N) int32 physical page ids (logical page j of request b lives at
+    ``tables[b, j]``); lengths: (B,) int32. Positions >= lengths[b] may point
+    at garbage/sink pages — the length mask guarantees they never contribute.
+    Returns (B, Hq, D), bit-identical to ``decode_attention_ref`` on the
+    equivalent dense cache.
+    """
+    Hkv = k_pages.shape[0]
+    B, N = tables.shape
+    T, D = k_pages.shape[2], k_pages.shape[3]
+    Dv = v_pages.shape[3]
+    kg = jnp.transpose(k_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, D)
+    vg = jnp.transpose(v_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, Dv)
+    return decode_attention_ref(q, kg, vg, lengths, window=window, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Single-step recurrent updates (decode path for linear mixers)
 # ---------------------------------------------------------------------------

@@ -1,5 +1,10 @@
 from repro.models.model import (Model, extend_caches, prepare_decode_caches,
                                 sinusoidal_positions)
+from repro.models.paged import (PagedLayout, build_admit_payload, build_prior,
+                                init_paged_cache, paged_layout,
+                                zero_request_payload)
 
 __all__ = ["Model", "extend_caches", "prepare_decode_caches",
-           "sinusoidal_positions"]
+           "sinusoidal_positions", "PagedLayout", "paged_layout",
+           "init_paged_cache", "build_admit_payload", "build_prior",
+           "zero_request_payload"]

@@ -143,6 +143,54 @@ def gqa_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
     return y, {"k": kbuf, "v": vbuf}
 
 
+def gqa_decode_paged(p, x, spec: AttentionSpec, cache, lengths, tables, *,
+                     page_tokens, capacity, use_kernels=True):
+    """Paged decode: cache leaves are page pools ``(Hkv, P, T, D)`` shared by
+    every request; ``tables`` maps each request's logical pages to physical
+    ones. Full-attn layers append through the seq table; SWA layers ring-
+    write through their privately-owned ring table (slot = pos % w_buf, same
+    order-invariant-softmax argument as the dense ring). Inactive slots
+    (length 0, table pointing at the sink page) scatter into the sink, which
+    no live request's table references."""
+    B = x.shape[0]
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    if spec.is_cross:
+        raise ValueError("paged decode does not support cross-attention")
+    q = _split_heads(_lin(p["wq"], x), H, D)                 # (B,H,1,D)
+    pos = lengths.astype(jnp.int32)[:, None]
+    k = _split_heads(_lin(p["wk"], x), Hkv, D)
+    v = _split_heads(_lin(p["wv"], x), Hkv, D)
+    if spec.rope:
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+
+    T = page_tokens
+    if spec.kind == "swa" and spec.window:
+        w_buf = min(spec.window, capacity)
+        tbl = tables["ring"][:, :w_buf // T]
+        wpos = jnp.mod(pos[:, 0], w_buf)
+        eff_len = jnp.minimum(lengths + 1, w_buf)
+    else:
+        tbl = tables["seq"]
+        wpos = pos[:, 0]
+        eff_len = jnp.minimum(lengths + 1, capacity)
+    cols = tbl.shape[1]
+    lp, off = jnp.minimum(wpos // T, cols - 1), wpos % T
+    phys = jnp.take_along_axis(tbl, lp[:, None], axis=1)[:, 0]
+    # a slot surplus-stepping past the capacity wall mid-block (retired on
+    # the host afterwards) must not clobber its last live page: route those
+    # writes to the sink page, which no live table references
+    phys = jnp.where(wpos >= cols * T, cache["k"].shape[1] - 1, phys)
+    kbuf = cache["k"].at[:, phys, off].set(
+        k[:, :, 0].transpose(1, 0, 2).astype(cache["k"].dtype))
+    vbuf = cache["v"].at[:, phys, off].set(
+        v[:, :, 0].transpose(1, 0, 2).astype(cache["v"].dtype))
+    o = ops.paged_decode_attention(q[:, :, 0], kbuf, vbuf, tbl, eff_len,
+                                   use_kernel=use_kernels)
+    y = _merge_heads(o[:, :, None]) @ p["wo"]["w"]
+    return y, {"k": kbuf, "v": vbuf}
+
+
 def gqa_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
                       use_kernels=True):
     """Incremental prefill: x is a chunk at absolute ``positions``; ``cache``
@@ -251,6 +299,53 @@ def mla_decode(p, x, spec: AttentionSpec, cache, lengths, *, use_kernels=True):
     return y, {"ckv": ckv_buf, "kpe": kpe_buf}
 
 
+def mla_decode_paged(p, x, spec: AttentionSpec, cache, lengths, tables, *,
+                     page_tokens, capacity, use_kernels=True):
+    """Absorbed MLA decode over paged latent pools ``(P, T, R)``/``(P, T,
+    Rp)``; identical math to ``mla_decode`` with the latent append routed
+    through the seq block table."""
+    B = x.shape[0]
+    H, D, R, Rp = spec.q_heads, spec.head_dim, spec.mla_kv_rank, spec.mla_rope_dim
+    pos = lengths.astype(jnp.int32)[:, None]
+    q_nope, q_pe = _mla_q(p, x, spec)                        # (B,H,1,D/Rp)
+    q_pe = apply_rope(q_pe, pos, spec.rope_theta)
+
+    kv_a = _lin(p["wkv_a"], x)                               # (B,1,R+Rp)
+    ckv_new = rms_norm(kv_a[..., :R], p["kv_norm"])
+    kpe_new = apply_rope(kv_a[..., R:][:, None], pos, spec.rope_theta)[:, 0]
+
+    T = page_tokens
+    cols = tables["seq"].shape[1]
+    lp, off = jnp.minimum(pos[:, 0] // T, cols - 1), pos[:, 0] % T
+    phys = jnp.take_along_axis(tables["seq"], lp[:, None], axis=1)[:, 0]
+    # past-the-wall surplus writes go to the sink page (see gqa_decode_paged)
+    phys = jnp.where(pos[:, 0] >= cols * T, cache["ckv"].shape[0] - 1, phys)
+    ckv_buf = cache["ckv"].at[phys, off].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kpe_buf = cache["kpe"].at[phys, off].set(
+        kpe_new[:, 0].astype(cache["kpe"].dtype))
+
+    wkv_b = p["wkv_b"]["w"].reshape(R, spec.kv_heads, 2 * D)
+    w_uk, w_uv = wkv_b[..., :D], wkv_b[..., D:]              # (R,Hkv,D)
+    group = H // spec.kv_heads
+    w_uk_q = jnp.repeat(w_uk, group, axis=1)                 # (R,H,D)
+    w_uv_q = jnp.repeat(w_uv, group, axis=1)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk_q.astype(jnp.float32))           # (B,H,R)
+    q_eff = jnp.concatenate([q_abs, q_pe[:, :, 0].astype(jnp.float32)], -1)
+    k_eff = jnp.concatenate([ckv_buf, kpe_buf], -1)[None]    # (1,P,T,R+Rp)
+    v_eff = ckv_buf[None]                                    # (1,P,T,R)
+    o_lat = ops.paged_decode_attention(q_eff.astype(x.dtype),
+                                       k_eff.astype(x.dtype),
+                                       v_eff.astype(x.dtype), tables["seq"],
+                                       lengths + 1, scale=(D + Rp) ** -0.5,
+                                       use_kernel=use_kernels)  # (B,H,R)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(jnp.float32),
+                   w_uv_q.astype(jnp.float32)).astype(x.dtype)
+    y = o.reshape(B, 1, H * D) @ p["wo"]["w"]
+    return y, {"ckv": ckv_buf, "kpe": kpe_buf}
+
+
 def mla_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
                       use_kernels=True):
     """Incremental MLA prefill: append the chunk's latents to the cached
@@ -314,3 +409,16 @@ def attention_decode(p, x, spec: AttentionSpec, cache, lengths, *,
     if spec.kind == "mla":
         return mla_decode(p, x, spec, cache, lengths, use_kernels=use_kernels)
     return gqa_decode(p, x, spec, cache, lengths, use_kernels=use_kernels)
+
+
+def attention_decode_paged(p, x, spec: AttentionSpec, cache, lengths, tables,
+                           *, page_tokens, capacity, use_kernels=True):
+    if spec.is_cross:
+        raise ValueError("paged decode does not support cross-attention")
+    if spec.kind == "mla":
+        return mla_decode_paged(p, x, spec, cache, lengths, tables,
+                                page_tokens=page_tokens, capacity=capacity,
+                                use_kernels=use_kernels)
+    return gqa_decode_paged(p, x, spec, cache, lengths, tables,
+                            page_tokens=page_tokens, capacity=capacity,
+                            use_kernels=use_kernels)

@@ -170,15 +170,25 @@ class Model:
         return (self._inference and self.moe_dropless_inference
                 and tokens <= FLAGS.moe_dropless_max_tokens)
 
-    def _decode_block(self, spec: BlockSpec, p, x, cache, lengths):
+    def _decode_block(self, spec: BlockSpec, p, x, cache, lengths,
+                      tables=None, page_tokens=None, capacity=None):
         cfg = self.cfg
         h = rms_norm(x, p["ln1"], cfg.norm_eps)
         m = spec.mixer
         own_cache = cache["self"] if spec.cross is not None else cache
         if isinstance(m, AttentionSpec):
-            y, new_cache = attn_mod.attention_decode(
-                p["mixer"], h, m, own_cache, lengths,
-                use_kernels=self.use_kernels)
+            if tables is not None:
+                if spec.cross is not None:
+                    raise ValueError("paged decode does not support "
+                                     "cross-attention blocks")
+                y, new_cache = attn_mod.attention_decode_paged(
+                    p["mixer"], h, m, own_cache, lengths, tables,
+                    page_tokens=page_tokens, capacity=capacity,
+                    use_kernels=self.use_kernels)
+            else:
+                y, new_cache = attn_mod.attention_decode(
+                    p["mixer"], h, m, own_cache, lengths,
+                    use_kernels=self.use_kernels)
         else:
             y, new_cache = lin_mod.linear_decode(p["mixer"], h, m, own_cache,
                                                  use_kernels=self.use_kernels)
@@ -236,7 +246,8 @@ class Model:
             all_caches.append(caches)
         return x, all_caches, aux_total
 
-    def _decode_groups(self, groups, params_groups, x, caches, lengths):
+    def _decode_groups(self, groups, params_groups, x, caches, lengths,
+                       tables=None, page_tokens=None, capacity=None):
         new_all = []
         for g, gp, gc in zip(groups, params_groups, caches):
             def body(x, xs, _g=g, _gp=gp):
@@ -246,7 +257,10 @@ class Model:
                     p = (_gp["shared"][f"b{bi}"] if bspec.shared
                          else rep_params[f"b{bi}"])
                     x, c = self._decode_block(bspec, p, x,
-                                              rep_caches[f"b{bi}"], lengths)
+                                              rep_caches[f"b{bi}"], lengths,
+                                              tables=tables,
+                                              page_tokens=page_tokens,
+                                              capacity=capacity)
                     new_caches[f"b{bi}"] = c
                 return x, new_caches
 
@@ -488,8 +502,14 @@ class Model:
         x_last = jnp.take_along_axis(hidden, idx, axis=1)
         return self._logits(params, x_last)[:, 0]
 
-    def decode_step(self, params, tokens, caches, lengths):
+    def decode_step(self, params, tokens, caches, lengths, tables=None,
+                    page_tokens=None, capacity=None):
         """tokens: (B,) int32; lengths: (B,) current context sizes.
+
+        ``tables``: optional paged-KV block tables ``{"seq": (B, capacity/T)
+        int32, "ring": (B, W_buf/T) int32}`` — when given, ``caches`` holds
+        page-pool leaves (see ``models/paged.py``) and ``page_tokens`` /
+        ``capacity`` must be the (static) page size and slot capacity.
 
         Returns (logits (B, V) f32, updated caches).
         """
@@ -500,7 +520,10 @@ class Model:
             x = x + sinusoidal_positions(lengths[:, None],
                                          cfg.d_model).astype(x.dtype)
         x, new_caches = self._decode_groups(cfg.groups, params["groups"], x,
-                                            caches["groups"], lengths)
+                                            caches["groups"], lengths,
+                                            tables=tables,
+                                            page_tokens=page_tokens,
+                                            capacity=capacity)
         logits = self._logits(params, x)[:, 0]
         self._inference = False
         return logits, {"groups": new_caches}

@@ -1,0 +1,326 @@
+"""Paged decode-cache layout: BlockPool pages as the real device KV.
+
+Replaces the dense per-slot ``(num_slots, capacity, ...)`` decode buffers
+with shared page pools indexed through per-slot block tables:
+
+  * full attention:  ``k``/``v``  pools  ``(R, Hkv, P, T, D)``
+  * MLA latents:     ``ckv`` ``(R, P, T, rank)``, ``kpe`` ``(R, P, T, rope)``
+  * SWA attention:   same ``k``/``v`` pool leaves, addressed through a ring
+    table (the ring buffer is paged too, from the same pool)
+  * linear/SSM state: unchanged per-slot leaves (O(1) per request)
+
+``P = num_pool_pages + 1``: the extra *sink* page (id ``num_pool_pages``,
+never handed out by the BlockPool) is what retired slots' tables point at,
+so their in-flight scatter writes in ``step_block`` land on a page no live
+request reads. ``T`` (page tokens) equals the prefix cache's block size, so
+one BlockPool id addresses both the metadata block and the device page.
+
+Two tables per slot, both host-side numpy handed to each decode dispatch:
+
+  * seq table ``(num_slots, capacity/T)`` — append-only full/MLA pages;
+    the pages covering a prompt's full blocks are *prefix-shareable* (other
+    slots map them read-only via BlockPool ref-counts).
+  * ring table ``(num_slots, W_buf/T)`` — SWA ring pages, always privately
+    owned: the ring content at length L is only valid for resuming at
+    exactly L, so shared-prefix SWA/linear state travels as an exact-length
+    snapshot payload (``core.prefix_cache.LinearSnapshot.payload``) copied
+    into the new slot's own pages at admission.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionSpec, ModelConfig
+from repro.models.model import _dtype, slstm_zero
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    page_tokens: int
+    num_pages: int              # pool pages (sink excluded)
+    capacity: int
+    seq_cols: int               # seq table width (0: no full/MLA layers)
+    ring_cols: int              # ring table width (0: no SWA layers)
+    ring_tokens: int            # W_buf of the SWA layers (0 if none)
+
+    @property
+    def sink(self) -> int:
+        return self.num_pages
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_pages + 1
+
+
+def _is_ring(m) -> bool:
+    return isinstance(m, AttentionSpec) and m.kind == "swa" and m.window > 0
+
+
+def _is_seq(m) -> bool:
+    return isinstance(m, AttentionSpec) and not _is_ring(m)
+
+
+def paged_layout(cfg: ModelConfig, capacity: int, page_tokens: int,
+                 num_pages: int) -> PagedLayout:
+    """Validate the arch for paged decode and derive the table geometry."""
+    if cfg.encoder_groups is not None or cfg.num_image_patches:
+        raise ValueError("paged KV supports decoder-only token models "
+                         "(no encoder / image prefix)")
+    T = page_tokens
+    if capacity % T:
+        raise ValueError(f"capacity {capacity} not a multiple of page "
+                         f"size {T}")
+    has_seq = False
+    rings = set()
+    for g in cfg.groups:
+        for b in g.blocks:
+            if b.cross is not None:
+                raise ValueError("paged KV does not support cross-attention")
+            m = b.mixer
+            if _is_ring(m):
+                w_buf = min(m.window, capacity)
+                if w_buf % T:
+                    raise ValueError(f"SWA buffer {w_buf} not a multiple of "
+                                     f"page size {T}")
+                rings.add(w_buf)
+            elif _is_seq(m):
+                has_seq = True
+    if len(rings) > 1:
+        raise ValueError("paged KV requires one SWA window per model, got "
+                         f"{sorted(rings)}")
+    ring_tokens = rings.pop() if rings else 0
+    return PagedLayout(page_tokens=T, num_pages=num_pages, capacity=capacity,
+                       seq_cols=capacity // T if has_seq else 0,
+                       ring_cols=ring_tokens // T, ring_tokens=ring_tokens)
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, layout: PagedLayout):
+    """Zeroed page pools + per-slot state, same pytree structure as the
+    dense ``Model.init_cache`` so the engine's scan/donation plumbing is
+    shared."""
+    dt = _dtype(cfg)
+    P, T = layout.total_pages, layout.page_tokens
+
+    def block_cache(bspec):
+        m = bspec.mixer
+        if isinstance(m, AttentionSpec):
+            if m.kind == "mla":
+                return {"ckv": jnp.zeros((P, T, m.mla_kv_rank), dt),
+                        "kpe": jnp.zeros((P, T, m.mla_rope_dim), dt)}
+            return {"k": jnp.zeros((m.kv_heads, P, T, m.head_dim), dt),
+                    "v": jnp.zeros((m.kv_heads, P, T, m.head_dim), dt)}
+        if m.kind == "slstm":
+            return {"state": slstm_zero(num_slots, m)}
+        dv = m.value_dim + (1 if m.kind == "mlstm" else 0)
+        c = {"state": jnp.zeros((num_slots, m.heads, m.key_dim, dv),
+                                jnp.float32)}
+        if m.conv_kernel:
+            C = m.heads * (2 * m.key_dim + m.value_dim)
+            c["conv"] = jnp.zeros((num_slots, m.conv_kernel - 1, C), dt)
+        return c
+
+    groups = []
+    for g in cfg.groups:
+        gc = {}
+        for bi, b in enumerate(g.blocks):
+            one = block_cache(b)
+            gc[f"b{bi}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (g.repeats,) + x.shape),
+                one)
+        groups.append(gc)
+    return {"groups": groups}
+
+
+def page_bytes(cfg: ModelConfig, layout: PagedLayout) -> int:
+    """Device bytes one pool page occupies summed across every paged leaf
+    (a single page id addresses the same row in ALL attention layers)."""
+    size = jnp.dtype(_dtype(cfg)).itemsize
+    total = 0
+    for g in cfg.groups:
+        for b in g.blocks:
+            m = b.mixer
+            if not isinstance(m, AttentionSpec):
+                continue
+            if m.kind == "mla":
+                d = m.mla_kv_rank + m.mla_rope_dim
+                total += g.repeats * layout.page_tokens * d * size
+            else:
+                total += (2 * g.repeats * m.kv_heads * layout.page_tokens
+                          * m.head_dim * size)
+    return total
+
+
+def zero_request_payload(cfg: ModelConfig, L: int):
+    """Zeroed single-request prefill caches (leaves (R, 1, L, ...)) in the
+    trimmed-payload format ``admit_many`` consumes — lets the engine warm
+    its paged-admission scatter programs without running a real prefill.
+    (``Model.init_cache`` is close but window-clips SWA leaves; admission
+    payloads keep the full L rows.)"""
+    dt = _dtype(cfg)
+
+    def block_cache(bspec):
+        m = bspec.mixer
+        if isinstance(m, AttentionSpec):
+            if m.kind == "mla":
+                return {"ckv": jnp.zeros((1, L, m.mla_kv_rank), dt),
+                        "kpe": jnp.zeros((1, L, m.mla_rope_dim), dt)}
+            return {"k": jnp.zeros((1, L, m.kv_heads, m.head_dim), dt),
+                    "v": jnp.zeros((1, L, m.kv_heads, m.head_dim), dt)}
+        if m.kind == "slstm":
+            return {"state": slstm_zero(1, m)}
+        dv = m.value_dim + (1 if m.kind == "mlstm" else 0)
+        c = {"state": jnp.zeros((1, m.heads, m.key_dim, dv), jnp.float32)}
+        if m.conv_kernel:
+            C = m.heads * (2 * m.key_dim + m.value_dim)
+            c["conv"] = jnp.zeros((1, m.conv_kernel - 1, C), dt)
+        return c
+
+    groups = []
+    for g in cfg.groups:
+        gc = {}
+        for bi, b in enumerate(g.blocks):
+            one = block_cache(b)
+            gc[f"b{bi}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (g.repeats,) + x.shape),
+                one)
+        groups.append(gc)
+    return {"groups": groups}
+
+
+# ---------------------------------------------------------------------------
+# request payload -> page tensors (admission)
+# ---------------------------------------------------------------------------
+
+
+def _pageify_seq(leaf, c: int, L: int, T: int):
+    """(R, 1, L, ...) request leaf -> page tensor for pages [c/T, ceil(L/T)).
+
+    k/v leaves (R, 1, L, Hkv, D) -> (R, Hkv, n, T, D); MLA latents
+    (R, 1, L, d) -> (R, n, T, d). The tail page is zero-padded past L,
+    matching the dense zero-initialized buffers."""
+    R = leaf.shape[0]
+    n = -(-(L - c) // T)
+    span = leaf[:, 0, c:L]
+    pad = [(0, 0)] * span.ndim
+    pad[1] = (0, c + n * T - L)
+    span = jnp.pad(span, pad)
+    if span.ndim == 4:                                       # (R, nT, Hkv, D)
+        pages = span.reshape(R, n, T, span.shape[2], span.shape[3])
+        return pages.transpose(0, 3, 1, 2, 4)                # (R,Hkv,n,T,D)
+    return span.reshape(R, n, T, span.shape[-1])             # (R,n,T,d)
+
+
+def _ring_from_payload(leaf, L: int, W: int, T: int):
+    """Exact SWA ring at length L from the request leaf (R, 1, L, Hkv, D):
+    positions [max(0, L-W), L) at ring slot ``pos % W`` (the leaf always
+    carries exact rows there — a suffix prefill's merged caches keep the
+    prior window rows from the un-rung snapshot). Returns page tensor
+    (R, Hkv, W/T, T, D)."""
+    R, _, _, Hkv, D = leaf.shape
+    ring = jnp.zeros((R, W, Hkv, D), leaf.dtype)
+    start = max(0, L - W)
+    pos = jnp.arange(start, L)
+    ring = ring.at[:, pos % W].set(leaf[:, 0, start:L].astype(ring.dtype))
+    pages = ring.reshape(R, W // T, T, Hkv, D)
+    return pages.transpose(0, 3, 1, 2, 4)                    # (R,Hkv,Wc,T,D)
+
+
+def build_admit_payload(cfg: ModelConfig, payload, layout: PagedLayout,
+                        c: int, L: int):
+    """Split one request's prefill caches into paged-admission tensors.
+
+    ``payload``: the trimmed request caches (leaves (R, 1, L, ...)) covering
+    the full prompt [0, L) — a full prefill's caches, or a suffix prefill's
+    merged prior+suffix caches. ``c``: device-cached prefix (page-aligned;
+    its pages are shared, not rewritten).
+
+    Returns ``{"seq": ..., "ring": ..., "state": ...}`` pytrees mirroring
+    the cache group structure (None-valued groups where a kind is absent).
+    The ring + state tensors double as the snapshot payload for
+    ``insert_device`` when L is page-aligned.
+    """
+    T, W = layout.page_tokens, layout.ring_tokens
+    seq_g, ring_g, state_g = [], [], []
+    for gi, g in enumerate(cfg.groups):
+        seq_b, ring_b, state_b = {}, {}, {}
+        for bi, b in enumerate(g.blocks):
+            m = b.mixer
+            pc = payload["groups"][gi][f"b{bi}"]
+            key = f"b{bi}"
+            if _is_ring(m):
+                ring_b[key] = {
+                    name: _ring_from_payload(pc[name], L, W, T)
+                    for name in ("k", "v")}
+            elif _is_seq(m):
+                seq_b[key] = {name: _pageify_seq(pc[name], c, L, T)
+                              for name in pc}
+            else:
+                state_b[key] = pc
+        seq_g.append(seq_b or None)
+        ring_g.append(ring_b or None)
+        state_g.append(state_b or None)
+    return {"seq": seq_g, "ring": ring_g, "state": state_g}
+
+
+# ---------------------------------------------------------------------------
+# pages -> chunk-format prior caches (suffix-only prefill on a prefix hit)
+# ---------------------------------------------------------------------------
+
+
+def build_prior(cfg: ModelConfig, paged_caches, layout: PagedLayout,
+                seq_ids, snapshot, c: int):
+    """Chunk-format prior caches covering [0, c) for a suffix prefill.
+
+    Full/MLA rows are gathered from the shared pool pages ``seq_ids``
+    (c/T of them, ref-pinned by the caller); SWA rows [max(0, c-W), c) are
+    un-rung from the snapshot ring (rows below are zeros, masked by the
+    window); linear state comes from the snapshot leaves. The result plugs
+    straight into ``Model.prefill_chunk(..., caches=prior)`` with positions
+    offset by c.
+    """
+    T, W = layout.page_tokens, layout.ring_tokens
+    ids = jnp.asarray(seq_ids, jnp.int32)
+    groups = []
+    for gi, g in enumerate(cfg.groups):
+        gc = {}
+        for bi, b in enumerate(g.blocks):
+            m = b.mixer
+            key = f"b{bi}"
+            pool = paged_caches["groups"][gi][key]
+            if _is_ring(m):
+                ring = {name: snapshot["ring"][gi][key][name]
+                        for name in ("k", "v")}
+
+                def unring(pages):
+                    R, Hkv = pages.shape[0], pages.shape[1]
+                    D = pages.shape[-1]
+                    flat = pages.transpose(0, 2, 3, 1, 4).reshape(
+                        R, W, Hkv, D)
+                    start = max(0, c - W)
+                    prior = jnp.zeros((R, 1, c, Hkv, D), pages.dtype)
+                    pos = jnp.arange(start, c)
+                    return prior.at[:, 0, start:].set(flat[:, pos % W])
+
+                gc[key] = {name: unring(v) for name, v in ring.items()}
+            elif _is_seq(m):
+                if m.kind == "mla":
+                    def gather2(pool_leaf):
+                        R, d = pool_leaf.shape[0], pool_leaf.shape[-1]
+                        return pool_leaf[:, ids].reshape(R, c, d)[:, None]
+                    gc[key] = {name: gather2(v) for name, v in pool.items()}
+                else:
+                    def gather4(pool_leaf):
+                        R, Hkv = pool_leaf.shape[0], pool_leaf.shape[1]
+                        D = pool_leaf.shape[-1]
+                        g4 = pool_leaf[:, :, ids]            # (R,Hkv,n,T,D)
+                        return g4.transpose(0, 2, 3, 1, 4).reshape(
+                            R, c, Hkv, D)[:, None]
+                    gc[key] = {name: gather4(v) for name, v in pool.items()}
+            else:
+                gc[key] = snapshot["state"][gi][key]
+        groups.append(gc)
+    return {"groups": groups}

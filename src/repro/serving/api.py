@@ -8,6 +8,18 @@ import numpy as np
 
 
 @dataclass
+class PagePin:
+    """Device-prefix hit handle (paged KV): the matched pool pages, pinned
+    via BlockPool ref-counts between routing and admission so LRU eviction
+    cannot reclaim them while the request is queued. ``seq_ids`` become the
+    head of the slot's seq block table; ``snapshot`` (when the arch carries
+    exact-length SWA/linear state) supplies the ring/state payload."""
+    cached_len: int                    # page-aligned resumable prefix tokens
+    seq_ids: List[int]                 # pinned full/MLA pages, logical order
+    snapshot: Optional[object] = None  # core.prefix_cache.LinearSnapshot
+
+
+@dataclass
 class Request:
     rid: int
     tokens: np.ndarray                 # prompt token ids (int32)
@@ -26,6 +38,9 @@ class Request:
     # the core.router.RoutingDecision that placed this request (set by
     # CrossDCDeployment._route; None until routed)
     decision: Optional[object] = None
+    # paged-KV device prefix hit (set when the home region resumes from
+    # pool pages; pages stay ref-pinned until the request retires)
+    device_pin: Optional[PagePin] = None
 
 
 @dataclass

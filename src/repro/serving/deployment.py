@@ -42,10 +42,29 @@ crosses the links — flow bytes are measured from the quantized leaves, and
 the cache is dequantized before decode admission.  The running
 quantized/raw ratio (``measured_compression``) is the value
 ``SystemConfig.kv_wire_compression`` should carry in the analytic model and
-the simulator.  (One in-process fidelity note: offloaded requests reship
-the FULL cache even on a prefix hit — the per-region decode engines share
-no storage — so live egress upper-bounds the simulator's incremental
-``S_kv(total) - S_kv(cached)`` charge.)
+the simulator.
+
+Cache metadata goes through one ``core.kv_manager.GlobalKVManager``: every
+cluster cache registers there, ``_route`` reads its per-cluster matches
+(restricted to link-reachable clusters), and finished prefills record
+through it — so hotspot rebalancing and its ``rebalanced`` /
+``cross_transfers`` counters observe live traffic exactly as they observe
+the simulator's.
+
+Device prefix reuse (``DeploymentConfig.paged_kv``): each PD region's
+``DecodeEngine`` runs the paged layout, sharing ONE ``BlockPool`` with the
+region's ``HybridPrefixCache`` — prompt pages register at admission
+(``insert_device``) and stay LRU-resident after the request retires.  A
+locally-prefilled request whose prefix matches resumes from those pages:
+``match_resume`` pins them (ref-counts) and the scheduler prefills only
+the uncached suffix, so a prefix hit skips the cached-prefix compute
+instead of recomputing and reshipping it.  Offloaded (PrfaaS) requests
+still ship the full cache — the prefill ran in another datacenter, where
+the home region's device pages don't exist — so live egress upper-bounds
+the simulator's incremental ``S_kv(total) - S_kv(cached)`` charge on that
+path, while the local path now matches it.  With ``paged_kv=False`` (the
+default) the dense per-slot layout and the byte-accounting-twin pools are
+bit-identical to the pre-paged deployment.
 """
 from __future__ import annotations
 
@@ -54,17 +73,19 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.configs.base import AttentionSpec
 from repro.core.blockpool import BlockPool
 from repro.core.hardware import CHIPS, AnalyticProfile
+from repro.core.kv_manager import GlobalKVManager
 from repro.core.prefix_cache import HybridPrefixCache
 from repro.core.router import PD, PRFAAS, Router, RouterConfig, RoutingDecision
 from repro.core.throughput_model import SystemConfig, ThroughputModel
 from repro.core.transfer import Link, LinkTopology, star_pairs
 from repro.core.workload import Workload
-from repro.models import Model
+from repro.models import Model, paged_layout
 from repro.models.kvcache import (cache_num_bytes, dequantize_cache_from_wire,
                                   kv_bytes, quantize_cache_for_wire)
-from repro.serving.api import Request, Response
+from repro.serving.api import PagePin, Request, Response
 from repro.serving.engine import (DecodeEngine, PrefillEngine,
                                   RegionScheduler, trim_request_cache)
 
@@ -87,6 +108,11 @@ class DeploymentConfig:
     sample_seed: int = 0               # decode sampling PRNG seed
     block_tokens: int = 16
     pool_blocks: int = 4096
+    # paged device KV: region decode engines use BlockPool pages as the
+    # real cache layout and resume prefix hits from registered pages
+    # (suffix-only prefill); False keeps the dense per-slot layout with the
+    # pools as byte-accounting twins (bit-identical legacy behavior)
+    paged_kv: bool = False
     layerwise_pipeline: bool = True
     wire_compression: bool = False     # int8 KV quantization on the wire
     adapt_thresholds: bool = True      # live per-home congestion feedback
@@ -118,11 +144,21 @@ class CrossDCDeployment:
                                     prfaas_params if prfaas_params is not None
                                     else params, **bucket_kw)
         self.pd_prefill = PrefillEngine(model, params, **bucket_kw)
+        # paged regions share ONE BlockPool between the decode engine (page
+        # storage) and the region's prefix cache (page index): a cache hit
+        # names real device pages
+        pools: Dict[str, BlockPool] = {}
+        if cfg.paged_kv:
+            for name in self.pd_names:
+                pools[name] = BlockPool(cfg.pool_blocks, cfg.block_tokens,
+                                        1 << 16)
         self.decoders: Dict[str, DecodeEngine] = {
             name: DecodeEngine(model, params, cfg.decode_slots, cfg.capacity,
                                block_size=cfg.decode_block_size,
                                temperature=cfg.temperature, top_k=cfg.top_k,
-                               seed=cfg.sample_seed)
+                               seed=cfg.sample_seed, paged=cfg.paged_kv,
+                               pool=pools.get(name),
+                               page_tokens=cfg.block_tokens)
             for name in self.pd_names}
         # one continuously-batched scheduler loop per region: it owns the
         # region's prefill queue and decode slots together; every finished
@@ -134,7 +170,16 @@ class CrossDCDeployment:
             for name in self.pd_names}
         self.caches: Dict[str, HybridPrefixCache] = {PRFAAS: self._new_cache()}
         for name in self.pd_names:
-            self.caches[name] = self._new_cache()
+            if cfg.paged_kv:
+                self.caches[name] = self._paged_cache(pools[name])
+                self._wire_admission(name)
+            else:
+                self.caches[name] = self._new_cache()
+        # all cache metadata flows through the global manager: per-cluster
+        # matching for routing, prefill registration, hotspot rebalancing
+        self.kv = GlobalKVManager()
+        for name, cache in self.caches.items():
+            self.kv.register_cluster(name, cache)
 
         # ------- shared control plane: the simulator's Router + topology ---
         star = (list(cfg.pd_link_gbps) if cfg.pd_link_gbps is not None
@@ -171,6 +216,23 @@ class CrossDCDeployment:
             BlockPool(self.cfg.pool_blocks, self.cfg.block_tokens, 1 << 16),
             0, 1)
 
+    def _paged_cache(self, pool: BlockPool) -> HybridPrefixCache:
+        """Region prefix cache sharing the decode engine's page pool: its
+        entries are registered at admission (``insert_device``) and name
+        live device pages, so a match is device-resumable."""
+        lay = paged_layout(self.model.cfg, self.cfg.capacity,
+                           self.cfg.block_tokens, 1)
+        has_state = any(not isinstance(b.mixer, AttentionSpec)
+                        for g in self.model.cfg.groups for b in g.blocks)
+        return HybridPrefixCache(pool, 0, 1,
+                                 has_full_attn=lay.seq_cols > 0,
+                                 has_linear=lay.ring_cols > 0 or has_state)
+
+    def _wire_admission(self, name: str):
+        cache, dec = self.caches[name], self.decoders[name]
+        dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+            [int(t) for t in req.tokens], ids, snap)
+
     # ------------------------------------------------- two-cluster aliases
     @property
     def link(self) -> Link:
@@ -189,14 +251,26 @@ class CrossDCDeployment:
                              f"expected one of {self.pd_names}")
         req.home = home
         toks = list(map(int, req.tokens))
-        matches = {name: c.match(toks) for name, c in self.caches.items()
-                   if self.topology.cache_reachable(home, name, hub=PRFAAS)}
+        matches = self.kv.match_all(
+            toks, names=[n for n in self.caches
+                         if self.topology.cache_reachable(home, n,
+                                                          hub=PRFAAS)])
         decision = self.router.route(len(toks), matches,
                                      self.topology.pair_signal(PRFAAS, home),
                                      home=home)
         req.decision = decision
         req.route = decision.target
         req.cached_tokens = decision.cached_tokens
+        if self.cfg.paged_kv and decision.target == home:
+            # local prefill on a paged region: pin the device-resident
+            # prefix pages (ref-counts transfer to the engine at admission)
+            # so only the uncached suffix is computed.  An offloaded
+            # prefill cannot use home device pages — it ships the full
+            # cache as before.
+            c, ids, snap = self.caches[home].match_resume(toks)
+            if c:
+                self.decoders[home].pool.retain(ids)
+                req.device_pin = PagePin(c, ids, snap)
         return decision
 
     # ------------------------------------------------------------ lifecycle
@@ -260,7 +334,12 @@ class CrossDCDeployment:
                                self.virtual_now,
                                ramp_end=self.virtual_now)))
             flows[r.rid] = fl
-            self.caches[cluster].insert(list(map(int, r.tokens)))
+            if not (self.cfg.paged_kv and cluster != PRFAAS):
+                # paged regions register their device pages at ADMISSION
+                # (insert_device): inserting metadata blocks here would bind
+                # prefix hashes to pageless entries that match_resume would
+                # hand back as if they held KV
+                self.kv.record_prefill(cluster, list(map(int, r.tokens)))
             if self.cfg.wire_compression and cluster == PRFAAS:
                 payload = dequantize_cache_from_wire(payload)
             entries.append((r, int(first[i]), payload, len(r.tokens)))
@@ -345,6 +424,18 @@ class CrossDCDeployment:
                 "goodput_tok_s": self.schedulers[name].goodput_tok_s(),
                 "max_admit_wait": self.schedulers[name].max_admit_wait,
             }
+            if self.cfg.paged_kv:
+                dec = self.decoders[name]
+                pool = dec.pool
+                per_region[name]["pool"] = {
+                    **pool.stats, "resident": pool.resident,
+                    "used_blocks": pool.used_blocks,
+                    "num_blocks": pool.num_blocks}
+                # headroom: device bytes held by LRU-resident prefix pages
+                # (reclaimable on demand, reusable on a hit)
+                per_region[name]["resident_kv_bytes"] = \
+                    pool.resident * dec.page_bytes
+                per_region[name]["page_fail_retires"] = dec.page_fail_retires
         busy = sum(d.slot_busy_s for d in self.decoders.values())
         span = sum(self.cfg.decode_slots * s.wall_s
                    for s in self.schedulers.values())
@@ -360,6 +451,10 @@ class CrossDCDeployment:
                            for n in self.pd_names},
             "router_decisions": dict(self.router.decisions),
             "cross_transfers": self.router.cross_transfers,
+            "kv_manager": {"rebalanced": self.kv.rebalanced,
+                           "cross_transfers": self.kv.cross_transfers,
+                           "clusters": self.kv.stats()},
+            "paged_kv": self.cfg.paged_kv,
             "truncations": sum(d.truncations for d in self.decoders.values()),
             "occupancy": busy / span if span > 0 else 0.0,
             "goodput_tok_s": sum(s.goodput_tok_s()

@@ -49,6 +49,31 @@ benchmarks can report decode-slot occupancy and goodput.
 Compile counts are observable (``PrefillEngine.compiles``,
 ``DecodeEngine.block_compiles``) so benchmarks and tests can assert the
 zero-recompile property instead of trusting it.
+
+**Paged KV (``DecodeEngine(..., paged=True)``)** replaces the dense
+per-slot buffers with the ``core.blockpool.BlockPool`` as the real device
+cache layout (``models/paged.py``):
+
+  * full-attn k/v live in shared page pools ``(R, Hkv, P, T, D)`` and MLA
+    latents in ``(R, P, T, rank)``, where ``T`` is the pool's block size
+    and ``P`` its page count + 1 sink page; linear/SSM state stays per-slot.
+  * each slot addresses its pages through two host-side int32 block tables:
+    ``seq`` ``(num_slots, capacity/T)`` for append-only full/MLA layers and
+    ``ring`` ``(num_slots, W_buf/T)`` for SWA ring buffers.
+  * ``admit_many`` writes only the request's *pages* in one jit'd scatter
+    (no capacity-sized zero padding, no monolithic slot copy); a prefix hit
+    maps the matched pages read-only into the slot's table head via
+    BlockPool ref-counts instead of rewriting them.  ``step_block`` reads
+    and appends through the tables (``kernels/paged_decode_attn.py``);
+    retiring a slot releases its refs — prompt pages registered in the
+    prefix cache stay LRU-resident, decode tail pages free immediately.
+
+  Prefer ``paged_kv=False`` (the default, dense layout) when the arch has
+  encoder/cross-attention blocks (unsupported), when slots are few and
+  long-lived (dense buffers have no table indirection overhead), or when
+  byte-identical legacy traces matter; paged pays off under prefix reuse
+  and many short concurrent streams, where resident KV bytes track the
+  *used* pages instead of ``num_slots x capacity``.
 """
 from __future__ import annotations
 
@@ -60,7 +85,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blockpool import PREFIX, BlockPool
 from repro.models import Model, prepare_decode_caches
+from repro.models import paged as paged_mod
 from repro.models.kvcache import cache_num_bytes
 from repro.serving.api import Request, Response
 
@@ -104,6 +131,7 @@ class PrefillEngine:
         self._finish = jax.jit(self._finish_impl)
         self._shape_keys = set()         # fallback compile tracking
         self.calls = 0
+        self.tokens_prefilled = 0        # valid prompt tokens computed
 
     # ------------------------------------------------------------- jit fns
     def _prefill_impl(self, params, tokens, lengths):
@@ -148,7 +176,8 @@ class PrefillEngine:
             return len(self._shape_keys)
         return sum(sizes)
 
-    def warmup(self, batch_sizes: Sequence[int], lengths: Sequence[int]):
+    def warmup(self, batch_sizes: Sequence[int], lengths: Sequence[int],
+               decode: Optional["DecodeEngine"] = None):
         """Compile every (batch-bucket, length-bucket) pair up front — and,
         for engines with ``max_bucket`` set, the chunked-prefill chunk
         programs past it.  Chunk warmup is chunk-count exact: a length L
@@ -156,7 +185,11 @@ class PrefillEngine:
         (each chunk index is its own program — the prior-cache operand
         grows with the index), which covers every shorter chunked prompt;
         the pre-fix code rounded L up to a power of two first, compiling
-        chunk programs no real prompt of length <= L ever reaches."""
+        chunk programs no real prompt of length <= L ever reaches.
+
+        Pass the region's ``decode`` engine to also warm its paged
+        admission programs (the page-write scatter per pow2 page-count
+        bucket) for the same traffic shape — a no-op for dense engines."""
         shapes = set()
         for l in lengths:
             if self.is_chunked(l):
@@ -168,6 +201,8 @@ class PrefillEngine:
             for l in sorted(shapes):
                 toks = np.zeros((b, l), np.int32)
                 self.prefill(toks, np.full((b,), l, np.int32))
+        if decode is not None and getattr(decode, "paged", False):
+            decode.warmup_admission(batch_sizes, lengths)
 
     def _pad(self, tokens: np.ndarray, lengths):
         """Pad a (B, S) prompt batch to its schedulable shape: pow2 length
@@ -213,6 +248,7 @@ class PrefillEngine:
             self._shape_keys.add(("prefill", Bb, Sb))
             first, caches = self._prefill(self.params, jnp.asarray(toks),
                                           jnp.asarray(lens))
+            self.tokens_prefilled += int(lens[:B].sum())
         jax.block_until_ready(first)
         return np.asarray(first)[:B], caches, time.perf_counter() - t0
 
@@ -226,6 +262,31 @@ class PrefillEngine:
             raise ValueError("prompt fits a plain bucket; use prefill()")
         self.calls += 1
         return ChunkedPrefill(self, toks, lens, B)
+
+    def start_suffix(self, tokens, prior_caches, cached_len: int
+                     ) -> "ChunkedPrefill":
+        """Suffix-only prefill for a device prefix hit: compute tokens
+        [cached_len, L) as fixed-shape chunks over the prior caches
+        (positions offset by ``cached_len``; the chunked-prefill
+        ``q_offset`` path masks exactly as a full prefill would, so the
+        resulting tokens and merged caches are identical — only the
+        cached-prefix FLOPs are skipped).  Batch of 1, scheduled like a
+        chunked unit."""
+        full = np.asarray(tokens, np.int32).reshape(-1)
+        suffix = full[cached_len:]
+        n_suffix = int(suffix.shape[0])
+        if n_suffix <= 0:
+            raise ValueError("suffix prefill needs >= 1 uncached token")
+        C = self.bucket_for(n_suffix)
+        if self.max_bucket is not None:
+            C = min(C, self.max_bucket)
+        n_chunks = -(-n_suffix // C)
+        toks = np.zeros((1, n_chunks * C), np.int32)
+        toks[0, :n_suffix] = suffix
+        self.calls += 1
+        return ChunkedPrefill(self, toks, np.array([n_suffix], np.int32), 1,
+                              caches=prior_caches, pos_offset=cached_len,
+                              chunk=C)
 
 
 class ChunkedPrefill:
@@ -241,15 +302,20 @@ class ChunkedPrefill:
     """
 
     def __init__(self, eng: PrefillEngine, toks: np.ndarray,
-                 lens: np.ndarray, n_valid: int):
+                 lens: np.ndarray, n_valid: int, *, caches=None,
+                 pos_offset: int = 0, chunk: Optional[int] = None):
         self.eng = eng
         self.toks = toks                     # (Bb, Sb), Sb = n_chunks * C
         self.lens = lens
         self.n_valid = n_valid               # real (unpadded) rows
-        self.C = eng.max_bucket
+        self.C = eng.max_bucket if chunk is None else chunk
         self.n_chunks = toks.shape[1] // self.C
         self.i = 0                           # next chunk index
-        self.caches = None
+        # suffix-prefill mode: ``caches`` already cover [0, pos_offset) and
+        # the chunk positions (RoPE phases, causal masks) start there;
+        # ``lens`` then count SUFFIX tokens, not the full prompt
+        self.caches = caches
+        self.off = int(pos_offset)
         self._last = None                    # (Bb, 1, d) last-hidden carry
         self._lens_dev = jnp.asarray(lens)
         self.wall_s = 0.0
@@ -263,9 +329,10 @@ class ChunkedPrefill:
         t0 = time.perf_counter()
         eng, C, i = self.eng, self.C, self.i
         Bb = self.toks.shape[0]
-        eng._shape_keys.add(("chunk", Bb, C, i))
+        eng._shape_keys.add(("chunk", Bb, C, i, self.off))
         pos = np.broadcast_to(
-            np.arange(i * C, (i + 1) * C, dtype=np.int32)[None], (Bb, C))
+            np.arange(self.off + i * C, self.off + (i + 1) * C,
+                      dtype=np.int32)[None], (Bb, C))
         chunk_lens = np.clip(self.lens - i * C, 0, C).astype(np.int32)
         h, self.caches = eng._chunk(
             eng.params,
@@ -296,6 +363,7 @@ class ChunkedPrefill:
         first = self.eng._finish(self.eng.params, self._last,
                                  jnp.ones((Bb,), jnp.int32))
         jax.block_until_ready(first)
+        self.eng.tokens_prefilled += int(self.lens[:self.n_valid].sum())
         self.wall_s += time.perf_counter() - t0
         return np.asarray(first)[:self.n_valid], self.caches
 
@@ -305,7 +373,8 @@ class DecodeEngine:
 
     def __init__(self, model: Model, params, num_slots: int, capacity: int,
                  block_size: int = 8, *, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0):
+                 top_k: int = 0, seed: int = 0, paged: bool = False,
+                 pool: Optional[BlockPool] = None, page_tokens: int = 16):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -315,8 +384,48 @@ class DecodeEngine:
         self.top_k = int(top_k)
         self._key = jax.random.PRNGKey(int(seed))
         self._blocks = 0               # step_block dispatch counter (RNG)
-        self.caches = jax.jit(
-            lambda: model.init_cache(num_slots, capacity))()
+        self.paged = bool(paged)
+        if self.paged:
+            if pool is None:
+                # standalone default: same token headroom the dense layout
+                # reserves (num_slots * capacity), as pool pages
+                pool = BlockPool(num_slots * capacity // page_tokens,
+                                 page_tokens)
+            if pool.block_tokens != page_tokens:
+                raise ValueError(
+                    f"pool block_tokens {pool.block_tokens} != "
+                    f"page_tokens {page_tokens}")
+            self.pool = pool
+            lay = paged_mod.paged_layout(model.cfg, capacity, page_tokens,
+                                         pool.num_blocks)
+            self._layout = lay
+            self.caches = jax.jit(lambda: paged_mod.init_paged_cache(
+                model.cfg, num_slots, lay))()
+            # device bytes one pool page occupies across every paged leaf
+            # (one page id addresses the same row in ALL attention layers)
+            self.page_bytes = paged_mod.page_bytes(model.cfg, lay)
+            # host-side block tables; retired/empty rows point at the sink
+            self.table_seq = np.full((num_slots, lay.seq_cols), lay.sink,
+                                     np.int32)
+            self.table_ring = np.full((num_slots, lay.ring_cols), lay.sink,
+                                      np.int32)
+            self._slot_shared: List[List[int]] = [[] for _ in range(num_slots)]
+            self._slot_owned: List[List[int]] = [[] for _ in range(num_slots)]
+            self._seq_pages: List[List[int]] = [[] for _ in range(num_slots)]
+            self._block_paged = jax.jit(self._block_paged_impl,
+                                        donate_argnums=(2,))
+            self._write_pages = jax.jit(self._write_pages_impl,
+                                        donate_argnums=(0,))
+            # deployment hooks: prefix-cache registration at admission (page
+            # content is final then) and pin accounting at retirement
+            self.on_admit = None       # fn(req, prompt_len, seq_ids, snap)
+            self.on_retire = None      # fn(rid)
+            self.page_fail_retires = 0
+            self._warming = False      # hooks muted during warmup_admission
+        else:
+            self.pool = pool
+            self.caches = jax.jit(
+                lambda: model.init_cache(num_slots, capacity))()
         self.lengths = np.zeros((num_slots,), np.int32)
         self.tokens = np.zeros((num_slots,), np.int32)
         self.active = np.zeros((num_slots,), bool)
@@ -353,6 +462,220 @@ class DecodeEngine:
 
         return jax.tree.map(place, caches, *payloads)
 
+    # ---------------------------------------------------------- paged admit
+    def _write_pages_impl(self, caches, seq_pages, ids_seq, ring_pages,
+                          ids_ring, states, slots):
+        """One scatter for a whole paged admission: every full/MLA layer's
+        new pages land at ``ids_seq`` in its pool, every SWA layer's ring
+        pages at ``ids_ring``; linear state is K per-slot updates.  Padded
+        id tails repeat the last id with the same payload page — duplicate
+        writes of identical content, harmless."""
+        cfg = self.model.cfg
+        groups = []
+        for gi, g in enumerate(cfg.groups):
+            gc = {}
+            for bi, b in enumerate(g.blocks):
+                key = f"b{bi}"
+                m = b.mixer
+                leaves = caches["groups"][gi][key]
+                if paged_mod._is_ring(m):
+                    pg = ring_pages[gi][key]
+                    gc[key] = {n: leaves[n].at[:, :, ids_ring].set(
+                        pg[n].astype(leaves[n].dtype)) for n in leaves}
+                elif paged_mod._is_seq(m):
+                    pg = seq_pages[gi][key]
+                    if m.kind == "mla":
+                        gc[key] = {n: leaves[n].at[:, ids_seq].set(
+                            pg[n].astype(leaves[n].dtype)) for n in leaves}
+                    else:
+                        gc[key] = {n: leaves[n].at[:, :, ids_seq].set(
+                            pg[n].astype(leaves[n].dtype)) for n in leaves}
+                else:
+                    def place(buf, *news):
+                        for j, new in enumerate(news):
+                            buf = jax.lax.dynamic_update_slice_in_dim(
+                                buf, new.astype(buf.dtype), slots[j], axis=1)
+                        return buf
+                    gc[key] = jax.tree.map(
+                        place, leaves, *[s[gi][key] for s in states])
+            groups.append(gc)
+        return {"groups": groups}
+
+    @staticmethod
+    def _cat_pad(parts, n_pad: int, axis: int):
+        """Concatenate page tensors along their page axis and pad to
+        ``n_pad`` pages by repeating the last page."""
+        x = jnp.concatenate(parts, axis=axis) if len(parts) > 1 else parts[0]
+        n = x.shape[axis]
+        if n < n_pad:
+            idx = [slice(None)] * x.ndim
+            idx[axis] = slice(n - 1, n)
+            reps = [1] * x.ndim
+            reps[axis] = n_pad - n
+            x = jnp.concatenate([x, jnp.tile(x[tuple(idx)], reps)], axis=axis)
+        return x
+
+    def _gather_pages(self, payloads, kind: str, n_pad: int):
+        """Merge per-entry admission payloads of one kind ("seq"/"ring")
+        into the single padded operand tree ``_write_pages`` consumes."""
+        out = []
+        for gi in range(len(self.model.cfg.groups)):
+            if payloads[0][kind][gi] is None:
+                out.append(None)
+                continue
+            gd = {}
+            for key, d0 in payloads[0][kind][gi].items():
+                gd[key] = {}
+                for name in d0:
+                    parts = [p[kind][gi][key][name] for p in payloads]
+                    axis = 2 if parts[0].ndim == 5 else 1    # k/v vs MLA
+                    gd[key][name] = self._cat_pad(parts, n_pad, axis)
+            out.append(gd)
+        return out
+
+    def _admit_paged(self, entries: Sequence[Tuple]) -> int:
+        lay = self._layout
+        T = lay.page_tokens
+        taken = []
+        for (req, first, cache, L) in entries[:len(self._free)]:
+            pin = getattr(req, "device_pin", None)
+            c = pin.cached_len if pin is not None else 0
+            need_seq = -(-(L - c) // T) if lay.seq_cols else 0
+            ids = self.pool.allocate(need_seq + lay.ring_cols, PREFIX)
+            if ids is None:
+                break              # pool exhausted: request stays ready
+            taken.append((req, first, cache, L, pin, c,
+                          list(ids[:need_seq]), list(ids[need_seq:])))
+        if not taken:
+            return 0
+        n = len(taken)
+        slots = [self._free.popleft() for _ in range(n)]
+        payloads = [paged_mod.build_admit_payload(self.model.cfg, cache, lay,
+                                                  c, L)
+                    for (_, _, cache, L, _, c, _, _) in taken]
+        # one padded scatter: pow2 page counts + pow2 state-entry count
+        ids_seq = [b for t in taken for b in t[6]]
+        ids_ring = [b for t in taken for b in t[7]]
+        if ids_seq:
+            np_seq = next_pow2(len(ids_seq))
+            seq_tree = self._gather_pages(payloads, "seq", np_seq)
+            ids_seq += [ids_seq[-1]] * (np_seq - len(ids_seq))
+        else:
+            seq_tree, ids_seq = None, [0]
+        if ids_ring:
+            np_ring = next_pow2(len(ids_ring))
+            ring_tree = self._gather_pages(payloads, "ring", np_ring)
+            ids_ring += [ids_ring[-1]] * (np_ring - len(ids_ring))
+        else:
+            ring_tree, ids_ring = None, [0]
+        K = next_pow2(n)
+        states = [p["state"] for p in payloads]
+        states += [states[-1]] * (K - n)
+        pad_slots = slots + [slots[-1]] * (K - n)
+        self.caches = self._write_pages(
+            self.caches, seq_tree, jnp.asarray(ids_seq, jnp.int32),
+            ring_tree, jnp.asarray(ids_ring, jnp.int32), tuple(states),
+            jnp.asarray(pad_slots, jnp.int32))
+        for slot, payload, (req, first, _, L, pin, c, seq_new, ring_ids) in \
+                zip(slots, payloads, taken):
+            shared = list(pin.seq_ids) if pin is not None else []
+            seq_all = shared + seq_new
+            self.table_seq[slot, :] = lay.sink
+            self.table_seq[slot, :len(seq_all)] = seq_all
+            self.table_ring[slot, :] = lay.sink
+            self.table_ring[slot, :len(ring_ids)] = ring_ids
+            self._slot_shared[slot] = shared
+            self._slot_owned[slot] = seq_new + ring_ids
+            self._seq_pages[slot] = seq_all
+            self.lengths[slot] = L
+            self.tokens[slot] = first
+            self.active[slot] = True
+            self.budget[slot] = req.max_new_tokens
+            self.slot_req[slot] = req.rid
+            self.outputs[req.rid] = Response(req.rid, [int(first)])
+            if self.on_admit is not None and not self._warming:
+                snap = ({"ring": payload["ring"], "state": payload["state"]}
+                        if L % T == 0 else None)
+                self.on_admit(req, L, seq_all, snap)
+        return n
+
+    def _ensure_pages(self):
+        """Before a decode block: grow each active slot's seq table to cover
+        the block's writes.  A slot the pool cannot serve retires truncated
+        (the paged analogue of the dense capacity wall)."""
+        lay = self._layout
+        if not lay.seq_cols:
+            return
+        T = lay.page_tokens
+        for slot in np.where(self.active)[0]:
+            end = min(int(self.lengths[slot]) + self.block_size,
+                      self.capacity)
+            need = -(-end // T)
+            have = len(self._seq_pages[slot])
+            if need <= have:
+                continue
+            ids = self.pool.allocate(need - have, PREFIX)
+            if ids is None:
+                self.page_fail_retires += 1
+                self._retire(int(slot), force_truncate=True)
+                continue
+            self.table_seq[slot, have:need] = ids
+            self._seq_pages[slot].extend(ids)
+            self._slot_owned[slot].extend(ids)
+
+    def _block_paged_impl(self, params, tokens, caches, lengths, key, tables):
+        """Paged twin of ``_block_impl``: the block tables ride into every
+        ``decode_step`` (page geometry is closure-static)."""
+        lay = self._layout
+
+        def body(carry, _):
+            toks, caches, lens, key = carry
+            key, sub = jax.random.split(key)
+            logits, caches = self.model.decode_step(
+                params, toks, caches, lens, tables=tables,
+                page_tokens=lay.page_tokens, capacity=self.capacity)
+            nxt = self._select(logits, sub)
+            return (nxt, caches, lens + 1, key), nxt
+
+        (_, caches, _, _), toks = jax.lax.scan(
+            body, (tokens, caches, lengths, key), None,
+            length=self.block_size)
+        return toks, caches
+
+    def warmup_admission(self, batch_sizes: Sequence[int],
+                         lengths: Sequence[int]):
+        """Precompile the paged-admission scatter programs (pow2 page-count
+        x state-entry buckets) for the given traffic shape: zero-payload
+        requests are admitted into real slots and immediately retired, so
+        the pool round-trips (allocated == freed) and live traffic finds
+        every program warm."""
+        if not self.paged:
+            return
+        self._warming = True
+        try:
+            for b in sorted({next_pow2(min(int(x), self.num_slots))
+                             for x in batch_sizes}):
+                for l in sorted({int(x) for x in lengths}):
+                    payload = paged_mod.zero_request_payload(self.model.cfg,
+                                                             l)
+                    entries = [(Request(rid=-(10_000 + i),
+                                        tokens=np.zeros((l,), np.int32),
+                                        max_new_tokens=1), 0, payload, l)
+                               for i in range(b)]
+                    self.admit_many(entries)
+                    for slot in range(self.num_slots):
+                        rid = self.slot_req[slot]
+                        if rid is not None and rid <= -10_000:
+                            self._retire(slot)
+                            self.outputs.pop(rid, None)
+        finally:
+            self._warming = False
+
+    @property
+    def admit_compiles(self) -> Optional[int]:
+        """Distinct compiled paged-admission scatter programs."""
+        return _jit_cache_size(self._write_pages) if self.paged else 0
+
     def free_slots(self) -> List[int]:
         return list(self._free)
 
@@ -366,7 +689,14 @@ class DecodeEngine:
         """entries: [(req, first_token, one_cache, prompt_len), ...].
         Admits up to the number of free slots (in order); returns the
         number admitted.  One jit'd scatter regardless of K; K is padded to
-        a power of two (repeating the last entry) to bound compiles."""
+        a power of two (repeating the last entry) to bound compiles.
+
+        Paged mode writes only each request's *pages* (and honors
+        ``req.device_pin``: the pinned prefix pages are mapped, not
+        rewritten); admission then also needs pool pages, so it may admit
+        fewer than the free-slot count."""
+        if self.paged:
+            return self._admit_paged(entries)
         n = min(len(entries), len(self._free))
         if n == 0:
             return 0
@@ -389,23 +719,42 @@ class DecodeEngine:
         return n
 
     # ----------------------------------------------------------------- step
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, force_truncate: bool = False):
         rid = self.slot_req[slot]
         resp = self.outputs[rid]
         resp.finished = True
         # at the KV-capacity wall with budget remaining: NOT a clean finish
-        truncated = (self.lengths[slot] >= self.capacity - 1
-                     and self.budget[slot] > 0)
+        # (force_truncate: the paged pool ran out of pages mid-stream)
+        truncated = force_truncate or (self.lengths[slot] >= self.capacity - 1
+                                       and self.budget[slot] > 0)
         resp.truncated = bool(truncated)
         self.truncations += int(truncated)
         self.active[slot] = False
         self.slot_req[slot] = None
         self._free.append(slot)
+        if self.paged:
+            # drop the prefix pins and this slot's own pages: registered
+            # (populated) prompt pages stay LRU-resident for later hits,
+            # decode-tail/ring pages free immediately.  The table rows point
+            # at the sink so in-flight garbage writes land where no live
+            # request reads.
+            self.pool.release(self._slot_shared[slot])
+            self.pool.release(self._slot_owned[slot])
+            self._slot_shared[slot] = []
+            self._slot_owned[slot] = []
+            self._seq_pages[slot] = []
+            self.table_seq[slot, :] = self._layout.sink
+            self.table_ring[slot, :] = self._layout.sink
+            if self.on_retire is not None and not self._warming:
+                self.on_retire(rid)
 
     def step(self):
         """One decode iteration for all active slots (one host round-trip
         per token — the measured baseline for ``step_block``). Returns
         #active."""
+        if self.paged:
+            raise RuntimeError("the paged engine decodes in blocks "
+                               "(page growth is per-block); use step_block")
         if not self.active.any():
             return 0
         logits, self.caches = self._step(
@@ -456,7 +805,8 @@ class DecodeEngine:
 
     @property
     def block_compiles(self) -> Optional[int]:
-        return _jit_cache_size(self._block)
+        return _jit_cache_size(self._block_paged if self.paged
+                               else self._block)
 
     def step_block(self):
         """Advance every active stream by up to ``block_size`` tokens with
@@ -468,12 +818,23 @@ class DecodeEngine:
         retirement semantics to ``step()``."""
         if not self.active.any():
             return 0
+        if self.paged:
+            self._ensure_pages()          # may retire page-starved slots
+            if not self.active.any():
+                return 0
         t0 = time.perf_counter()
         key = jax.random.fold_in(self._key, self._blocks)
         self._blocks += 1
-        toks, self.caches = self._block(
-            self.params, jnp.asarray(self.tokens),
-            self.caches, jnp.asarray(self.lengths), key)
+        if self.paged:
+            tables = {"seq": jnp.asarray(self.table_seq),
+                      "ring": jnp.asarray(self.table_ring)}
+            toks, self.caches = self._block_paged(
+                self.params, jnp.asarray(self.tokens),
+                self.caches, jnp.asarray(self.lengths), key, tables)
+        else:
+            toks, self.caches = self._block(
+                self.params, jnp.asarray(self.tokens),
+                self.caches, jnp.asarray(self.lengths), key)
         toks = np.asarray(toks)                       # (block, num_slots)
         idx = np.where(self.active)[0]
         wall = time.perf_counter() - t0
@@ -603,6 +964,23 @@ class RegionScheduler:
         if not self.queue:
             return
         req0, e0 = self.queue[0]
+        pin = getattr(req0, "device_pin", None)
+        if (pin is not None and pin.cached_len > 0
+                and getattr(self.decode, "paged", False)):
+            # device prefix hit: prefill only the uncached suffix, reading
+            # the cached prefix straight out of the pinned pool pages
+            self.queue.popleft()
+            dec = self.decode
+            prior = paged_mod.build_prior(
+                dec.model.cfg, dec.caches, dec._layout, pin.seq_ids,
+                None if pin.snapshot is None else pin.snapshot.payload,
+                pin.cached_len)
+            lengths = np.array([len(req0.tokens)], np.int32)
+            self._inflight = (e0.start_suffix(req0.tokens, prior,
+                                              pin.cached_len),
+                              [req0], lengths)
+            self._prefill_one()              # run its first chunk this tick
+            return
         if e0.is_chunked(len(req0.tokens)):
             # long prompt: becomes the chunk-interleaved unit (batch of 1 —
             # one fixed-shape chunk advances per tick, decode keeps running)

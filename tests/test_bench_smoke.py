@@ -43,3 +43,16 @@ def test_bench_smoke_runs_clean(tmp_path):
     occ = eng["occupancy"]
     assert occ["occupancy_continuous"] > occ["occupancy_alternating"]
     assert occ["recompiles_after_warmup"] == 0
+    # paged KV telemetry (PR 7): prefix hits must measurably skip
+    # cached-prefix prefill, prefix pages must stay device-resident after
+    # the drain, and both the admission scatter and the block-table decode
+    # must run recompile-free after warmup
+    assert "paged_token_savings_at_50pct_hits" in eng
+    assert "paged_resident_kv_bytes" in eng
+    paged = eng["paged"]
+    assert paged["admission"]["admit_recompiles_after_warmup"] == 0
+    assert paged["prefix"]["decode_recompiles"] == 0
+    assert paged["prefix"]["token_savings_frac"] > 0.2
+    assert paged["prefix"]["tokens_prefilled"] < \
+        paged["prefix"]["tokens_submitted"]
+    assert paged["prefix"]["resident_kv_bytes"] > 0

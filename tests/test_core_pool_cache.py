@@ -49,6 +49,61 @@ class TestBlockPool:
         assert p.stats["alloc_fail"] == 1
         p.release(a)
 
+    def test_exhausted_all_refheld_alloc_fails(self):
+        """With every block ref-counted (live requests), allocation must
+        fail cleanly — nothing is evictable — and succeed again once refs
+        drop to the LRU."""
+        p = BlockPool(6, 4)
+        a = p.allocate(6)
+        p.mark_populated(a)
+        p.retain(a)                      # rc=2: pinned by a second user
+        assert p.allocate(1) is None
+        assert p.stats["alloc_fail"] == 1
+        assert p.stats["evicted"] == 0   # eviction never touches ref-held
+        p.release(a)
+        assert p.allocate(1) is None     # rc=1: still pinned
+        p.release(a)                     # rc=0: populated -> LRU
+        assert p.allocate(1) is not None
+        assert p.stats["evicted"] == 1
+        p.check_invariants()
+
+    def test_lru_never_reclaims_refheld_or_unpopulated(self):
+        """Eviction may only take rc=0 populated prefix blocks: ref-held
+        blocks never enter the LRU, and unpopulated blocks free outright
+        instead of lingering as (garbage) cache."""
+        p = BlockPool(4, 4)
+        held = p.allocate(2)             # rc=1 for the whole test
+        cached = p.allocate(2)
+        p.mark_populated(cached)
+        p.release(cached)                # rc=0 + populated -> LRU
+        got = p.allocate(2)              # free list empty: must evict
+        assert set(got) == set(cached)   # ...exactly the LRU pair
+        assert p.stats["evicted"] == 2
+        for bid in held:
+            assert p.get(bid).ref_count == 1
+        p.release(got)                   # unpopulated at rc=0
+        assert all(bid not in p._lru for bid in got)
+        assert p.stats["freed"] == 2     # freed, not cached
+        p.release(held)
+        p.check_invariants()
+
+    def test_transfer_discard_on_complete_even_if_retained(self):
+        """Transfer blocks die the moment their last reference drops —
+        populated or not, retained mid-flight or not — and never reach the
+        LRU (paper Fig. 4: the transfer cache is not reusable)."""
+        p = BlockPool(8, 4)
+        t = p.allocate(3, TRANSFER)
+        p.retain(t)                      # e.g. sender + receiver views
+        p.mark_populated(t)
+        p.release(t)                     # transfer completes on one side
+        assert all(b in p._blocks for b in t)
+        p.release(t)                     # last ref: discard, not cache
+        assert all(b not in p._blocks for b in t)
+        assert len(p._lru) == 0
+        assert p.free_blocks == 8
+        assert p.stats["freed"] == 3 and p.stats["evicted"] == 0
+        p.check_invariants()
+
     @settings(max_examples=200, deadline=None)
     @given(st.lists(st.tuples(st.sampled_from(["alloc", "release", "retain"]),
                               st.integers(1, 5)), max_size=60))

@@ -1,0 +1,149 @@
+"""Paged (block-table) flash-decode kernel vs pure-jnp oracle.
+
+The oracle gathers pages through the table and runs the dense decode oracle,
+so these tests simultaneously pin (a) kernel == oracle and (b) paged oracle
+== dense oracle on the equivalent dense cache.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.paged_decode_attn import paged_decode_attention
+
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
+RNG = np.random.default_rng(7)
+
+
+def mk(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+def mk_tables(B, N, P):
+    """Random permutation-style tables: distinct physical pages per request."""
+    t = np.stack([RNG.choice(P, size=N, replace=False) for _ in range(B)])
+    return jnp.asarray(t.astype(np.int32))
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,N,D", [
+    (1, 4, 4, 16, 8, 64),      # MHA
+    (3, 8, 2, 16, 5, 64),      # GQA
+    (2, 8, 1, 32, 4, 128),     # MQA, bigger pages
+    (2, 4, 4, 8, 7, 32),       # small pages
+])
+def test_paged_decode_matches_oracle(B, Hq, Hkv, T, N, D):
+    P = 2 * N * B + 1
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    lengths = jnp.asarray(RNG.integers(1, N * T + 1, size=B), jnp.int32)
+    q = mk(B, Hq, D)
+    out = paged_decode_attention(q, k_pages, v_pages, tables, lengths,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                          lengths)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_matches_dense_ref_through_table():
+    """Gathered pages == contiguous dense cache, bit-for-bit through the ref,
+    close through the kernel."""
+    B, Hq, Hkv, T, N, D = 2, 4, 2, 16, 6, 64
+    S = N * T
+    dense_k, dense_v = mk(B, Hkv, S, D), mk(B, Hkv, S, D)
+    P = B * N + 3
+    k_pages = jnp.zeros((Hkv, P, T, D), jnp.float32)
+    v_pages = jnp.zeros((Hkv, P, T, D), jnp.float32)
+    # scatter the dense cache into scrambled physical pages
+    perm = RNG.permutation(B * N)
+    tables = jnp.asarray(perm.reshape(B, N).astype(np.int32)) + 3
+    for b in range(B):
+        for j in range(N):
+            pid = int(tables[b, j])
+            k_pages = k_pages.at[:, pid].set(dense_k[b, :, j * T:(j + 1) * T])
+            v_pages = v_pages.at[:, pid].set(dense_v[b, :, j * T:(j + 1) * T])
+    lengths = jnp.asarray([S - 5, 37], jnp.int32)
+    q = mk(B, Hq, D)
+    want = ref.decode_attention_ref(q, dense_k, dense_v, lengths)
+    got_ref = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                             lengths)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    got_kernel = paged_decode_attention(q, k_pages, v_pages, tables, lengths,
+                                        interpret=True)
+    np.testing.assert_allclose(got_kernel, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_paged_sliding_window(window):
+    B, Hq, Hkv, T, N, D = 2, 4, 2, 16, 4, 32
+    P = B * N + 1
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    lengths = jnp.asarray([N * T, 19], jnp.int32)
+    q = mk(B, Hq, D)
+    out = paged_decode_attention(q, k_pages, v_pages, tables, lengths,
+                                 window=window, interpret=True)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                          lengths, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_dk_neq_dv_and_scale():
+    """MLA-absorbed shape: dk = rank+rope > dv = rank, explicit scale."""
+    B, Hq, Hkv, T, N = 2, 8, 1, 16, 3
+    Dk, Dv = 96, 64
+    P = B * N + 2
+    k_pages, v_pages = mk(Hkv, P, T, Dk), mk(Hkv, P, T, Dv)
+    tables = mk_tables(B, N, P)
+    lengths = jnp.asarray([N * T - 1, 17], jnp.int32)
+    q = mk(B, Hq, Dk)
+    out = paged_decode_attention(q, k_pages, v_pages, tables, lengths,
+                                 scale=Dk ** -0.5, interpret=True)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                          lengths, scale=Dk ** -0.5)
+    assert out.shape == (B, Hq, Dv)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_dtypes(dtype):
+    B, Hq, Hkv, T, N, D = 1, 4, 2, 16, 4, 64
+    P = N + 1
+    k_pages = mk(Hkv, P, T, D).astype(dtype)
+    v_pages = mk(Hkv, P, T, D).astype(dtype)
+    tables = mk_tables(B, N, P)
+    lengths = jnp.asarray([N * T - 7], jnp.int32)
+    q = mk(B, Hq, D).astype(dtype)
+    out = paged_decode_attention(q, k_pages, v_pages, tables, lengths,
+                                 interpret=True)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                          lengths)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), atol=tol(dtype),
+                               rtol=tol(dtype))
+
+
+def test_ops_dispatch_paged():
+    """ops.paged_decode_attention: ref on CPU, kernel when forced."""
+    B, Hq, Hkv, T, N, D = 2, 4, 2, 16, 4, 32
+    P = B * N + 1
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    lengths = jnp.asarray([N * T, 21], jnp.int32)
+    q = mk(B, Hq, D)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, tables,
+                                          lengths)
+    got = ops.paged_decode_attention(q, k_pages, v_pages, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ops.FORCE_KERNEL_ON_CPU = True
+    try:
+        got_k = ops.paged_decode_attention(q, k_pages, v_pages, tables,
+                                           lengths)
+    finally:
+        ops.FORCE_KERNEL_ON_CPU = False
+    np.testing.assert_allclose(got_k, want, atol=2e-5, rtol=2e-5)

@@ -1,0 +1,217 @@
+"""Paged device KV end-to-end tests (PR 7 tentpole).
+
+The load-bearing property: with greedy decoding, the paged engine — pool
+pages + block tables from prefix hit through decode — emits EXACTLY the
+token sequences the dense per-slot layout produces, across full-attn, MLA,
+SWA, and hybrid-linear archs.  On top of identity:
+
+  * a prefix-hit request resumes from pinned pool pages and prefills ONLY
+    the uncached suffix, reproducing the full-prefill tokens while
+    ``PrefillEngine.tokens_prefilled`` counts only the suffix;
+  * the pool conserves pages: after the scheduler drains,
+    ``allocated == freed + evicted + resident`` and nothing is ref-held.
+
+Marked ``live`` (full scheduler loops on jitted smoke models).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import AttentionSpec
+from repro.core.blockpool import BlockPool
+from repro.core.prefix_cache import HybridPrefixCache
+from repro.models import Model, paged_layout
+from repro.serving.api import PagePin, Request
+from repro.serving.deployment import CrossDCDeployment, DeploymentConfig
+from repro.serving.engine import (DecodeEngine, PrefillEngine,
+                                  RegionScheduler)
+
+pytestmark = pytest.mark.live
+
+SLOTS, CAPACITY, BLOCK = 4, 384, 8
+MAX_BUCKET = 64
+PAGE = 16
+
+# one arch per decode-cache family: full-attn, MLA + linear, SWA, hybrid
+ARCHS = ["mistral-nemo-12b", "kimi-linear-1t", "h2o-danube-1.8b",
+         "zamba2-1.2b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch(request):
+    cfg = get_smoke_config(request.param)
+    model = Model(cfg, use_kernels=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_requests(cfg, lens, budgets, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        (L,)).astype(np.int32),
+                    max_new_tokens=b)
+            for i, (L, b) in enumerate(zip(lens, budgets))]
+
+
+def _cache_flags(cfg):
+    """(has_full_attn, has_linear) for the device prefix cache: seq pages
+    exist iff some full/MLA layer does; exact-length snapshots are needed
+    iff the arch carries SWA rings or recurrent state."""
+    lay = paged_layout(cfg, CAPACITY, PAGE, 1)
+    has_state = any(not isinstance(b.mixer, AttentionSpec)
+                    for g in cfg.groups for b in g.blocks)
+    return lay.seq_cols > 0, (lay.ring_cols > 0 or has_state)
+
+
+def _run(model, params, reqs, *, paged, pool=None, cache=None):
+    peng = PrefillEngine(model, params, min_bucket=32, max_bucket=MAX_BUCKET)
+    dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                       paged=paged, pool=pool, page_tokens=PAGE)
+    if cache is not None:
+        dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+            [int(t) for t in req.tokens], ids, snap)
+    sched = RegionScheduler(peng, dec, max_prefill_batch=3)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert not sched.has_work
+    return ({rid: r.output_tokens for rid, r in dec.outputs.items()},
+            peng, dec)
+
+
+class TestTokenIdentity:
+    def test_paged_matches_dense(self, arch):
+        """Greedy token streams through the scheduler are identical between
+        the dense and paged layouts (mixed lengths, slot churn, a chunked
+        prompt past max_bucket)."""
+        cfg, model, params = arch
+        lens = [24, 40, 70, 16, 33, 64]
+        budgets = [12, 20, 9, 16, 11, 7]
+        dense, _, _ = _run(model, params,
+                           _mk_requests(cfg, lens, budgets), paged=False)
+        paged, _, dec = _run(model, params,
+                             _mk_requests(cfg, lens, budgets), paged=True)
+        assert paged == dense
+        dec.pool.check_invariants()
+
+    def test_pool_conserves_pages(self, arch):
+        """After the paged run drains: nothing ref-held, and
+        allocated == freed + evicted + resident."""
+        cfg, model, params = arch
+        pool = BlockPool(SLOTS * CAPACITY // PAGE, PAGE)
+        _run(model, params, _mk_requests(cfg, [24, 40, 33], [10, 8, 12]),
+             paged=True, pool=pool)
+        s = pool.stats
+        assert s["allocated"] > 0
+        assert s["allocated"] == s["freed"] + s["evicted"] + pool.resident
+        # no registration in this run -> every page came back
+        assert pool.resident == 0
+        pool.check_invariants()
+
+
+class TestPrefixHitSuffixOnly:
+    def test_suffix_prefill_reproduces_full_prefill(self, arch):
+        """Request B shares a page-aligned 64-token prefix with a retired
+        request A.  B resumes from A's registered pool pages: only the
+        suffix is prefilled, and B's tokens equal a fresh dense run's."""
+        cfg, model, params = arch
+        has_full, has_linear = _cache_flags(cfg)
+        pool = BlockPool(SLOTS * CAPACITY // PAGE, PAGE, 1)
+        cache = HybridPrefixCache(pool, 0, 1, has_full_attn=has_full,
+                                  has_linear=has_linear)
+
+        rng = np.random.default_rng(3)
+        prefix = rng.integers(0, cfg.vocab_size, (64,)).astype(np.int32)
+        suffix = rng.integers(0, cfg.vocab_size, (41,)).astype(np.int32)
+        req_a = Request(rid=0, tokens=prefix, max_new_tokens=6)
+
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           paged=True, pool=pool, page_tokens=PAGE)
+        dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+            [int(t) for t in req.tokens], ids, snap)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=3)
+        sched.submit(req_a)
+        sched.run()
+
+        tokens_b = np.concatenate([prefix, suffix])
+        c, ids, snap = cache.match_resume([int(t) for t in tokens_b])
+        assert c == 64, "page-aligned prefix must be device-resumable"
+        pool.retain(ids)
+        req_b = Request(rid=1, tokens=tokens_b, max_new_tokens=12,
+                        device_pin=PagePin(c, ids, snap))
+        before = peng.tokens_prefilled
+        sched.submit(req_b)
+        sched.run()
+        suffix_cost = peng.tokens_prefilled - before
+        assert suffix_cost == len(tokens_b) - c, \
+            "prefix hit must prefill only the uncached suffix"
+
+        dense_out, _, _ = _run(model, params,
+                               [Request(rid=1, tokens=tokens_b.copy(),
+                                        max_new_tokens=12)], paged=False)
+        assert dec.outputs[1].output_tokens == dense_out[1]
+
+        # pins came back when B retired; registered prefix pages stay
+        # LRU-resident, everything else freed
+        pool.check_invariants()
+        s = pool.stats
+        assert s["allocated"] == s["freed"] + s["evicted"] + pool.resident
+
+
+class TestPagedDeployment:
+    """``DeploymentConfig(paged_kv=True)`` end-to-end: the region pool is
+    shared by the decode engine and the prefix cache, ``_route`` pins
+    device-resident prefixes, and metrics expose pool/kv-manager state."""
+
+    @pytest.fixture(scope="class")
+    def dep_model(self):
+        cfg = get_smoke_config("mistral-nemo-12b")
+        model = Model(cfg, use_kernels=False)
+        return cfg, model, model.init(jax.random.PRNGKey(0))
+
+    def _dcfg(self, **kw):
+        return DeploymentConfig(threshold=4096, decode_slots=SLOTS,
+                                capacity=CAPACITY, decode_block_size=BLOCK,
+                                min_prefill_bucket=32, max_prefill_bucket=64,
+                                block_tokens=PAGE, pool_blocks=96, **kw)
+
+    def test_paged_deployment_matches_dense_and_resumes(self, dep_model):
+        cfg, model, params = dep_model
+        rng = np.random.default_rng(11)
+        prefix = rng.integers(0, cfg.vocab_size, (64,)).astype(np.int32)
+        suffix = rng.integers(0, cfg.vocab_size, (30,)).astype(np.int32)
+        tok_b = np.concatenate([prefix, suffix])
+
+        dep_d = CrossDCDeployment(model, params, self._dcfg())
+        out_d = dep_d.submit_batch([Request(rid=1, tokens=tok_b.copy(),
+                                            max_new_tokens=6)])
+
+        dep_p = CrossDCDeployment(model, params, self._dcfg(paged_kv=True))
+        dep_p.submit_batch([Request(rid=0, tokens=prefix.copy(),
+                                    max_new_tokens=4)])
+        before = dep_p.pd_prefill.tokens_prefilled
+        rb = Request(rid=1, tokens=tok_b.copy(), max_new_tokens=6)
+        out_p = dep_p.submit_batch([rb])
+
+        # _route pinned the registered prefix; only the suffix ran
+        assert rb.device_pin is not None and rb.device_pin.cached_len == 64
+        assert dep_p.pd_prefill.tokens_prefilled - before == len(tok_b) - 64
+        assert out_p[1].output_tokens == out_d[1].output_tokens
+
+        m = dep_p.metrics()
+        region = m["clusters"][dep_p.pd_names[0]]
+        assert region["cache_hit_rate"] > 0
+        assert region["resident_kv_bytes"] > 0
+        assert region["page_fail_retires"] == 0
+        pool_stats = region["pool"]
+        assert pool_stats["allocated"] == (pool_stats["freed"]
+                                           + pool_stats["evicted"]
+                                           + pool_stats["resident"])
+        assert m["paged_kv"] is True
+        assert set(m["kv_manager"]) == {"rebalanced", "cross_transfers",
+                                        "clusters"}
+        dep_p.decoders[dep_p.pd_names[0]].pool.check_invariants()
