@@ -341,11 +341,48 @@ def bench_paged_admission(model, params, entries):
         f"{recompiles} paged-admission recompiles after warmup_admission")
     s = dec.pool.stats
     assert s["allocated"] == s["freed"] + s["evicted"] + dec.pool.resident
+
+    # int8 wire admission (PR 8): the quantized pytree admits directly,
+    # dequantization fused into the page scatter — same recompile-free
+    # contract after warmup_admission warms the wire program variant
+    from repro.models.kvcache import quantize_cache_for_wire
+    wdec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                        paged=True, page_tokens=PAGE)
+    wdec.wire_admission = True
+    wdec.warmup_admission([SLOTS], [PROMPT_LEN])
+    warm_w = wdec.admit_compiles
+    wire_entries = [(r, f, quantize_cache_for_wire(c)[0], L)
+                    for (r, f, c, L) in entries]
+
+    def timed_wire(reps=5):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            wdec.admit_many(wire_entries)
+            jax.block_until_ready(jax.tree.leaves(wdec.caches)[0])
+            best = min(best, time.perf_counter() - t0)
+            for slot in range(SLOTS):
+                if wdec.active[slot]:
+                    wdec._retire(slot)
+            wdec.outputs.clear()
+        return best
+
+    wire_s = timed_wire()
+    wire_recompiles = wdec.admit_compiles - warm_w
+    emit("engine/admit_wire_paged", wire_s * 1e6,
+         f"K={len(entries)} int8 dequant-in-scatter, "
+         f"{wire_recompiles} recompiles")
+    assert wire_recompiles == 0, (
+        f"{wire_recompiles} wire-admission recompiles after "
+        "warmup_admission")
     return {"K": len(entries), "dense_us": round(dense_s * 1e6, 1),
             "paged_us": round(paged_s * 1e6, 1),
             "speedup_vs_dense": round(speedup, 2),
             "admit_warmup_compiles": warm,
-            "admit_recompiles_after_warmup": recompiles}
+            "admit_recompiles_after_warmup": recompiles,
+            "wire_admit_us": round(wire_s * 1e6, 1),
+            "wire_admit_warmup_compiles": warm_w,
+            "wire_admit_recompiles_after_warmup": wire_recompiles}
 
 
 def bench_paged_prefix(model, params, cfg, smoke):

@@ -90,6 +90,59 @@ def prefill_sweep(peak_flops: float, smoke: bool = False):
     return points, peak_used
 
 
+def interpret_kernel_points():
+    """Interpret-mode sweep points for the fused serving-path kernels
+    (PR 8): fused-masking GLA/delta chunked state, quantize-on-write, and
+    block-table paged prefill.  Small shapes — these pin the
+    correctness-path cost into BENCH_kernel.json (the TPU kernels
+    themselves are timed on device), so a kernel that silently falls off
+    its fused path shows up as bench drift."""
+    from repro.kernels.delta import delta_chunked_fused
+    from repro.kernels.gla import gla_chunked_fused
+    from repro.kernels.paged_prefill_attn import paged_prefill_attention
+    from repro.kernels.quantize import quantize_int8_fused
+    out = {}
+
+    B, H, S, D = 2, 2, 256, 64
+    q, k, v = mk(B, H, S, D), mk(B, H, S, D), mk(B, H, S, D)
+    la = -0.1 * jnp.abs(mk(B, H, S))
+    lens = jnp.asarray([S, 173], jnp.int32)
+    f = jax.jit(lambda *a: gla_chunked_fused(*a, chunk=64,
+                                             interpret=True)[0])
+    us = time_fn(f, q, k, v, la, lens, iters=3, warmup=1)
+    emit("kernel/pallas_gla_fused_interpret_256", us, "fused in-VMEM mask")
+    out["gla_fused_us"] = round(us, 2)
+
+    beta = jnp.asarray(RNG.uniform(0.1, 1, (B, H, S)).astype(np.float32))
+    kn = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    f = jax.jit(lambda *a: delta_chunked_fused(*a, chunk=64,
+                                               interpret=True)[0])
+    us = time_fn(f, q, kn, v, la, beta, lens, iters=3, warmup=1)
+    emit("kernel/pallas_delta_fused_interpret_256", us, "fused in-VMEM mask")
+    out["delta_fused_us"] = round(us, 2)
+
+    x = mk(2, 4, 256, 64)
+    f = jax.jit(lambda x: quantize_int8_fused(x, interpret=True)[0])
+    us = time_fn(f, x, iters=3, warmup=1)
+    emit("kernel/pallas_quantize_interpret_128k", us,
+         "absmax+encode one pass")
+    out["quantize_fused_us"] = round(us, 2)
+
+    Hq, Hkv, T, N, C, Ssuf = 4, 2, 16, 4, 32, 32
+    P = N + 2
+    kp, vp = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tbl = jnp.asarray(
+        np.stack([RNG.choice(P, size=N, replace=False)]).astype(np.int32))
+    ks2, vs2 = mk(1, Hkv, Ssuf, D), mk(1, Hkv, Ssuf, D)
+    qc = mk(1, Hq, C, D)
+    f = jax.jit(lambda *a: paged_prefill_attention(*a, interpret=True))
+    us = time_fn(f, qc, kp, vp, tbl, ks2, vs2, iters=3, warmup=1)
+    emit("kernel/pallas_paged_prefill_interpret_96", us,
+         "table-direct prior + causal suffix")
+    out["paged_prefill_us"] = round(us, 2)
+    return out
+
+
 def main(smoke: bool = False, out_path: str = "BENCH_kernel.json"):
     B, H, S, D = 1, 8, 2048, 128
     q, k, v = mk(B, H, S, D), mk(B, H, S, D), mk(B, H, S, D)
@@ -133,6 +186,7 @@ def main(smoke: bool = False, out_path: str = "BENCH_kernel.json"):
                                                 interpret=True))
     us = time_fn(f, qs, ks, vs, iters=3, warmup=1)
     emit("kernel/pallas_flash_interpret_256", us, "correctness-path")
+    interpret_points = interpret_kernel_points()
 
     # measured-kernel calibration: machine peaks + MFU(l) sweep + fit
     peak_flops, mem_bw = measure_machine(smoke)
@@ -148,6 +202,7 @@ def main(smoke: bool = False, out_path: str = "BENCH_kernel.json"):
         "sweep": {"heads": SWEEP_HEADS, "head_dim": SWEEP_DIM,
                   "d_model": SWEEP_DMODEL, "smoke": smoke},
         "points": points,
+        "interpret_points": interpret_points,
         "calibration": calibration_to_json(calib),
     })
     return True

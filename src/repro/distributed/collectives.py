@@ -13,9 +13,12 @@ import jax.numpy as jnp
 
 
 def quantize_int8(x):
-    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    """Symmetric per-tensor int8 quantization. Returns (q, scale).
+
+    Reciprocal multiply (not /127) keeps the scale bit-identical between
+    eager and jitted execution — jit rewrites constant divisions anyway."""
     absmax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    scale = jnp.maximum(absmax, 1e-30) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

@@ -39,23 +39,10 @@ def _neumann_unit_lower_inverse(n, chunk):
     return r
 
 
-def _delta_kernel(q_ref, k_ref, v_ref, la_ref, b_ref, s0_ref, o_ref, sT_ref,
-                  state, *, chunk, num_chunks):
-    c = pl.program_id(1)
-
-    @pl.when(c == 0)
-    def _init():
-        state[...] = s0_ref[0].astype(jnp.float32)
-
-    q = q_ref[0].astype(jnp.float32)                    # (C, dk)
-    k = k_ref[0].astype(jnp.float32)
-    v = v_ref[0].astype(jnp.float32)                    # (C, dv)
-    la = la_ref[0].astype(jnp.float32)                  # (C,)
-    beta = b_ref[0].astype(jnp.float32)[:, None]        # (C, 1)
-
+def _delta_chunk_step(q, k, v, la, beta, S, chunk):
+    """One WY-representation chunk of the recurrence: (o, new state), fp32."""
     csum = jnp.cumsum(la)
     gamma = jnp.exp(csum)[:, None]                      # (C,1) <= 1
-    S = state[...]
 
     row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
@@ -77,9 +64,56 @@ def _delta_kernel(q_ref, k_ref, v_ref, la_ref, b_ref, s0_ref, o_ref, sT_ref,
 
     g_c = jnp.exp(csum[-1])
     kscale = jnp.exp(csum[-1] - csum)[:, None]
-    state[...] = g_c * S + jax.lax.dot_general(
+    S = g_c * S + jax.lax.dot_general(
         k * kscale, u, (((0,), (0,)), ((), ())))
+    return o, S
 
+
+def _delta_kernel(q_ref, k_ref, v_ref, la_ref, b_ref, s0_ref, o_ref, sT_ref,
+                  state, *, chunk, num_chunks):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)                    # (C, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                    # (C, dv)
+    la = la_ref[0].astype(jnp.float32)                  # (C,)
+    beta = b_ref[0].astype(jnp.float32)[:, None]        # (C, 1)
+
+    o, S = _delta_chunk_step(q, k, v, la, beta, state[...], chunk)
+    state[...] = S
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(c == num_chunks - 1)
+    def _finish():
+        sT_ref[0] = state[...]
+
+
+def _delta_fused_kernel(q_ref, k_ref, v_ref, la_ref, b_ref, len_ref, s0_ref,
+                        o_ref, sT_ref, state, *, chunk, num_chunks):
+    """Fused-masking variant: rows past the row's valid length are
+    neutralized in-VMEM (beta -> 0: no write, log_a -> 0: no decay, k -> 0)
+    so the caller skips the full-tensor masking passes."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    valid = pos < len_ref[0, 0]                         # (C, 1)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = jnp.where(valid, k_ref[0].astype(jnp.float32), 0.0)
+    v = v_ref[0].astype(jnp.float32)
+    la = jnp.where(valid[:, 0], la_ref[0].astype(jnp.float32), 0.0)
+    beta = jnp.where(valid, b_ref[0].astype(jnp.float32)[:, None], 0.0)
+
+    o, S = _delta_chunk_step(q, k, v, la, beta, state[...], chunk)
+    state[...] = S
     o_ref[0] = o.astype(o_ref.dtype)
 
     @pl.when(c == num_chunks - 1)
@@ -140,5 +174,69 @@ def delta_chunked(q, k, v, log_a, beta, initial_state=None, *,
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
     )(qr, kr, vr, lar, br, s0)
+    o = o.reshape(B, H, Sp, dv)[:, :, :S]
+    return o, sT.reshape(B, H, dk, dv)
+
+
+def delta_chunked_fused(q, k, v, log_a, beta, lengths, initial_state=None, *,
+                        chunk: int = 64, interpret: bool = False):
+    """``delta_chunked`` with per-row valid ``lengths: (B,)`` applied inside
+    the kernel instead of by full-tensor ``jnp.where`` passes (the serving
+    prefill path's padded-bucket masking).
+
+    Returns (o: (B,H,S,dv), final_state: (B,H,dk,dv) float32). Output rows
+    at positions >= lengths[b] are unspecified (the engine discards them).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        # padded rows land at pos >= S >= lengths -> masked by the kernel
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+        beta = jnp.pad(beta, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    qr = q.reshape(B * H, Sp, dk)
+    kr = k.reshape(B * H, Sp, dk)
+    vr = v.reshape(B * H, Sp, dv)
+    lar = log_a.reshape(B * H, Sp)
+    br = beta.reshape(B * H, Sp)
+    lens = jnp.broadcast_to(lengths.astype(jnp.int32)[:, None],
+                            (B, H)).reshape(B * H, 1)
+    s0 = initial_state.reshape(B * H, dk, dv)
+
+    kernel = functools.partial(_delta_fused_kernel, chunk=chunk,
+                               num_chunks=nc)
+    o, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, 1), lambda h, c: (h, 0)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, dv), q.dtype),
+            jax.ShapeDtypeStruct((B * H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, lar, br, lens, s0)
     o = o.reshape(B, H, Sp, dv)[:, :, :S]
     return o, sT.reshape(B, H, dk, dv)

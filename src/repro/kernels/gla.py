@@ -22,22 +22,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gla_kernel(q_ref, k_ref, v_ref, la_ref, s0_ref, o_ref, sT_ref, state,
-                *, chunk, num_chunks):
-    c = pl.program_id(1)
-
-    @pl.when(c == 0)
-    def _init():
-        state[...] = s0_ref[0].astype(jnp.float32)
-
-    q = q_ref[0].astype(jnp.float32)                    # (C, dk)
-    k = k_ref[0].astype(jnp.float32)                    # (C, dk)
-    v = v_ref[0].astype(jnp.float32)                    # (C, dv)
-    la = la_ref[0].astype(jnp.float32)                  # (C,)
-
+def _gla_chunk_step(q, k, v, la, S, chunk):
+    """One chunk of the recurrence: returns (o, new state), all fp32."""
     csum = jnp.cumsum(la)                               # inclusive
     gamma = jnp.exp(csum)[:, None]                      # (C, 1), <= 1
-    S = state[...]
 
     # intra-chunk: A[t,s] = (q_t . k_s) * exp(csum_t - csum_s), s <= t
     diff = csum[:, None] - csum[None, :]                # <= 0 on lower tri
@@ -51,9 +39,54 @@ def _gla_kernel(q_ref, k_ref, v_ref, la_ref, s0_ref, o_ref, sT_ref, state,
     # state update: S <- gamma_C * S + sum_s (gamma_C / gamma_s) k_s v_s^T
     g_c = jnp.exp(csum[-1])
     kscale = jnp.exp(csum[-1] - csum)[:, None]          # <= 1
-    state[...] = g_c * S + jax.lax.dot_general(
+    S = g_c * S + jax.lax.dot_general(
         k * kscale, v, (((0,), (0,)), ((), ())))
+    return o, S
 
+
+def _gla_kernel(q_ref, k_ref, v_ref, la_ref, s0_ref, o_ref, sT_ref, state,
+                *, chunk, num_chunks):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)                    # (C, dk)
+    k = k_ref[0].astype(jnp.float32)                    # (C, dk)
+    v = v_ref[0].astype(jnp.float32)                    # (C, dv)
+    la = la_ref[0].astype(jnp.float32)                  # (C,)
+
+    o, S = _gla_chunk_step(q, k, v, la, state[...], chunk)
+    state[...] = S
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(c == num_chunks - 1)
+    def _finish():
+        sT_ref[0] = state[...]
+
+
+def _gla_fused_kernel(q_ref, k_ref, v_ref, la_ref, len_ref, s0_ref, o_ref,
+                      sT_ref, state, *, chunk, num_chunks):
+    """Fused-masking variant: rows at positions >= the row's valid length
+    are neutralized in-VMEM (k -> 0: no state write; log_a -> 0: no decay)
+    so the caller skips the full-tensor masking passes over k/log_a."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    valid = pos < len_ref[0, 0]                         # (C, 1)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = jnp.where(valid, k_ref[0].astype(jnp.float32), 0.0)
+    v = v_ref[0].astype(jnp.float32)
+    la = jnp.where(valid[:, 0], la_ref[0].astype(jnp.float32), 0.0)
+
+    o, S = _gla_chunk_step(q, k, v, la, state[...], chunk)
+    state[...] = S
     o_ref[0] = o.astype(o_ref.dtype)
 
     @pl.when(c == num_chunks - 1)
@@ -111,5 +144,65 @@ def gla_chunked(q, k, v, log_a, initial_state=None, *, chunk: int = 64,
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
     )(qr, kr, vr, lar, s0)
+    o = o.reshape(B, H, Sp, dv)[:, :, :S]
+    return o, sT.reshape(B, H, dk, dv)
+
+
+def gla_chunked_fused(q, k, v, log_a, lengths, initial_state=None, *,
+                      chunk: int = 64, interpret: bool = False):
+    """``gla_chunked`` with per-row valid ``lengths: (B,)`` applied inside
+    the kernel instead of by full-tensor ``jnp.where`` passes on the host
+    program (the serving prefill path's padded-bucket masking).
+
+    Returns (o: (B,H,S,dv), final_state: (B,H,dk,dv) float32). Output rows
+    at positions >= lengths[b] are unspecified (the engine discards them).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        # padded rows land at pos >= S >= lengths -> masked by the kernel
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    qr = q.reshape(B * H, Sp, dk)
+    kr = k.reshape(B * H, Sp, dk)
+    vr = v.reshape(B * H, Sp, dv)
+    lar = log_a.reshape(B * H, Sp)
+    lens = jnp.broadcast_to(lengths.astype(jnp.int32)[:, None],
+                            (B, H)).reshape(B * H, 1)
+    s0 = initial_state.reshape(B * H, dk, dv)
+
+    kernel = functools.partial(_gla_fused_kernel, chunk=chunk, num_chunks=nc)
+    o, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, 1), lambda h, c: (h, 0)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, dv), q.dtype),
+            jax.ShapeDtypeStruct((B * H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr, lar, lens, s0)
     o = o.reshape(B, H, Sp, dv)[:, :, :S]
     return o, sT.reshape(B, H, dk, dv)

@@ -20,9 +20,11 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attn as _decode
 from repro.kernels import paged_decode_attn as _paged_decode
+from repro.kernels import paged_prefill_attn as _paged_prefill
 from repro.kernels import delta as _delta
 from repro.kernels import flash_attn as _flash
 from repro.kernels import gla as _gla
+from repro.kernels import quantize as _quant
 from repro.kernels import ref
 
 FORCE_REF = False
@@ -148,15 +150,62 @@ def _gla_vjp(chunk, interpret):
     return op
 
 
-def gla(q, k, v, log_a, initial_state=None, *, chunk=64, use_kernel=True):
-    """Gated linear attention. Returns (o, final_state)."""
-    B, H, _, dk = q.shape
+def _mask_padded(lengths, S, log_a, k, beta=None):
+    """Padded-row neutralization for right-padded bucket batches: decay -> 1
+    (log_a = 0), key/beta -> 0 past each row's valid length — EXACTLY the
+    masking the fused kernels apply in-VMEM, so both dispatch targets of a
+    ``lengths=`` call compute the same state."""
+    mask = jnp.arange(S)[None, :] < lengths[:, None]         # (B, S)
+    log_a = jnp.where(mask[:, None, :], log_a, 0.0)
+    k = jnp.where(mask[:, None, :, None], k, jnp.zeros((), k.dtype))
+    if beta is None:
+        return log_a, k
+    return log_a, k, jnp.where(mask[:, None, :], beta, 0.0)
+
+
+def gla(q, k, v, log_a, initial_state=None, *, lengths=None, chunk=64,
+        use_kernel=True):
+    """Gated linear attention. Returns (o, final_state).
+
+    ``lengths`` (B,): valid token counts for right-padded batches.  The
+    kernel path fuses the padded-row masking (decay -> 1, k -> 0) into the
+    chunked-state kernel; the jnp path applies the identical ``jnp.where``
+    masking before the chunked scan."""
+    B, H, S, dk = q.shape
     dv = v.shape[-1]
     if initial_state is None:
         initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
-    if not _use_kernel(use_kernel) or _on_cpu_lowering(q.shape[2]):
+    if lengths is None:
+        if not _use_kernel(use_kernel) or _on_cpu_lowering(S):
+            return chk.gla_chunked_jnp(q, k, v, log_a, initial_state,
+                                       chunk=chunk)
+        return _gla_vjp(chunk, _on_cpu())(q, k, v, log_a, initial_state)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(S):
+        log_a, k = _mask_padded(lengths, S, log_a, k)
         return chk.gla_chunked_jnp(q, k, v, log_a, initial_state, chunk=chunk)
-    return _gla_vjp(chunk, _on_cpu())(q, k, v, log_a, initial_state)
+    interpret = _on_cpu()
+
+    @jax.custom_vjp
+    def op(q, k, v, log_a, s0):
+        return _gla.gla_chunked_fused(q, k, v, log_a, lengths, s0,
+                                      chunk=chunk, interpret=interpret)
+
+    def fwd(q, k, v, log_a, s0):
+        return op(q, k, v, log_a, s0), (q, k, v, log_a, s0)
+
+    def bwd(res, g):
+        q, k, v, log_a, s0 = res
+
+        def oracle(q, k, v, log_a, s0):
+            la, km = _mask_padded(lengths, S, log_a, k)
+            return chk.gla_chunked_jnp(q, km, v, la, s0, chunk=chunk)
+
+        _, vjp = jax.vjp(oracle, q, k, v, log_a, s0)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op(q, k, v, log_a, initial_state)
 
 
 # ---------------------------------------------------------------------------
@@ -184,17 +233,49 @@ def _delta_vjp(chunk, interpret):
     return op
 
 
-def delta(q, k, v, log_a, beta, initial_state=None, *, chunk=64,
-          use_kernel=True):
-    """Gated delta rule. Returns (o, final_state)."""
-    B, H, _, dk = q.shape
+def delta(q, k, v, log_a, beta, initial_state=None, *, lengths=None,
+          chunk=64, use_kernel=True):
+    """Gated delta rule. Returns (o, final_state).
+
+    ``lengths`` as in :func:`gla`: the kernel path fuses the padded-row
+    masking (decay -> 1, k/beta -> 0) into the chunked-state kernel."""
+    B, H, S, dk = q.shape
     dv = v.shape[-1]
     if initial_state is None:
         initial_state = jnp.zeros((B, H, dk, dv), jnp.float32)
-    if not _use_kernel(use_kernel) or _on_cpu_lowering(q.shape[2]):
+    if lengths is None:
+        if not _use_kernel(use_kernel) or _on_cpu_lowering(S):
+            return chk.delta_chunked_jnp(q, k, v, log_a, beta, initial_state,
+                                         chunk=chunk)
+        return _delta_vjp(chunk, _on_cpu())(q, k, v, log_a, beta,
+                                            initial_state)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(S):
+        log_a, k, beta = _mask_padded(lengths, S, log_a, k, beta)
         return chk.delta_chunked_jnp(q, k, v, log_a, beta, initial_state,
                                      chunk=chunk)
-    return _delta_vjp(chunk, _on_cpu())(q, k, v, log_a, beta, initial_state)
+    interpret = _on_cpu()
+
+    @jax.custom_vjp
+    def op(q, k, v, log_a, beta, s0):
+        return _delta.delta_chunked_fused(q, k, v, log_a, beta, lengths, s0,
+                                          chunk=chunk, interpret=interpret)
+
+    def fwd(q, k, v, log_a, beta, s0):
+        return op(q, k, v, log_a, beta, s0), (q, k, v, log_a, beta, s0)
+
+    def bwd(res, g):
+        q, k, v, log_a, beta, s0 = res
+
+        def oracle(q, k, v, log_a, beta, s0):
+            la, km, b = _mask_padded(lengths, S, log_a, k, beta)
+            return chk.delta_chunked_jnp(q, km, v, la, b, s0, chunk=chunk)
+
+        _, vjp = jax.vjp(oracle, q, k, v, log_a, beta, s0)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op(q, k, v, log_a, beta, initial_state)
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +306,33 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *, window=0,
     return _paged_decode.paged_decode_attention(
         q, k_pages, v_pages, tables, lengths, window=window, scale=scale,
         interpret=_on_cpu())
+
+
+def paged_prefill_attention(q, k_pages, v_pages, tables, k_suf, v_suf, *,
+                            scale=None, use_kernel=True):
+    """Chunked-prefill flash over block-table pages plus dense suffix rows.
+
+    q: (B, Hq, C, D) suffix-chunk queries; pages: (Hkv, P, T, D) shared
+    pool; tables: (B, N) int32 covering prior positions [0, N*T);
+    k_suf/v_suf: (B, Hkv, Ssuf, D) dense suffix keys whose last C rows are
+    the chunk's own (causally masked)."""
+    total = tables.shape[1] * k_pages.shape[2] + k_suf.shape[2]
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(total):
+        return ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                               k_suf, v_suf, scale=scale)
+    return _paged_prefill.paged_prefill_attention(
+        q, k_pages, v_pages, tables, k_suf, v_suf, scale=scale,
+        interpret=_on_cpu())
+
+
+def quantize_wire(x, *, use_kernel=True):
+    """Per-tensor symmetric int8 wire quantization of a float32 leaf.
+
+    Returns (q: int8, scale: float32 scalar), byte-identical between the
+    fused Pallas pass and the jnp ref (same max/round/clip chain)."""
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(x.size):
+        return ref.quantize_int8_ref(x)
+    return _quant.quantize_int8_fused(x, interpret=_on_cpu())
 
 
 # single-step recurrent updates are trivially jnp (no kernel needed)

@@ -186,6 +186,53 @@ def paged_decode_attention_ref(q, k_pages, v_pages, tables, lengths, *,
     return decode_attention_ref(q, kg, vg, lengths, window=window, scale=scale)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, tables, k_suf, v_suf, *,
+                                scale: float | None = None):
+    """Paged-prefill oracle: gather the prior pages through the block table,
+    concatenate the dense suffix, and run the dense flash oracle.
+
+    q: (B, Hq, C, D) — the current suffix chunk's queries; k_pages, v_pages:
+    (Hkv, P, T, D) page pools; tables: (B, N) int32; k_suf, v_suf:
+    (B, Hkv, Ssuf, D) — all suffix keys/values seen so far (the last C rows
+    are the chunk's own, causally masked). Prior pages are fully visible.
+    Returns (B, Hq, C, Dv), bit-identical to ``flash_attention_ref`` over the
+    equivalent dense [prior | suffix] cache.
+    """
+    Hkv = k_pages.shape[0]
+    B, N = tables.shape
+    T, D = k_pages.shape[2], k_pages.shape[3]
+    Dv = v_pages.shape[3]
+    C = q.shape[2]
+    Ssuf = k_suf.shape[2]
+    kg = jnp.transpose(k_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, D)
+    vg = jnp.transpose(v_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, Dv)
+    k_full = jnp.concatenate([kg, k_suf], axis=2)
+    v_full = jnp.concatenate([vg, v_suf], axis=2)
+    # q row 0 sits at global position N*T + (Ssuf - C)
+    return flash_attention_ref(q, k_full, v_full, causal=True,
+                               scale=scale, q_offset=N * T + Ssuf - C)
+
+
+# ---------------------------------------------------------------------------
+# Wire quantization (cross-DC KV transfer): per-tensor symmetric int8
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8_ref(x):
+    """Per-tensor symmetric int8 encode — the unfused oracle for
+    ``kernels.quantize.quantize_int8_fused`` and the exact math of
+    ``distributed.collectives.quantize_int8`` (byte-identity is pinned)."""
+    absmax = jnp.max(jnp.abs(x))
+    # reciprocal multiply, not division: jit rewrites constant divisions to
+    # reciprocal multiplies, so this form is the one that stays bit-stable
+    # between eager oracle calls and the jitted/interpreted kernel
+    scale = jnp.maximum(absmax, 1e-30) * (1.0 / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 # ---------------------------------------------------------------------------
 # Single-step recurrent updates (decode path for linear mixers)
 # ---------------------------------------------------------------------------

@@ -196,7 +196,13 @@ def gqa_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
     """Incremental prefill: x is a chunk at absolute ``positions``; ``cache``
     holds the prior chunks' {"k","v"} (B, S_prior, Hkv, D).  The chunk's
     queries attend over prior + new keys via the ``Sq != Sk`` / ``q_offset``
-    attention path.  Returns (y, merged cache)."""
+    attention path.  Returns (y, merged cache).
+
+    A table-direct prior cache (``build_prior(..., table_direct=True)``)
+    additionally carries ``pk``/``pv`` pool page leaves and the request's
+    block table ``tbl``; the dense ``k``/``v`` entries then hold only the
+    SUFFIX rows and the chunk attends over pages + suffix via the
+    paged-prefill kernel — the cached prefix stays in the pool."""
     H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
     q = _split_heads(_lin(p["wq"], x), H, D)
     k = _split_heads(_lin(p["wk"], x), Hkv, D)
@@ -208,6 +214,16 @@ def gqa_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
     v_seq = v.transpose(0, 2, 1, 3)
     k_full = jnp.concatenate([cache["k"].astype(k_seq.dtype), k_seq], axis=1)
     v_full = jnp.concatenate([cache["v"].astype(v_seq.dtype), v_seq], axis=1)
+    if "pk" in cache:
+        # prior pages are all fully visible (every cached position precedes
+        # every suffix query); the suffix mask is causal — build_prior only
+        # emits table-direct priors for full attention, never SWA
+        o = ops.paged_prefill_attention(
+            q, cache["pk"], cache["pv"], cache["tbl"],
+            k_full.transpose(0, 2, 1, 3), v_full.transpose(0, 2, 1, 3),
+            use_kernel=use_kernels)
+        y = _merge_heads(o) @ p["wo"]["w"]
+        return y, {**cache, "k": k_full, "v": v_full}
     o = ops.attention(q, k_full.transpose(0, 2, 1, 3),
                       v_full.transpose(0, 2, 1, 3), causal=True,
                       window=spec.window if spec.kind == "swa" else 0,

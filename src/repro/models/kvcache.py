@@ -67,19 +67,24 @@ def flatten_cache_for_transfer(caches):
     return out
 
 
-def quantize_cache_for_wire(caches):
+def quantize_cache_for_wire(caches, *, use_kernel: bool = True):
     """int8-quantize K/V/latent leaves for the inter-DC wire (KIVI-style
     per-tensor symmetric). Recurrent fp32 states ship uncompressed (tiny,
     numerically sensitive). The scale is stored in the leaf's original
-    dtype so dequantization restores it. Returns (wire pytree, bytes)."""
+    dtype so dequantization restores it. Returns (wire pytree, bytes).
+
+    Each leaf's encode runs through ``ops.quantize_wire``: the fused Pallas
+    absmax+encode kernel on TPU, the (byte-identical) jnp ref on CPU or with
+    ``use_kernel=False``."""
     import jax.numpy as jnp
-    from repro.distributed.collectives import quantize_int8
+    from repro.kernels import ops
 
     def enc(path, leaf):
         name = jax.tree_util.keystr(path)
         if leaf.dtype in (jnp.bfloat16, jnp.float32) and any(
                 k in name for k in ("'k'", "'v'", "'ckv'", "'kpe'")):
-            q, scale = quantize_int8(leaf.astype(jnp.float32))
+            q, scale = ops.quantize_wire(leaf.astype(jnp.float32),
+                                         use_kernel=use_kernel)
             return {"q": q, "scale": scale.astype(leaf.dtype)}
         return leaf
 

@@ -170,19 +170,17 @@ def linear_forward(p, x, spec: LinearSpec, *, initial_state=None,
 
     q, k, v, new_conv = _qkv(p, x, spec, conv_state, lengths=lengths)
     log_a, beta = _gates_full(p, x, spec)
-    if lengths is not None:
-        mask = jnp.arange(S)[None, :] < lengths[:, None]     # (B,S)
-        # identity state update at padded positions: a=exp(0)=1, k=0, beta=0
-        log_a = jnp.where(mask[:, None, :], log_a, 0.0)
-        if beta is not None:
-            beta = jnp.where(mask[:, None, :], beta, 0.0)
-        k = jnp.where(mask[:, None, :, None], k, jnp.zeros((), k.dtype))
+    # padded-position neutralization (decay -> 1, k/beta -> 0) happens inside
+    # ops.gla/ops.delta: fused in-VMEM on the kernel path, identical
+    # jnp.where masking on the ref path. Safe to mask after the kind
+    # transforms below because each maps 0 -> 0 (_l2norm(0) = 0, gain * 0
+    # = 0), so transform-then-mask == mask-then-transform.
 
     if kind in ("kda", "gdn"):
         k = _l2norm(k)
         q = _l2norm(q)
         o, state = ops.delta(q, k, v, log_a, beta, initial_state,
-                             use_kernel=use_kernels)
+                             lengths=lengths, use_kernel=use_kernels)
     elif kind == "mlstm":
         i_gate = jax.nn.sigmoid((x @ p["i_proj"]["w"]).astype(jnp.float32))
         k = (k.astype(jnp.float32)
@@ -191,7 +189,7 @@ def linear_forward(p, x, spec: LinearSpec, *, initial_state=None,
         ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
         v_aug = jnp.concatenate([v, ones], axis=-1)
         o_aug, state = ops.gla(q, k, v_aug, log_a, initial_state,
-                               use_kernel=use_kernels)
+                               lengths=lengths, use_kernel=use_kernels)
         num, den = o_aug[..., :-1], o_aug[..., -1:]
         o = (num.astype(jnp.float32)
              / jnp.maximum(jnp.abs(den.astype(jnp.float32)), 1.0)
@@ -200,7 +198,7 @@ def linear_forward(p, x, spec: LinearSpec, *, initial_state=None,
         if kind == "mamba2":
             k = k * (spec.key_dim ** -0.5)
         o, state = ops.gla(q, k, v, log_a, initial_state,
-                           use_kernel=use_kernels)
+                           lengths=lengths, use_kernel=use_kernels)
         if kind == "mamba2":
             o = o + p["D_skip"].astype(jnp.float32).reshape(1, -1, 1, 1) \
                 * v.astype(jnp.float32)

@@ -196,12 +196,25 @@ def zero_request_payload(cfg: ModelConfig, L: int):
 # ---------------------------------------------------------------------------
 
 
+def _is_wire(node) -> bool:
+    """A leaf still in int8 wire form ({"q", "scale"}, see
+    ``kvcache.quantize_cache_for_wire``)."""
+    return isinstance(node, dict) and set(node) == {"q", "scale"}
+
+
 def _pageify_seq(leaf, c: int, L: int, T: int):
     """(R, 1, L, ...) request leaf -> page tensor for pages [c/T, ceil(L/T)).
 
     k/v leaves (R, 1, L, Hkv, D) -> (R, Hkv, n, T, D); MLA latents
     (R, 1, L, d) -> (R, n, T, d). The tail page is zero-padded past L,
-    matching the dense zero-initialized buffers."""
+    matching the dense zero-initialized buffers.
+
+    A wire-form leaf ({"q": int8, "scale": scalar}) is pageified in place —
+    the int8 payload is reshaped, the scale rides along — so admission can
+    dequantize inside the page-scatter instead of a separate full-cache
+    pass (int8 zero-padding dequantizes to the same zeros)."""
+    if _is_wire(leaf):
+        return {"q": _pageify_seq(leaf["q"], c, L, T), "scale": leaf["scale"]}
     R = leaf.shape[0]
     n = -(-(L - c) // T)
     span = leaf[:, 0, c:L]
@@ -242,7 +255,21 @@ def build_admit_payload(cfg: ModelConfig, payload, layout: PagedLayout,
     the cache group structure (None-valued groups where a kind is absent).
     The ring + state tensors double as the snapshot payload for
     ``insert_device`` when L is page-aligned.
+
+    Two payload variants are handled transparently:
+
+      * wire-form payloads (int8 ``{"q", "scale"}`` leaves from
+        ``quantize_cache_for_wire``): seq pages stay quantized — the
+        engine's page scatter dequantizes them in place of the old eager
+        full-cache ``dequantize_cache_from_wire`` pass.  Ring/state leaves
+        (tiny, snapshot-bound) are dequantized here.
+      * table-direct suffix payloads (an ``"off"`` marker in a full-attn
+        block, see ``build_prior``): the block's k/v rows cover only
+        [off, L) — the cached prefix never left the pool — so pageification
+        starts at row ``c - off`` instead of ``c``.
     """
+    from repro.models.kvcache import dequantize_cache_from_wire
+
     T, W = layout.page_tokens, layout.ring_tokens
     seq_g, ring_g, state_g = [], [], []
     for gi, g in enumerate(cfg.groups):
@@ -252,12 +279,15 @@ def build_admit_payload(cfg: ModelConfig, payload, layout: PagedLayout,
             pc = payload["groups"][gi][f"b{bi}"]
             key = f"b{bi}"
             if _is_ring(m):
+                pc = dequantize_cache_from_wire(pc)
                 ring_b[key] = {
                     name: _ring_from_payload(pc[name], L, W, T)
                     for name in ("k", "v")}
             elif _is_seq(m):
-                seq_b[key] = {name: _pageify_seq(pc[name], c, L, T)
-                              for name in pc}
+                off = int(pc["off"].reshape(-1)[0]) if "off" in pc else 0
+                seq_b[key] = {name: _pageify_seq(pc[name], c - off,
+                                                 L - off, T)
+                              for name in pc if name != "off"}
             else:
                 state_b[key] = pc
         seq_g.append(seq_b or None)
@@ -272,7 +302,7 @@ def build_admit_payload(cfg: ModelConfig, payload, layout: PagedLayout,
 
 
 def build_prior(cfg: ModelConfig, paged_caches, layout: PagedLayout,
-                seq_ids, snapshot, c: int):
+                seq_ids, snapshot, c: int, *, table_direct: bool = False):
     """Chunk-format prior caches covering [0, c) for a suffix prefill.
 
     Full/MLA rows are gathered from the shared pool pages ``seq_ids``
@@ -281,6 +311,15 @@ def build_prior(cfg: ModelConfig, paged_caches, layout: PagedLayout,
     window); linear state comes from the snapshot leaves. The result plugs
     straight into ``Model.prefill_chunk(..., caches=prior)`` with positions
     offset by c.
+
+    ``table_direct=True`` skips the dense gather for full-attention (GQA)
+    blocks: their prior cache instead carries the pool page leaves and the
+    request's block table (``pk``/``pv``/``tbl``), plus an empty dense
+    suffix accumulator and an ``off`` marker, and suffix chunks attend over
+    the table via the paged-prefill kernel — the cached prefix is never
+    materialized outside the pool.  MLA latents still gather (their prior
+    must be re-decompressed against the chunk projections) and SWA still
+    un-rings from the snapshot.
     """
     T, W = layout.page_tokens, layout.ring_tokens
     ids = jnp.asarray(seq_ids, jnp.int32)
@@ -312,6 +351,16 @@ def build_prior(cfg: ModelConfig, paged_caches, layout: PagedLayout,
                         R, d = pool_leaf.shape[0], pool_leaf.shape[-1]
                         return pool_leaf[:, ids].reshape(R, c, d)[:, None]
                     gc[key] = {name: gather2(v) for name, v in pool.items()}
+                elif table_direct:
+                    R = pool["k"].shape[0]
+                    Hkv, D = pool["k"].shape[1], pool["k"].shape[-1]
+                    gc[key] = {
+                        "k": jnp.zeros((R, 1, 0, Hkv, D), pool["k"].dtype),
+                        "v": jnp.zeros((R, 1, 0, Hkv, D), pool["v"].dtype),
+                        "pk": pool["k"], "pv": pool["v"],
+                        "tbl": jnp.broadcast_to(ids[None, None],
+                                                (R, 1, ids.shape[0])),
+                        "off": jnp.full((R, 1), c, jnp.int32)}
                 else:
                     def gather4(pool_leaf):
                         R, Hkv = pool_leaf.shape[0], pool_leaf.shape[1]

@@ -210,6 +210,18 @@ class CrossDCDeployment:
         self.virtual_now = 0.0
         self._wire_raw = 0.0           # raw bytes of caches put on the wire
         self._wire_quant = 0.0         # their measured quantized bytes
+        self._seed_ratio = 1.0         # dry-run ratio used before any flow
+        if cfg.wire_compression:
+            # seed the measured ratio from a one-page dry-run quantization
+            # so measured_compression() reflects the configured wire format
+            # from construction instead of reporting 1.0 until the first
+            # quantized flow ships.  The seed is kept OUT of the running
+            # accumulators: once real flows exist the ratio is exactly
+            # theirs, not skewed by the probe.
+            from repro.models.paged import zero_request_payload
+            probe = zero_request_payload(model.cfg, cfg.block_tokens)
+            self._seed_ratio = (float(cache_num_bytes(probe))
+                                / float(quantize_cache_for_wire(probe)[1]))
 
     def _new_cache(self) -> HybridPrefixCache:
         return HybridPrefixCache(
@@ -232,6 +244,10 @@ class CrossDCDeployment:
         cache, dec = self.caches[name], self.decoders[name]
         dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
             [int(t) for t in req.tokens], ids, snap)
+        # offloaded prefills arriving as int8 wire pytrees admit AS wire:
+        # dequantization fuses into the page scatter instead of a separate
+        # full-cache pass on the admission path
+        dec.wire_admission = bool(self.cfg.wire_compression)
 
     # ------------------------------------------------- two-cluster aliases
     @property
@@ -340,7 +356,11 @@ class CrossDCDeployment:
                 # prefix hashes to pageless entries that match_resume would
                 # hand back as if they held KV
                 self.kv.record_prefill(cluster, list(map(int, r.tokens)))
-            if self.cfg.wire_compression and cluster == PRFAAS:
+            if (self.cfg.wire_compression and cluster == PRFAAS
+                    and not getattr(self.decoders[r.home],
+                                    "wire_admission", False)):
+                # dense admission needs the dense pytree back; paged homes
+                # with wire admission dequantize inside the page scatter
                 payload = dequantize_cache_from_wire(payload)
             entries.append((r, int(first[i]), payload, len(r.tokens)))
         if any(flows.values()):
@@ -400,11 +420,14 @@ class CrossDCDeployment:
 
     # -------------------------------------------------------------- metrics
     def measured_compression(self) -> float:
-        """Running measured raw/quantized byte ratio of the KV actually put
-        on the wire (1.0 until a quantized flow has shipped)."""
+        """Running measured raw/quantized byte ratio of the KV put on the
+        wire.  With ``wire_compression`` enabled the ratio is seeded at
+        construction from a one-page dry-run quantization, so it reflects
+        the wire format immediately; live flows then dominate the running
+        ratio.  Without compression (nothing ever quantized) it is 1.0."""
         if self._wire_quant > 0:
             return self._wire_raw / self._wire_quant
-        return 1.0
+        return self._seed_ratio
 
     def metrics(self) -> dict:
         done = self.completed

@@ -88,10 +88,25 @@ import numpy as np
 from repro.core.blockpool import PREFIX, BlockPool
 from repro.models import Model, prepare_decode_caches
 from repro.models import paged as paged_mod
-from repro.models.kvcache import cache_num_bytes
+from repro.models.kvcache import cache_num_bytes, quantize_cache_for_wire
 from repro.serving.api import Request, Response
 
 _SEQ_LEAVES = ("k", "v", "ckv", "kpe")
+
+
+def _dequant_pages(pg, dtype):
+    """Admission page tensor -> pool dtype.  Wire-form pages ({"q": int8,
+    "scale": (n_pages,) f32}) dequantize here, INSIDE the page-scatter
+    program — fusing what used to be a separate full-cache
+    ``dequantize_cache_from_wire`` pass before admission.  The op chain
+    (int8 -> f32, multiply by the f32-upcast stored scale, cast to the pool
+    dtype) is exactly the eager path's, so pool bytes are identical."""
+    if isinstance(pg, dict):
+        q, scale = pg["q"], pg["scale"]
+        shape = [1] * q.ndim
+        shape[2 if q.ndim == 5 else 1] = scale.shape[0]
+        return (q.astype(jnp.float32) * scale.reshape(shape)).astype(dtype)
+    return pg.astype(dtype)
 
 
 def next_pow2(n: int, lo: int = 1) -> int:
@@ -316,6 +331,12 @@ class ChunkedPrefill:
         # ``lens`` then count SUFFIX tokens, not the full prompt
         self.caches = caches
         self.off = int(pos_offset)
+        # table-direct suffix prefill: the prior caches carry pool page
+        # leaves + block tables ("pk"/"pv"/"tbl", see paged.build_prior)
+        # instead of a gathered dense prior — a distinct chunk program
+        self.table_direct = caches is not None and any(
+            getattr(p[-1], "key", None) == "pk"
+            for p, _ in jax.tree_util.tree_flatten_with_path(caches)[0])
         self._last = None                    # (Bb, 1, d) last-hidden carry
         self._lens_dev = jnp.asarray(lens)
         self.wall_s = 0.0
@@ -329,7 +350,8 @@ class ChunkedPrefill:
         t0 = time.perf_counter()
         eng, C, i = self.eng, self.C, self.i
         Bb = self.toks.shape[0]
-        eng._shape_keys.add(("chunk", Bb, C, i, self.off))
+        eng._shape_keys.add(("chunk", Bb, C, i, self.off)
+                            + (("paged",) if self.table_direct else ()))
         pos = np.broadcast_to(
             np.arange(self.off + i * C, self.off + (i + 1) * C,
                       dtype=np.int32)[None], (Bb, C))
@@ -365,7 +387,13 @@ class ChunkedPrefill:
         jax.block_until_ready(first)
         self.eng.tokens_prefilled += int(self.lens[:self.n_valid].sum())
         self.wall_s += time.perf_counter() - t0
-        return np.asarray(first)[:self.n_valid], self.caches
+        caches = self.caches
+        if self.table_direct:
+            # the pool pages/tables were only operands for the chunk steps;
+            # the returned payload keeps the dense suffix rows (plus the
+            # "off" marker recording where they start) for trim + admission
+            caches = _strip_prior_pages(caches)
+        return np.asarray(first)[:self.n_valid], caches
 
 
 class DecodeEngine:
@@ -422,6 +450,10 @@ class DecodeEngine:
             self.on_retire = None      # fn(rid)
             self.page_fail_retires = 0
             self._warming = False      # hooks muted during warmup_admission
+            # deployments shipping int8 wire pytrees set this so
+            # warmup_admission also warms the dequantize-in-scatter
+            # program variant (wire payloads have a distinct operand tree)
+            self.wire_admission = False
         else:
             self.pool = pool
             self.caches = jax.jit(
@@ -486,10 +518,12 @@ class DecodeEngine:
                     pg = seq_pages[gi][key]
                     if m.kind == "mla":
                         gc[key] = {n: leaves[n].at[:, ids_seq].set(
-                            pg[n].astype(leaves[n].dtype)) for n in leaves}
+                            _dequant_pages(pg[n], leaves[n].dtype))
+                            for n in leaves}
                     else:
                         gc[key] = {n: leaves[n].at[:, :, ids_seq].set(
-                            pg[n].astype(leaves[n].dtype)) for n in leaves}
+                            _dequant_pages(pg[n], leaves[n].dtype))
+                            for n in leaves}
                 else:
                     def place(buf, *news):
                         for j, new in enumerate(news):
@@ -517,7 +551,14 @@ class DecodeEngine:
 
     def _gather_pages(self, payloads, kind: str, n_pad: int):
         """Merge per-entry admission payloads of one kind ("seq"/"ring")
-        into the single padded operand tree ``_write_pages`` consumes."""
+        into the single padded operand tree ``_write_pages`` consumes.
+
+        Wire-form parts (int8 ``{"q", "scale"}`` page tensors) stay
+        quantized: the per-request scalar scales broadcast into one
+        per-page scale vector and the scatter dequantizes in place.  A
+        batch mixing wire and raw payloads (e.g. an offloaded flow admitted
+        alongside a local prefix-hit suffix) dequantizes its wire parts
+        here instead, keeping one scatter program shape."""
         out = []
         for gi in range(len(self.model.cfg.groups)):
             if payloads[0][kind][gi] is None:
@@ -528,6 +569,30 @@ class DecodeEngine:
                 gd[key] = {}
                 for name in d0:
                     parts = [p[kind][gi][key][name] for p in payloads]
+                    wire = [isinstance(x, dict) for x in parts]
+                    if all(wire):
+                        qs = [x["q"] for x in parts]
+                        axis = 2 if qs[0].ndim == 5 else 1   # k/v vs MLA
+                        scales = jnp.concatenate([
+                            jnp.broadcast_to(
+                                jnp.asarray(x["scale"],
+                                            jnp.float32).reshape((1,)),
+                                (x["q"].shape[axis],)) for x in parts])
+                        ns = scales.shape[0]
+                        if ns < n_pad:
+                            scales = jnp.concatenate(
+                                [scales, jnp.broadcast_to(scales[-1:],
+                                                          (n_pad - ns,))])
+                        gd[key][name] = {
+                            "q": self._cat_pad(qs, n_pad, axis),
+                            "scale": scales}
+                        continue
+                    if any(wire):
+                        parts = [
+                            (x["q"].astype(jnp.float32)
+                             * jnp.asarray(x["scale"], jnp.float32)
+                             ).astype(x["scale"].dtype)
+                            if isinstance(x, dict) else x for x in parts]
                     axis = 2 if parts[0].ndim == 5 else 1    # k/v vs MLA
                     gd[key][name] = self._cat_pad(parts, n_pad, axis)
             out.append(gd)
@@ -658,16 +723,22 @@ class DecodeEngine:
                 for l in sorted({int(x) for x in lengths}):
                     payload = paged_mod.zero_request_payload(self.model.cfg,
                                                              l)
-                    entries = [(Request(rid=-(10_000 + i),
-                                        tokens=np.zeros((l,), np.int32),
-                                        max_new_tokens=1), 0, payload, l)
-                               for i in range(b)]
-                    self.admit_many(entries)
-                    for slot in range(self.num_slots):
-                        rid = self.slot_req[slot]
-                        if rid is not None and rid <= -10_000:
-                            self._retire(slot)
-                            self.outputs.pop(rid, None)
+                    payloads = [payload]
+                    if self.wire_admission:
+                        from repro.models.kvcache import \
+                            quantize_cache_for_wire
+                        payloads.append(quantize_cache_for_wire(payload)[0])
+                    for p in payloads:
+                        entries = [(Request(rid=-(10_000 + i),
+                                            tokens=np.zeros((l,), np.int32),
+                                            max_new_tokens=1), 0, p, l)
+                                   for i in range(b)]
+                        self.admit_many(entries)
+                        for slot in range(self.num_slots):
+                            rid = self.slot_req[slot]
+                            if rid is not None and rid <= -10_000:
+                                self._retire(slot)
+                                self.outputs.pop(rid, None)
         finally:
             self._warming = False
 
@@ -974,7 +1045,7 @@ class RegionScheduler:
             prior = paged_mod.build_prior(
                 dec.model.cfg, dec.caches, dec._layout, pin.seq_ids,
                 None if pin.snapshot is None else pin.snapshot.payload,
-                pin.cached_len)
+                pin.cached_len, table_direct=True)
             lengths = np.array([len(req0.tokens)], np.int32)
             self._inflight = (e0.start_suffix(req0.tokens, prior,
                                               pin.cached_len),
@@ -1057,17 +1128,40 @@ def slice_request_cache(caches, idx: int):
     return jax.tree.map(lambda x: x[:, idx:idx + 1], caches)
 
 
+def _strip_prior_pages(node):
+    """Drop the table-direct prior operands (pool page leaves + block
+    table) from a finished suffix prefill's caches, keeping the dense
+    suffix rows and the ``off`` start marker."""
+    if isinstance(node, dict):
+        return {k: _strip_prior_pages(v) for k, v in node.items()
+                if k not in ("pk", "pv", "tbl")}
+    if isinstance(node, list):
+        return [_strip_prior_pages(v) for v in node]
+    return node
+
+
 def trim_request_cache(caches, idx: int, length: int):
     """Extract request ``idx`` from a batched (bucket-padded) prefill cache
     and trim sequence-major leaves (k/v/ckv/kpe) to ``length`` — the bytes
     that actually need to cross the wire.  O(1) state leaves pass through.
-    (Decoder-only caches; cross-attention caches keep their encoder len.)"""
+    (Decoder-only caches; cross-attention caches keep their encoder len.)
+
+    A block carrying an ``off`` marker (table-direct suffix prefill) holds
+    only rows [off, length) in its seq leaves, so those trim to
+    ``length - off``."""
+    offs = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "off":
+            offs[jax.tree_util.keystr(path[:-1])] = int(
+                np.asarray(leaf).reshape(-1)[0])
 
     def cut(path, leaf):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         leaf = leaf[:, idx:idx + 1]
         if name in _SEQ_LEAVES and "cross" not in jax.tree_util.keystr(path):
-            leaf = leaf[:, :, :min(length, leaf.shape[2])]
+            off = offs.get(jax.tree_util.keystr(path[:-1]), 0)
+            leaf = leaf[:, :, :min(max(length - off, 0), leaf.shape[2])]
         return leaf
 
     return jax.tree_util.tree_map_with_path(cut, caches)

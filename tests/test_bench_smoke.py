@@ -56,3 +56,13 @@ def test_bench_smoke_runs_clean(tmp_path):
     assert paged["prefix"]["tokens_prefilled"] < \
         paged["prefix"]["tokens_submitted"]
     assert paged["prefix"]["resident_kv_bytes"] > 0
+    # int8 wire admission (PR 8): the dequantize-in-scatter program variant
+    # must also be recompile-free after warmup_admission
+    assert paged["admission"]["wire_admit_recompiles_after_warmup"] == 0
+    assert paged["admission"]["wire_admit_us"] > 0
+    # fused serving-path kernels (PR 8) land interpret-mode sweep points
+    ker = json.loads((tmp_path / "BENCH_kernel.json").read_text())
+    pts = ker["interpret_points"]
+    for key in ("gla_fused_us", "delta_fused_us", "quantize_fused_us",
+                "paged_prefill_us"):
+        assert pts.get(key, 0) > 0, f"missing kernel bench point {key}"

@@ -108,3 +108,66 @@ def test_delta_step_matches_scan():
     np.testing.assert_allclose(jnp.stack(outs, 2), o_ref, atol=1e-5,
                                rtol=1e-4)
     np.testing.assert_allclose(state, st_ref, atol=1e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Fused padded-batch variant: masking happens in-VMEM inside the kernel
+# --------------------------------------------------------------------------
+
+
+def test_delta_fused_equals_premasked_plain():
+    """In-VMEM masking (decay -> 1, k/beta -> 0) == jnp.where pre-masking,
+    bit for bit."""
+    from repro.kernels.delta import delta_chunked_fused
+    from repro.kernels.ops import _mask_padded
+    B, H, S, dk, dv, chunk = 2, 2, 128, 32, 32, 32
+    q, k, v, la, beta = inputs(B, H, S, dk, dv)
+    lengths = jnp.asarray([S, 83], jnp.int32)
+    o, st = delta_chunked_fused(q, k, v, la, beta, lengths, chunk=chunk,
+                                interpret=True)
+    la_m, k_m, beta_m = _mask_padded(lengths, S, la, k, beta)
+    o2, st2 = delta_chunked(q, k_m, v, la_m, beta_m, chunk=chunk,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(st2))
+
+
+@pytest.mark.parametrize("gated", [True, False])
+def test_delta_fused_matches_truncated_ref(gated):
+    from repro.kernels.delta import delta_chunked_fused
+    B, H, S, dk, dv, chunk = 2, 2, 128, 32, 32, 32
+    q, k, v, la, beta = inputs(B, H, S, dk, dv, gated)
+    lengths = [128, 71]
+    o, st = delta_chunked_fused(q, k, v, la, beta,
+                                jnp.asarray(lengths, jnp.int32), chunk=chunk,
+                                interpret=True)
+    for b, L in enumerate(lengths):
+        sl = slice(b, b + 1)
+        o2, st2 = ref.delta_ref(q[sl, :, :L], k[sl, :, :L], v[sl, :, :L],
+                                la[sl, :, :L], beta[sl, :, :L])
+        np.testing.assert_allclose(o[sl, :, :L], o2, atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(st[sl], st2, atol=1e-4, rtol=1e-3)
+
+
+def test_ops_delta_lengths_dispatch_and_grad():
+    from repro.kernels import ops
+    B, H, S, dk, dv = 2, 2, 64, 16, 16
+    q, k, v, la, beta = inputs(B, H, S, dk, dv)
+    lengths = jnp.asarray([64, 45], jnp.int32)
+
+    def loss(q, k, v, la, beta):
+        o, st = ops.delta(q, k, v, la, beta, lengths=lengths, chunk=16)
+        return jnp.sum(o ** 2) + jnp.sum(st ** 2)
+
+    want = loss(q, k, v, la, beta)
+    gw = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, la, beta)
+    ops.FORCE_KERNEL_ON_CPU = True
+    try:
+        got = loss(q, k, v, la, beta)
+        gk = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, la, beta)
+    finally:
+        ops.FORCE_KERNEL_ON_CPU = False
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+    for a, b in zip(gk, gw):
+        assert bool(jnp.all(jnp.isfinite(a)))
+        np.testing.assert_allclose(a, b, atol=1e-3, rtol=1e-3)

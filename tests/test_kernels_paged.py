@@ -147,3 +147,96 @@ def test_ops_dispatch_paged():
     finally:
         ops.FORCE_KERNEL_ON_CPU = False
     np.testing.assert_allclose(got_k, want, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Paged-prefill kernel: suffix chunks attend over block tables directly
+# --------------------------------------------------------------------------
+from repro.kernels.paged_prefill_attn import paged_prefill_attention
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,N,C,Ssuf,D", [
+    (1, 4, 4, 16, 4, 16, 16, 64),     # MHA, chunk == suffix
+    (2, 8, 2, 16, 3, 32, 48, 64),     # GQA, prior suffix rows before chunk
+    (1, 8, 1, 32, 2, 16, 64, 128),    # MQA, long accumulated suffix
+    (2, 4, 2, 8, 5, 8, 24, 32),       # small pages
+])
+def test_paged_prefill_matches_oracle(B, Hq, Hkv, T, N, C, Ssuf, D):
+    P = 2 * N * B + 1
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    k_suf, v_suf = mk(B, Hkv, Ssuf, D), mk(B, Hkv, Ssuf, D)
+    q = mk(B, Hq, C, D)
+    out = paged_prefill_attention(q, k_pages, v_pages, tables, k_suf, v_suf,
+                                  interpret=True)
+    want = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                           k_suf, v_suf)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_prefill_ref_equals_dense_flash():
+    """The paged-prefill oracle == dense flash over [gathered pages|suffix]
+    with the chunk's true position offset — the exact operand the dense
+    suffix path used to build, so paged == dense is pinned bit-for-bit."""
+    B, Hq, Hkv, T, N, C, Ssuf, D = 2, 4, 2, 16, 4, 16, 32, 32
+    P = B * N + 2
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    k_suf, v_suf = mk(B, Hkv, Ssuf, D), mk(B, Hkv, Ssuf, D)
+    q = mk(B, Hq, C, D)
+    gk = jnp.transpose(k_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, D)
+    gv = jnp.transpose(v_pages[:, tables], (1, 0, 2, 3, 4)).reshape(
+        B, Hkv, N * T, D)
+    dense = ref.flash_attention_ref(
+        q, jnp.concatenate([gk, k_suf], 2), jnp.concatenate([gv, v_suf], 2),
+        causal=True, q_offset=N * T + Ssuf - C)
+    got = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                          k_suf, v_suf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+    got_k = paged_prefill_attention(q, k_pages, v_pages, tables, k_suf,
+                                    v_suf, interpret=True)
+    np.testing.assert_allclose(got_k, dense, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_dtypes(dtype):
+    B, Hq, Hkv, T, N, C, Ssuf, D = 1, 4, 2, 16, 3, 16, 16, 64
+    P = N + 2
+    k_pages = mk(Hkv, P, T, D).astype(dtype)
+    v_pages = mk(Hkv, P, T, D).astype(dtype)
+    tables = mk_tables(B, N, P)
+    k_suf = mk(B, Hkv, Ssuf, D).astype(dtype)
+    v_suf = mk(B, Hkv, Ssuf, D).astype(dtype)
+    q = mk(B, Hq, C, D).astype(dtype)
+    out = paged_prefill_attention(q, k_pages, v_pages, tables, k_suf, v_suf,
+                                  interpret=True)
+    want = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                           k_suf, v_suf)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), atol=tol(dtype),
+                               rtol=tol(dtype))
+
+
+def test_ops_dispatch_paged_prefill():
+    """ops.paged_prefill_attention: ref on CPU, interpret kernel when
+    FORCE_KERNEL_ON_CPU — same routing contract as every other kernel."""
+    B, Hq, Hkv, T, N, C, Ssuf, D = 2, 4, 2, 16, 3, 16, 32, 32
+    P = B * N + 1
+    k_pages, v_pages = mk(Hkv, P, T, D), mk(Hkv, P, T, D)
+    tables = mk_tables(B, N, P)
+    k_suf, v_suf = mk(B, Hkv, Ssuf, D), mk(B, Hkv, Ssuf, D)
+    q = mk(B, Hq, C, D)
+    want = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                           k_suf, v_suf)
+    got = ops.paged_prefill_attention(q, k_pages, v_pages, tables, k_suf,
+                                      v_suf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    ops.FORCE_KERNEL_ON_CPU = True
+    try:
+        got_k = ops.paged_prefill_attention(q, k_pages, v_pages, tables,
+                                            k_suf, v_suf)
+    finally:
+        ops.FORCE_KERNEL_ON_CPU = False
+    np.testing.assert_allclose(got_k, want, atol=2e-5, rtol=2e-5)

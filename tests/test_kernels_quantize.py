@@ -1,0 +1,105 @@
+"""Fused int8 quantize-on-write kernel vs jnp ref — byte-identity required.
+
+The wire format is part of the serving contract: the fused Pallas pass must
+produce the exact int8 payload (and scale) the ref produces, or admission
+on the receiving side would dequantize different bytes than the sender
+accounted for.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.quantize import quantize_int8_fused
+
+pytestmark = pytest.mark.slow      # JAX compiles dominate; -m "not slow" skips
+
+RNG = np.random.default_rng(11)
+
+
+def mk(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+@pytest.mark.parametrize("shape", [
+    (256, 128),          # exactly one tile
+    (4, 512, 64),        # multiple tiles, lane-aligned total
+    (1, 2, 100, 64),     # KV-cache-like leaf, needs padding
+    (7, 33),             # tiny ragged leaf
+    (1,),                # degenerate scalar-ish leaf
+])
+def test_quantize_byte_identity(shape):
+    x = mk(*shape)
+    q, s = quantize_int8_fused(x, interpret=True)
+    q2, s2 = ref.quantize_int8_ref(x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+
+
+def test_quantize_zero_leaf():
+    """All-zero leaves (warmup payloads) must encode without div-by-zero:
+    scale floors at 1e-30/127 and every code is 0."""
+    x = jnp.zeros((3, 64, 32), jnp.float32)
+    q, s = quantize_int8_fused(x, interpret=True)
+    q2, s2 = ref.quantize_int8_ref(x)
+    assert int(jnp.sum(jnp.abs(q.astype(jnp.int32)))) == 0
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    assert np.isfinite(float(s))
+
+
+def test_quantize_extremes_clip():
+    """Values at +-absmax hit codes +-127 exactly in both paths."""
+    x = jnp.asarray([[3.0, -3.0, 1.5, 0.0] * 32] * 8, jnp.float32)
+    q, s = quantize_int8_fused(x, interpret=True)
+    q2, s2 = ref.quantize_int8_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    assert int(jnp.max(q)) == 127 and int(jnp.min(q)) == -127
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+
+
+def test_ops_dispatch_quantize():
+    """ops.quantize_wire: ref on CPU, interpret kernel when forced — and
+    the two are byte-identical, so the dispatch seam cannot change wires."""
+    x = mk(2, 4, 37, 64)
+    want_q, want_s = ref.quantize_int8_ref(x)
+    got_q, got_s = ops.quantize_wire(x)
+    np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want_q))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    ops.FORCE_KERNEL_ON_CPU = True
+    try:
+        k_q, k_s = ops.quantize_wire(x)
+    finally:
+        ops.FORCE_KERNEL_ON_CPU = False
+    np.testing.assert_array_equal(np.asarray(k_q), np.asarray(want_q))
+    np.testing.assert_array_equal(np.asarray(k_s), np.asarray(want_s))
+
+
+def test_wire_pytree_identity_kernel_vs_ref():
+    """quantize_cache_for_wire produces byte-identical wire pytrees whether
+    leaves encode through the fused kernel (interpret) or the jnp ref."""
+    from repro.models.kvcache import (dequantize_cache_from_wire,
+                                      quantize_cache_for_wire)
+    cache = {"layers": [{"k": mk(1, 2, 48, 64, dtype=np.float32),
+                         "v": mk(1, 2, 48, 64).astype(jnp.bfloat16),
+                         "state": mk(1, 2, 16, 16)}]}
+    wire_ref, nb_ref = quantize_cache_for_wire(cache, use_kernel=False)
+    ops.FORCE_KERNEL_ON_CPU = True
+    try:
+        wire_k, nb_k = quantize_cache_for_wire(cache, use_kernel=True)
+    finally:
+        ops.FORCE_KERNEL_ON_CPU = False
+    assert nb_ref == nb_k
+    leaf = wire_ref["layers"][0]
+    assert set(leaf["k"]) == {"q", "scale"} and leaf["k"]["q"].dtype == jnp.int8
+    assert not isinstance(leaf["state"], dict)   # fp32 state ships raw
+    for a, b in zip(jax.tree_util.tree_leaves(wire_ref),
+                    jax.tree_util.tree_leaves(wire_k)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    back = dequantize_cache_from_wire(wire_k)
+    assert back["layers"][0]["v"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(back["layers"][0]["k"], np.float32),
+        np.asarray(cache["layers"][0]["k"], np.float32), atol=2e-2, rtol=2e-2)

@@ -21,6 +21,7 @@ from repro.configs import get_smoke_config
 from repro.configs.base import AttentionSpec
 from repro.core.blockpool import BlockPool
 from repro.core.prefix_cache import HybridPrefixCache
+from repro.core.router import PRFAAS
 from repro.models import Model, paged_layout
 from repro.serving.api import PagePin, Request
 from repro.serving.deployment import CrossDCDeployment, DeploymentConfig
@@ -215,3 +216,162 @@ class TestPagedDeployment:
         assert set(m["kv_manager"]) == {"rebalanced", "cross_transfers",
                                         "clusters"}
         dep_p.decoders[dep_p.pd_names[0]].pool.check_invariants()
+
+
+@pytest.fixture(scope="module")
+def one_arch():
+    """Single full-attn arch for boundary/churn tests: the properties under
+    test live in the pool/prefix-cache layer and are arch-independent."""
+    cfg = get_smoke_config("mistral-nemo-12b")
+    model = Model(cfg, use_kernels=False)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+class TestPrefixBoundary:
+    """Pin ``match_resume`` at page boundaries: a hit landing on exactly
+    k*page_tokens must still leave the final prompt token to recompute
+    (its logits seed generation), and +-1 around the boundary must round
+    to the right page count — all while reproducing dense tokens."""
+
+    @pytest.mark.parametrize("delta,want_c", [(-1, 48), (0, 48), (1, 64)])
+    def test_resume_at_page_boundary(self, one_arch, delta, want_c):
+        cfg, model, params = one_arch
+        pool = BlockPool(SLOTS * CAPACITY // PAGE, PAGE, 1)
+        cache = HybridPrefixCache(pool, 0, 1, has_full_attn=True,
+                                  has_linear=False)
+        rng = np.random.default_rng(21)
+        prefix = rng.integers(0, cfg.vocab_size, (64,)).astype(np.int32)
+        extra = rng.integers(0, cfg.vocab_size, (1,)).astype(np.int32)
+
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           paged=True, pool=pool, page_tokens=PAGE)
+        dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+            [int(t) for t in req.tokens], ids, snap)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=3)
+        sched.submit(Request(rid=0, tokens=prefix, max_new_tokens=5))
+        sched.run()
+
+        tokens_b = (prefix[:64 + delta] if delta <= 0
+                    else np.concatenate([prefix, extra]))
+        L = len(tokens_b)
+        c, ids, snap = cache.match_resume([int(t) for t in tokens_b])
+        assert c == want_c, (delta, c)
+        assert c < L, "resume must leave >= 1 token to recompute"
+        assert len(ids) == c // PAGE
+        pool.retain(ids)
+        before = peng.tokens_prefilled
+        sched.submit(Request(rid=1, tokens=tokens_b, max_new_tokens=9,
+                             device_pin=PagePin(c, ids, snap)))
+        sched.run()
+        assert peng.tokens_prefilled - before == L - c
+
+        dense_out, _, _ = _run(model, params,
+                               [Request(rid=1, tokens=tokens_b.copy(),
+                                        max_new_tokens=9)], paged=False)
+        assert dec.outputs[1].output_tokens == dense_out[1]
+        pool.check_invariants()
+
+
+class TestPoolConservationChurn:
+    """Property: ``allocated == freed + evicted + resident`` survives
+    interleaved suffix-resume admissions, mid-block retires (odd budgets),
+    and pool-exhaustion truncations on ONE shared pool."""
+
+    def test_interleaved_churn_with_exhaustion(self, one_arch):
+        cfg, model, params = one_arch
+        pool = BlockPool(20, PAGE, 1)          # deliberately tight: 320 tok
+        cache = HybridPrefixCache(pool, 0, 1, has_full_attn=True,
+                                  has_linear=False)
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           paged=True, pool=pool, page_tokens=PAGE)
+        dec.on_admit = lambda req, L, ids, snap: cache.insert_device(
+            [int(t) for t in req.tokens], ids, snap)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=4)
+
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab_size, (32,)).astype(np.int32)
+        for i in range(4):                      # concurrent growth > pool
+            tail = rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(6, 14)),)).astype(np.int32)
+            sched.submit(Request(rid=i, tokens=np.concatenate([prefix, tail]),
+                                 max_new_tokens=int(rng.integers(41, 55))))
+        sched.run()
+        assert dec.page_fail_retires > 0, \
+            "churn must actually exhaust the pool"
+
+        for i in range(3):                      # suffix-resume wave
+            tail = rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(6, 14)),)).astype(np.int32)
+            toks = np.concatenate([prefix, tail])
+            c, ids, snap = cache.match_resume([int(t) for t in toks])
+            if c:
+                pool.retain(ids)
+            sched.submit(Request(
+                rid=10 + i, tokens=toks,
+                max_new_tokens=int(rng.integers(9, 19)),
+                device_pin=PagePin(c, ids, snap) if c else None))
+        sched.run()
+        assert not sched.has_work
+        assert len(dec.outputs) == 7            # every request produced
+
+        pool.check_invariants()
+        s = pool.stats
+        assert s["allocated"] == s["freed"] + s["evicted"] + pool.resident
+
+
+class TestWireAdmission:
+    """paged_kv + wire_compression: offloaded prefills admit their int8
+    wire pytree directly — dequantization fuses into the page scatter —
+    and the tokens are bit-identical to eager dequantize-then-admit."""
+
+    def _wcfg(self):
+        return DeploymentConfig(threshold=8, decode_slots=SLOTS,
+                                capacity=CAPACITY, decode_block_size=BLOCK,
+                                min_prefill_bucket=32, max_prefill_bucket=64,
+                                block_tokens=PAGE, pool_blocks=96,
+                                paged_kv=True, wire_compression=True)
+
+    def _reqs(self, cfg):
+        rng = np.random.default_rng(17)
+        return [Request(rid=i,
+                        tokens=rng.integers(0, cfg.vocab_size,
+                                            (L,)).astype(np.int32),
+                        max_new_tokens=b)
+                for i, (L, b) in enumerate([(40, 9), (70, 6)])]
+
+    def test_fused_dequant_scatter_matches_eager(self, one_arch):
+        cfg, model, params = one_arch
+        dep_w = CrossDCDeployment(model, params, self._wcfg())
+        assert all(d.wire_admission for d in dep_w.decoders.values())
+        out_w = dep_w.submit_batch(self._reqs(cfg))
+
+        dep_e = CrossDCDeployment(model, params, self._wcfg())
+        for d in dep_e.decoders.values():
+            d.wire_admission = False            # force eager dequantize
+        out_e = dep_e.submit_batch(self._reqs(cfg))
+
+        for r in dep_w.completed:
+            assert r.route == PRFAAS            # threshold=8: all offload
+        assert {k: v.output_tokens for k, v in out_w.items()} \
+            == {k: v.output_tokens for k, v in out_e.items()}
+        assert dep_w.measured_compression() > 1.5
+
+    def test_measured_compression_seeded_at_construction(self, one_arch):
+        """Regression: with wire_compression on, the reported ratio must
+        reflect the int8 wire format BEFORE any quantized flow ships —
+        seeded from a one-page dry-run quantization — not report 1.0."""
+        cfg, model, params = one_arch
+        dep = CrossDCDeployment(model, params, self._wcfg())
+        assert dep._wire_quant == 0              # no flows yet
+        assert dep.measured_compression() > 1.5
+        plain = CrossDCDeployment(
+            model, params,
+            DeploymentConfig(threshold=8, decode_slots=SLOTS,
+                             capacity=CAPACITY, decode_block_size=BLOCK,
+                             min_prefill_bucket=32, max_prefill_bucket=64,
+                             block_tokens=PAGE, pool_blocks=96))
+        assert plain.measured_compression() == 1.0
