@@ -6,6 +6,7 @@ import time
 import jax
 
 ROWS = []
+_T0 = time.perf_counter()
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -14,9 +15,35 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
+def reset_clock():
+    """Restart the per-benchmark wall clock (the harness calls this before
+    each module so ``write_json``'s ``bench_wall_s`` is per-module, not
+    cumulative across the whole run)."""
+    global _T0
+    _T0 = time.perf_counter()
+
+
 def write_json(path: str, payload: dict):
     """Write a BENCH_*.json artifact (and emit a row so the harness log
-    records which artifacts a run produced)."""
+    records which artifacts a run produced).
+
+    Injects two bookkeeping fields: ``bench_wall_s`` — wall seconds since
+    ``reset_clock()`` (module start under ``benchmarks.run``) — and
+    ``prev``, a snapshot of the previous run's top-level scalars so a
+    full-run regeneration records what the headline numbers moved FROM."""
+    payload = dict(payload)
+    payload["bench_wall_s"] = round(time.perf_counter() - _T0, 3)
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            prev = {k: v for k, v in old.items()
+                    if isinstance(v, (int, float, str, bool))
+                    and not isinstance(v, type(None))}
+            if prev:
+                payload["prev"] = prev
+        except (OSError, ValueError):
+            pass                       # unreadable old artifact: no snapshot
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")

@@ -12,7 +12,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (engine_bench, fig5_gridsearch, kernel_bench,
+from benchmarks import (common, engine_bench, fig5_gridsearch, kernel_bench,
                         scenario_grid, serve_live, sim_ttft,
                         table3_kv_throughput, table5_profile,
                         table6_deployment)
@@ -49,6 +49,7 @@ def main() -> None:
     for name in names:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        common.reset_clock()       # per-module bench_wall_s in artifacts
         try:
             _call_main(MODULES[name], args.smoke)
         except Exception:

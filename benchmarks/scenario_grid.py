@@ -1,7 +1,7 @@
-"""Figure-style scenario grid over the event-driven simulator.
+"""Scenario engine: stressor grid + trace-driven workload sweeps with an
+SLO-attainment / cost frontier.
 
-Sweeps the four stressors the ROADMAP asked for, now affordable with the
-exact event engine:
+Part 1 — the figure-style stressor grid (event engine, unchanged axes):
 
   * burst_factor      — MMPP arrival burstiness (mean-preserving duty cycle)
   * length skew       — log-normal sigma of the request-length distribution
@@ -11,23 +11,38 @@ exact event engine:
 
 Multi-cluster points run the regionalized control plane: per-home routing
 thresholds (reported per point) and session roaming (``ROAM_PROB``), so
-the PD<->PD mesh links carry cross-region cache copies.
+the PD<->PD mesh links carry cross-region cache copies.  Every point runs
+the SAME offered load (a fixed fraction of the paper deployment's modeled
+capacity) so degradation is attributable to the stressor, not re-sizing.
 
-Every point runs the SAME offered load (a fixed fraction of the paper
-deployment's modeled two-cluster capacity) so degradation is attributable
-to the stressor, not to re-sizing.  Emits ``BENCH_scenario_grid.json``
-with per-point global + per-cluster + per-pair-link metrics.
+Part 2 — the trace-driven scenario sweep (vector engine, the fast path
+that makes this affordable): replayable ``core.workload`` traces over
+
+    workload family x topology x policy x fleet size
+
+  * families  — diurnal (regional tz-offset peaks), flash_crowd (viral
+                onsets), conversation (multi-turn trees w/ think time)
+  * topology  — 1 pooled vs 3 regional PD clusters
+  * policy    — static threshold / adaptive routing / adaptive+autoscale
+  * size      — fleet provisioning multiplier at FIXED demand, tracing
+                out the cost vs SLO-attainment tradeoff
+
+Each point reports TTFT P99, SLO attainment, goodput, and dollar cost per
+million completed requests; per family the Pareto-optimal (cost,
+attainment) points form the frontier consumed by
+``examples/capacity_planner.py``.  Emits ``BENCH_scenario_grid.json``.
 
     PYTHONPATH=src python -m benchmarks.scenario_grid [--smoke]
 """
 import argparse
+import dataclasses
 import itertools
-import json
 import time
 
-from benchmarks.common import emit
-from repro.core import (LogNormalLengths, PrfaasSimulator, SimConfig,
-                        SystemConfig, ThroughputModel, Workload,
+from benchmarks.common import emit, write_json
+from repro.core import (LogNormalLengths, PrfaasSimulator, RouterConfig,
+                        SimConfig, SystemConfig, ThroughputModel, Workload,
+                        conversation_trace, diurnal_trace, flash_crowd_trace,
                         paper_h20_profile, paper_h200_profile, split_even)
 
 BURST_FACTORS = (1.0, 2.5)
@@ -40,6 +55,7 @@ SHARES_3 = (0.6, 0.3, 0.1)           # skewed regional traffic
 LINK_GBPS_1 = 20.0
 LINK_GBPS_3 = (14.0, 8.0, 5.0)       # thinner links to smaller regions
 ROAM_PROB = 0.15                     # multi-cluster: sessions switch region
+SLO_TTFT_S = 4.0                     # TTFT SLO for attainment/goodput
 
 
 def _system(tm: ThroughputModel, k: int):
@@ -61,7 +77,7 @@ def run_point(bf: float, sigma: float, fluct: float, k: int,
     cfg = SimConfig(
         arrival_rate=load_frac * lam, sim_time=sim_time, seed=17,
         link_gbps=LINK_GBPS_1, link_fluctuation=fluct, engine="event",
-        pd_clusters=k,
+        ttft_slo_s=SLO_TTFT_S, pd_clusters=k,
         pd_shares=SHARES_3[:k] if k > 1 else None,
         pd_link_gbps=LINK_GBPS_3[:k] if k > 1 else None,
         pd_mesh_gbps=10.0 if k > 1 else 0.0,
@@ -80,14 +96,173 @@ def run_point(bf: float, sigma: float, fluct: float, k: int,
         "throughput_rps": round(m["throughput_rps"], 4),
         "ttft_mean_s": _r(m["ttft_mean"]),
         "ttft_p90_s": _r(m["ttft_p90"]),
+        "ttft_p99_s": _r(m["ttft_p99"]),
+        "slo_attainment": _r(m["slo_attainment"]),
+        "goodput_rps": _r(m["goodput_rps"]),
         "egress_gbps": round(m["egress_gbps"], 4),
         "offload_frac": round(m["offload_frac"], 4),
         "thresholds": {name: _r(t) for name, t in m["thresholds"].items()},
         "clusters": {name: {kk: _r(vv) for kk, vv in c.items()}
                      for name, c in m["clusters"].items()},
-        "links": {pair: round(s["sent_bytes"] / 1e9, 3)
+        # per pair link: cumulative GB on the wire + the windowed drop
+        # signal at sim end (the congestion telemetry routing acts on)
+        "links": {pair: {"gb": round(s["sent_bytes"] / 1e9, 3),
+                         "drops": round(s["drops"], 4)}
                   for pair, s in m["links"].items()},
     }
+
+
+# ---------------------------------------------------------------------------
+# trace-driven scenario sweep (vector engine)
+# ---------------------------------------------------------------------------
+FAMILIES = ("diurnal", "flash_crowd", "conversation")
+POLICIES = ("static", "adaptive", "autoscale")
+SIZES = (0.6, 1.0, 1.75)             # fleet multiplier at fixed demand
+SCEN_K = (1, 3)
+SCEN_SEED = 23
+SCEN_BASE_SCALE = 4                  # base fleet = 4x the paper deployment
+SCEN_LOAD_FRAC = 0.5                 # demand sized for SIZES==1.0 @ 50%
+                                     # (diurnal peak = 1.6x mean -> 80%)
+SCEN_SHARES = (0.5, 0.3, 0.2)
+SCEN_TZ_FRAC = (0.0, 1.0 / 3.0, 2.0 / 3.0)   # regional peak phase offsets
+# $/instance-hour (indicative on-demand 8-GPU node prices): prefill-class
+# nodes (H200-like, also PrfaaS) vs decode-class nodes (H20-like)
+PRICE_HR = {"prefill": 70.0, "decode": 28.0, "prfaas": 70.0}
+
+
+def _scaled_system(sc0, mult: float) -> SystemConfig:
+    return dataclasses.replace(
+        sc0, n_prfaas=max(1, round(sc0.n_prfaas * mult)),
+        n_p=max(1, round(sc0.n_p * mult)), n_d=max(1, round(sc0.n_d * mult)),
+        b_out=sc0.b_out * mult)
+
+
+def _make_trace(family: str, rate: float, sim_time: float, k: int,
+                names, shares):
+    """Build the family's replayable ``core.workload`` trace at a common
+    mean demand ``rate`` (flash crowds add transient load on top — that is
+    the family's stressor)."""
+    if family == "diurnal":
+        # one full (compressed) day so every region sees its peak
+        return diurnal_trace(rate, sim_time, seed=SCEN_SEED,
+                             home_names=names, shares=shares,
+                             tz_offsets_s=[f * sim_time
+                                           for f in SCEN_TZ_FRAC[:k]],
+                             day_s=sim_time)
+    if family == "flash_crowd":
+        return flash_crowd_trace(rate, sim_time, seed=SCEN_SEED,
+                                 home_names=names, shares=shares,
+                                 flash_times=(0.35 * sim_time,
+                                              0.7 * sim_time),
+                                 flash_amp=2.0, flash_decay_s=45.0)
+    # conversation: Poisson session starts; turns_mean turns/session keeps
+    # the mean REQUEST rate at ~rate; per-turn roaming when multi-region
+    turns_mean = 4.0
+    starts = diurnal_trace(rate / turns_mean, sim_time, seed=SCEN_SEED,
+                           depth=0.0).arrival
+    return conversation_trace(starts, sim_time, seed=SCEN_SEED,
+                              home_names=names, shares=shares,
+                              turns_mean=turns_mean, think_mean_s=20.0,
+                              roam_prob=0.1 if k > 1 else 0.0)
+
+
+def _fleet_cost_hr(sim, sc: SystemConfig) -> float:
+    """$/hr of the fleet the run actually ended with: autoscale points are
+    charged at the autoscalers' final per-region allocation, fixed points
+    at the configured one (PrfaaS nodes are never autoscaled)."""
+    if sim.autoscalers:
+        n_p = sum(a.system.n_p for a in sim.autoscalers.values())
+        n_d = sum(a.system.n_d for a in sim.autoscalers.values())
+    else:
+        n_p, n_d = sc.n_p, sc.n_d
+    return (n_p * PRICE_HR["prefill"] + n_d * PRICE_HR["decode"]
+            + sc.n_prfaas * PRICE_HR["prfaas"])
+
+
+def run_scenario(family: str, k: int, policy: str, size: float,
+                 tm: ThroughputModel, sc0: SystemConfig, lam0: float,
+                 sim_time: float) -> dict:
+    names = ("pd",) if k == 1 else tuple(f"pd{i}" for i in range(k))
+    shares = SCEN_SHARES[:k] if k > 1 else None
+    rate = SCEN_LOAD_FRAC * lam0 * SCEN_BASE_SCALE
+    sc = _scaled_system(sc0, SCEN_BASE_SCALE * size)
+    tr = _make_trace(family, rate, sim_time, k, names, shares)
+    rc = RouterConfig(threshold_boost=1.0) if policy == "static" else None
+    cfg = SimConfig(
+        arrival_rate=rate, sim_time=sim_time, seed=SCEN_SEED,
+        engine="vector", vector_dt=0.25, ttft_slo_s=SLO_TTFT_S,
+        link_gbps=LINK_GBPS_1 * SCEN_BASE_SCALE, link_fluctuation=0.1,
+        autoscale=(policy == "autoscale"), pd_clusters=k,
+        pd_shares=shares,
+        pd_link_gbps=tuple(g * SCEN_BASE_SCALE for g in LINK_GBPS_3[:k])
+        if k > 1 else None,
+        pd_mesh_gbps=10.0 * SCEN_BASE_SCALE if k > 1 else 0.0)
+    sim = PrfaasSimulator(tm, sc, Workload(), cfg, router_cfg=rc)
+    sim.inject_soa_trace(tr)
+    t0 = time.time()
+    m = sim.run()
+    wall = time.time() - t0
+    horizon_h = sim_time / 3600.0
+    completed = max(m["completed"], 1)
+    cost_hr = _fleet_cost_hr(sim, sc)
+    return {
+        "family": family, "pd_clusters": k, "policy": policy, "size": size,
+        "requests": len(tr), "wall_s": round(wall, 3),
+        "offered_rps": round(rate, 2),
+        "throughput_rps": round(m["throughput_rps"], 3),
+        "goodput_rps": round(m["goodput_rps"], 3),
+        "slo_attainment": round(m["slo_attainment"], 4),
+        "ttft_mean_s": round(m["ttft_mean"], 3),
+        "ttft_p99_s": round(m["ttft_p99"], 3),
+        "egress_gbps": round(m["egress_gbps"], 3),
+        "fleet_cost_hr": round(cost_hr, 2),
+        "cost_per_mreq": round(cost_hr * horizon_h / (completed / 1e6), 2),
+        "clusters": {name: {"slo_attainment": round(c["slo_attainment"], 4),
+                            "goodput_rps": round(c["goodput_rps"], 3)}
+                     for name, c in m["clusters"].items()},
+    }
+
+
+def pareto_frontier(points) -> list:
+    """Non-dominated (cost_per_mreq down, slo_attainment up) subset,
+    sorted by cost — the curve a capacity planner walks."""
+    frontier = []
+    for p in sorted(points, key=lambda p: (p["cost_per_mreq"],
+                                           -p["slo_attainment"])):
+        if not frontier or p["slo_attainment"] > \
+                frontier[-1]["slo_attainment"] + 1e-12:
+            frontier.append(p)
+    return frontier
+
+
+def run_scenarios(sim_time: float, sizes=SIZES) -> dict:
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc0, lam0, _ = tm.grid_search(4, 8, 100e9 / 8)
+    points = []
+    for family, k, policy, size in itertools.product(
+            FAMILIES, SCEN_K, POLICIES, sizes):
+        p = run_scenario(family, k, policy, size, tm, sc0, lam0, sim_time)
+        points.append(p)
+        emit(f"scenario/{family}_k{k}_{policy}_x{size}", p["wall_s"] * 1e6,
+             f"att={p['slo_attainment']:.3f} "
+             f"good={p['goodput_rps']:.1f}rps "
+             f"${p['cost_per_mreq']:.0f}/Mreq")
+    frontier = {fam: [{kk: p[kk] for kk in
+                       ("size", "pd_clusters", "policy", "cost_per_mreq",
+                        "slo_attainment", "goodput_rps", "ttft_p99_s")}
+                      for p in pareto_frontier(
+                          [p for p in points if p["family"] == fam])]
+                for fam in FAMILIES}
+    for fam, front in frontier.items():
+        emit(f"scenario/frontier_{fam}", 0.0,
+             " -> ".join(f"${f['cost_per_mreq']:.0f}@"
+                         f"{f['slo_attainment']:.3f}" for f in front))
+    return {"sim_time_s": sim_time, "seed": SCEN_SEED,
+            "slo_ttft_s": SLO_TTFT_S, "price_hr": PRICE_HR,
+            "base_scale": SCEN_BASE_SCALE, "sizes": list(sizes),
+            "n_points": len(points), "points": points,
+            "frontier": frontier}
 
 
 def main(smoke: bool = False, out_path: str = "BENCH_scenario_grid.json"):
@@ -102,14 +277,17 @@ def main(smoke: bool = False, out_path: str = "BENCH_scenario_grid.json"):
         emit(f"grid/bf{bf}_sg{sigma}_fl{fluct}_k{k}", p["wall_s"] * 1e6,
              f"thr={p['throughput_rps']:.2f}rps "
              f"p90={p90} egress={p['egress_gbps']:.1f}Gbps")
+    scenarios = run_scenarios(sim_time=240.0 if smoke else 600.0,
+                              sizes=(0.6, 1.75) if smoke else SIZES)
     out = {"sim_time_s": sim_time, "seed": 17, "load_frac": 0.7,
+           "slo_ttft_s": SLO_TTFT_S,
            "wall_total_s": round(time.time() - t_start, 2),
-           "n_points": len(points), "points": points}
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=1)
-        f.write("\n")
+           "n_points": len(points), "points": points,
+           "scenarios": scenarios, "frontier": scenarios.pop("frontier")}
+    write_json(out_path, out)
     emit("grid/total", out["wall_total_s"] * 1e6,
-         f"{len(points)}pts -> {out_path}")
+         f"{len(points)}grid+{scenarios['n_points']}scenario pts "
+         f"-> {out_path}")
     return out
 
 

@@ -10,8 +10,16 @@ smaller regions) and re-validates over the multi-cluster ``LinkTopology``
 with the regionalized control plane on: per-home routing thresholds,
 per-region autoscaling, and session roaming over the PD<->PD mesh.
 
+Finally, reads the scenario engine's cost-per-million-requests frontier
+(``BENCH_scenario_grid.json``, produced by ``python -m
+benchmarks.scenario_grid``) and recommends, per workload family, the
+cheapest fleet meeting a target SLO attainment.
+
     PYTHONPATH=src python examples/capacity_planner.py
 """
+import json
+import os
+
 from repro.core import (PrfaasSimulator, SimConfig, SystemConfig,
                         ThroughputModel, Workload, paper_h20_profile,
                         paper_h200_profile)
@@ -109,3 +117,42 @@ lam3_t = tm.lambda_max(sc3_final, pd_shares=list(shares),
                        thresholds=[m3["thresholds"][n] for n in names])
 print(f"  modeled capacity at the converged allocation "
       f"{n_p_f}/{n_d_f} + per-home thresholds: {lam3_t:.2f} req/s")
+
+# --- scenario-engine frontier: what does the SLO actually cost? ------------
+# The scenario engine (benchmarks/scenario_grid.py) sweeps workload family
+# x topology x policy x fleet size through the vectorized simulator and
+# keeps the Pareto-optimal (cost-per-1M-requests, SLO attainment) points.
+# The planner walks that frontier: cheapest fleet meeting the target.
+TARGET_ATTAINMENT = 0.9
+_bench = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      os.pardir, "BENCH_scenario_grid.json")
+if not os.path.exists(_bench):
+    print(f"\n(no BENCH_scenario_grid.json next to the repo root — run "
+          f"`PYTHONPATH=src python -m benchmarks.scenario_grid` for the "
+          f"cost/SLO frontier)")
+else:
+    with open(_bench) as f:
+        _grid = json.load(f)
+    frontier = _grid.get("frontier", {})
+    slo = _grid.get("slo_ttft_s", 0.0)
+    print(f"\ncost/SLO frontier by workload family "
+          f"(TTFT SLO {slo:.0f}s, target attainment "
+          f">={TARGET_ATTAINMENT:.0%}):")
+    for fam, pts in frontier.items():
+        curve = " -> ".join(f"${p['cost_per_mreq']:.0f}@"
+                            f"{p['slo_attainment']:.2f}" for p in pts)
+        print(f"  {fam}: {curve}")
+        ok = [p for p in pts if p["slo_attainment"] >= TARGET_ATTAINMENT]
+        if ok:
+            p = ok[0]                 # frontier is sorted by cost
+            print(f"    -> cheapest meeting target: "
+                  f"{p['size']:.2f}x fleet, {p['pd_clusters']} region(s), "
+                  f"{p['policy']} policy: ${p['cost_per_mreq']:.0f}/Mreq "
+                  f"(attains {p['slo_attainment']:.1%}, "
+                  f"p99 {p['ttft_p99_s']:.1f}s)")
+        else:
+            p = pts[-1]
+            print(f"    -> NO swept fleet meets {TARGET_ATTAINMENT:.0%}; "
+                  f"best is {p['size']:.2f}x/{p['policy']} at "
+                  f"{p['slo_attainment']:.1%} — provision beyond "
+                  f"{max(pt['size'] for pt in pts):.2f}x or relax the SLO")

@@ -20,7 +20,9 @@ from repro.core.throughput_model import (SystemConfig, ThroughputModel,
                                          split_even)
 from repro.core.transfer import (Flow, Link, LinkTopology, layerwise_release,
                                  star_pairs)
-from repro.core.workload import LogNormalLengths, Workload, mmpp_rate
+from repro.core.workload import (LogNormalLengths, Trace, Workload,
+                                 conversation_trace, diurnal_trace,
+                                 flash_crowd_trace, mmpp_rate)
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "StageTelemetry",
@@ -36,5 +38,6 @@ __all__ = [
     "SystemConfig", "ThroughputModel", "egress_bandwidth", "kv_throughput",
     "split_even",
     "Flow", "Link", "LinkTopology", "layerwise_release", "star_pairs",
-    "LogNormalLengths", "Workload", "mmpp_rate",
+    "LogNormalLengths", "Trace", "Workload", "mmpp_rate",
+    "diurnal_trace", "flash_crowd_trace", "conversation_trace",
 ]

@@ -20,6 +20,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Tuple
 
+import numpy as np
+
 from repro.configs.base import AttentionSpec, ModelConfig
 
 MIB = 2 ** 20
@@ -61,6 +63,20 @@ def _loglog_interp(xs, ys, x):
     return math.exp(ly[i] + slope * (q - lx[i]))
 
 
+def _loglog_interp_vec(xs, ys, x: np.ndarray) -> np.ndarray:
+    """Vectorized ``_loglog_interp``: same piecewise power law (including
+    end-slope extrapolation) over an array of query lengths.  Agrees with
+    the scalar version to float rounding — the vectorized simulator engine
+    must charge the same bytes/service times as the event engine."""
+    lx = np.log(np.asarray(xs, np.float64))
+    ly = np.log(np.asarray(ys, np.float64))
+    q = np.log(np.maximum(np.asarray(x, np.float64), 1e-300))
+    # segment index per query, clipped so end segments extrapolate
+    i = np.clip(np.searchsorted(lx, q, side="right") - 1, 0, len(lx) - 2)
+    slope = (ly[i + 1] - ly[i]) / (lx[i + 1] - lx[i])
+    return np.exp(ly[i] + slope * (q - lx[i]))
+
+
 class Profile:
     """Per-instance profile: S_kv(l) bytes, T_prefill(l) seconds."""
 
@@ -73,6 +89,19 @@ class Profile:
     def kv_throughput(self, l: int) -> float:
         """Paper Eq. 1: Φ_kv(l) in bytes/s."""
         return self.s_kv(l) / self.t_prefill(l)
+
+    # -- batched evaluation (vectorized simulator engine) -------------------
+    # Subclasses with closed-form curves override these with pure-numpy
+    # versions; the fallback loops over the scalar methods so ANY profile
+    # stays usable from the SoA fast path (just without the speedup).
+    def s_kv_vec(self, lens: np.ndarray) -> np.ndarray:
+        return np.array([self.s_kv(int(l)) for l in np.asarray(lens).ravel()],
+                        np.float64).reshape(np.shape(lens))
+
+    def t_prefill_vec(self, lens: np.ndarray) -> np.ndarray:
+        return np.array([self.t_prefill(int(l))
+                         for l in np.asarray(lens).ravel()],
+                        np.float64).reshape(np.shape(lens))
 
 
 # Paper Table 5 (1T hybrid model, 8xH200, in-house vLLM).
@@ -102,6 +131,17 @@ class PaperProfile(Profile):
     def t_prefill(self, l: int) -> float:
         base = _loglog_interp(PAPER_TABLE5_LENS, PAPER_TABLE5_TPREFILL, l)
         kappa = self.slowdown_base * (l / self.slowdown_ref_len) ** self.slowdown_exp
+        return base * kappa
+
+    def s_kv_vec(self, lens: np.ndarray) -> np.ndarray:
+        return _loglog_interp_vec(
+            PAPER_TABLE5_LENS, [v * MIB for v in PAPER_TABLE5_SKV_MIB], lens)
+
+    def t_prefill_vec(self, lens: np.ndarray) -> np.ndarray:
+        l = np.asarray(lens, np.float64)
+        base = _loglog_interp_vec(PAPER_TABLE5_LENS, PAPER_TABLE5_TPREFILL, l)
+        kappa = self.slowdown_base * (
+            l / self.slowdown_ref_len) ** self.slowdown_exp
         return base * kappa
 
 

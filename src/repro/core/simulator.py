@@ -253,9 +253,15 @@ class SimConfig:
     block_tokens: int = 64
     autoscale: bool = False
     warmup_frac: float = 0.1            # exclude from metrics
-    engine: str = "event"               # "event" (exact) | "tick" (legacy)
+    engine: str = "event"               # "event" | "tick" | "vector" (SoA)
     control_dt: float = 0.25            # event engine: telemetry/control loop
     fluct_dt: float = 0.25              # event engine: OU resample period
+    # vector engine epoch length (0 -> control_dt).  Larger epochs trade
+    # control-loop granularity for speed at million-request scale.
+    vector_dt: float = 0.0
+    # TTFT SLO for goodput/attainment metrics (0 = off: attainment reports
+    # 1.0 and goodput equals throughput, keeping the keys JSON-stable)
+    ttft_slo_s: float = 0.0
     # -- multi-cluster topology (1 = the paper's two-cluster deployment) ----
     pd_clusters: int = 1                # regional PD clusters fed by PrfaaS
     pd_shares: Optional[Tuple[float, ...]] = None   # regional traffic shares
@@ -369,6 +375,8 @@ class PrfaasSimulator:
         # external arrival trace (policy/actual cross-validation): replaces
         # the generated MMPP trace when set via ``inject_trace``
         self._external_trace: Optional[List[Request]] = None
+        # SoA trace for the vector engine (``inject_soa_trace``)
+        self._soa_trace = None
         # continuous-batching fidelity: decode admission quantized to the
         # live scheduler's step_block cadence (0 = legacy exact-time)
         if sim.decode_block_tokens < 0:
@@ -505,6 +513,16 @@ class PrfaasSimulator:
         self._external_trace = reqs
         return reqs
 
+    def inject_soa_trace(self, trace):
+        """Feed a ``workload.Trace`` (SoA columns) directly to the vector
+        engine — no per-request Python objects are materialized, which is
+        what makes 1e6+ request runs single-digit seconds.  Other engines
+        replay it through ``inject_trace`` (object path)."""
+        if self.sim.engine == "vector":
+            self._soa_trace = trace
+            return None
+        return self.inject_trace(trace.to_entries())
+
     def _generate_arrivals(self) -> List[Request]:
         """Exact MMPP arrival trace via thinning over the piecewise-constant
         rate — both engines consume the identical trace, so equivalence
@@ -628,9 +646,12 @@ class PrfaasSimulator:
     def run(self) -> dict:
         if self.sim.engine == "tick":
             return self._run_tick()
+        if self.sim.engine == "vector":
+            from repro.core.vector_engine import run_vector
+            return run_vector(self)
         if self.sim.engine != "event":
             raise ValueError(f"unknown engine {self.sim.engine!r}; "
-                             "expected 'event' or 'tick'")
+                             "expected 'event', 'tick', or 'vector'")
         return self._run_event()
 
     # ---------------------------------------------------------- tick engine
@@ -902,18 +923,33 @@ class PrfaasSimulator:
         def _pct(a, q):
             return float(np.percentile(a, q)) if len(a) else float("nan")
 
+        slo = self.sim.ttft_slo_s
+
+        def _slo_stats(tt):
+            """(attainment, goodput under the TTFT SLO).  SLO off (0) keeps
+            the keys JSON-stable: everything attains, goodput == thr."""
+            if slo <= 0:
+                return 1.0, len(tt) / window
+            good = int((tt <= slo).sum())
+            return (good / len(tt) if len(tt) else float("nan"),
+                    good / window)
+
         per_cluster = {}
         for name in self._pd_names:
             c_done = [r for r in done if r.home == name]
             c_ttft = np.array([r.first_token - r.arrival for r in c_done
                                if r.first_token > 0])
             cached, total = self._route_tokens[name]
+            c_att, c_good = _slo_stats(c_ttft)
             per_cluster[name] = {
                 "completed": len(c_done),
                 "throughput_rps": len(c_done) / window,
                 "ttft_mean": float(c_ttft.mean()) if len(c_ttft)
                 else float("nan"),
                 "ttft_p90": _pct(c_ttft, 90),
+                "ttft_p99": _pct(c_ttft, 99),
+                "slo_attainment": c_att,
+                "goodput_rps": c_good,
                 "prefill_queue": len(self.pdp_pools[name].queue),
                 "decode_queue": len(self.decode_pools[name].queue),
                 "threshold": self.router.threshold_for(name),
@@ -923,12 +959,16 @@ class PrfaasSimulator:
             }
         thresholds = {name: self.router.threshold_for(name)
                       for name in self._pd_names}
+        att, goodput = _slo_stats(ttft)
         return {
             "throughput_rps": thr,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
             "ttft_p50": _pct(ttft, 50),
             "ttft_p90": _pct(ttft, 90),
             "ttft_p99": _pct(ttft, 99),
+            "ttft_slo_s": slo,
+            "slo_attainment": att,
+            "goodput_rps": goodput,
             "completed": len(done),
             "offload_frac": offload / max(1, routed),
             # same measurement window as throughput: bytes sent after the

@@ -536,6 +536,7 @@ class LinkTopology:
                              "util_ewma": l.util_ewma,
                              "busy_time": l.busy_time,
                              "drops_total": l.drops_total,
+                             "drops": l.drops,
                              "inflight": len(l.flows)}
                 for (a, b), l in self._links.items()}
 

@@ -1,5 +1,6 @@
 """Benchmark-harness smoke test: ``python -m benchmarks.run --smoke`` must
-finish clean so benchmark drift fails tier-1 instead of rotting silently.
+finish clean AND under a wall-time budget so benchmark drift (correctness
+or cost) fails tier-1 instead of rotting silently.
 
 Runs in a temporary working directory so the harness's BENCH_*.json
 artifacts never clobber the checked-in full-run results.  Marked ``slow``
@@ -9,10 +10,12 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SMOKE_WALL_BUDGET_S = 900.0        # full --smoke harness must fit in this
 
 
 @pytest.mark.slow
@@ -21,16 +24,53 @@ def test_bench_smoke_runs_clean(tmp_path):
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (ROOT, os.path.join(ROOT, "src"),
                     env.get("PYTHONPATH", "")) if p)
+    t0 = time.perf_counter()
     res = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--smoke"],
         cwd=tmp_path, env=env, capture_output=True, text=True, timeout=1200)
+    wall = time.perf_counter() - t0
     assert res.returncode == 0, (
         f"bench smoke failed\n--- stdout ---\n{res.stdout[-4000:]}"
         f"\n--- stderr ---\n{res.stderr[-4000:]}")
     assert "# all benchmarks complete" in res.stdout
     assert "# FAILED" not in res.stdout
+    assert wall < SMOKE_WALL_BUDGET_S, (
+        f"--smoke harness took {wall:.0f}s (budget "
+        f"{SMOKE_WALL_BUDGET_S:.0f}s): a benchmark got slow")
+    # every artifact records the wall time of the module that wrote it
+    for name in ("BENCH_scenario_grid.json", "BENCH_sim_engine.json",
+                 "BENCH_kernel.json", "BENCH_engine.json"):
+        art = json.loads((tmp_path / name).read_text())
+        assert 0.0 <= art["bench_wall_s"] < SMOKE_WALL_BUDGET_S, name
     # the harness actually produced its simulator artifacts
     assert (tmp_path / "BENCH_scenario_grid.json").exists()
+    # vectorized engine comparison (PR 9): the seed-swept equivalence must
+    # hold at 5% on every headline metric and the SoA scale point must
+    # actually run at scale (requests >> what the event engine could do
+    # in the same wall time)
+    se = json.loads((tmp_path / "BENCH_sim_engine.json").read_text())
+    assert se["vector"]["wall_s"] > 0
+    for metric, stats in se["seed_sweep"]["vector"].items():
+        assert stats["max"] <= 0.05, (metric, stats)
+    assert se["vector_scale"]["requests"] >= 10_000
+    assert se["vector_scale"]["completed"] > 0
+    assert se["vector_scale"]["req_per_wall_s"] > 1000
+    # scenario engine (PR 9): trace-driven sweep emits a cost/attainment
+    # frontier for every workload family, and the stressor grid carries
+    # SLO + per-link drop telemetry
+    grid = json.loads((tmp_path / "BENCH_scenario_grid.json").read_text())
+    assert grid["scenarios"]["n_points"] > 0
+    for fam in ("diurnal", "flash_crowd", "conversation"):
+        front = grid["frontier"][fam]
+        assert front, fam
+        costs = [p["cost_per_mreq"] for p in front]
+        atts = [p["slo_attainment"] for p in front]
+        assert costs == sorted(costs)              # Pareto: cost up...
+        assert atts == sorted(atts)                # ...only if att up
+    for p in grid["points"]:
+        assert "ttft_p99_s" in p and "slo_attainment" in p
+        for pair, s in p["links"].items():
+            assert set(s) == {"gb", "drops"}, pair
     # ... and the measured-kernel calibration + serving hot-path artifacts
     assert (tmp_path / "BENCH_kernel.json").exists()
     assert (tmp_path / "BENCH_engine.json").exists()
