@@ -19,6 +19,11 @@ tiny model exposes — the quantities below are scheduling tax, not FLOPs):
     ``RegionScheduler`` (bucket-exact units, chunk interleave, admission at
     block boundaries).  Acceptance: continuous occupancy strictly above the
     alternating baseline, with 0 recompiles after the warm run.
+  * speculative decode (PR 10) — n-gram-drafted multi-token decode on the
+    continuous scheduler, k swept against the plain k=0 path on the same
+    refilling workload.  Acceptance: some k >= 2 beats plain tokens/s,
+    accepted_tokens_per_dispatch > 1.0, token streams identical to k=0,
+    one verify compile per draft depth.
   * paged KV (PR 7) — (a) admission latency of the paged page-write
     scatter vs the dense full-slot placement, with 0 admission recompiles
     after ``warmup_admission``; (b) prefix-hit suffix-only prefill at a
@@ -304,6 +309,87 @@ def bench_occupancy(model, params, cfg, smoke):
             "recompiles_after_warmup": recompiles}
 
 
+SPEC_CAPACITY = 640     # speculative bench KV capacity (long streams so the
+SPEC_BLOCK = 16         # n-gram drafter has history to mine)
+
+
+def bench_spec_decode(model, params, cfg, smoke):
+    """Speculative multi-token decode (PR 10 tentpole) at SLOTS slots on the
+    continuous scheduler: per-slot n-gram drafts verified k+1-at-a-time in
+    one dispatch, greedy acceptance, variable tokens-per-block.  Sweeps
+    draft depth k against the k=0 plain path on the SAME workload
+    (requests >> slots, so freed slots refill at block boundaries — the
+    honest occupancy regime, no drain-tail artifact).  Acceptance: some
+    k >= 2 beats plain tokens/s with accepted_tokens_per_dispatch > 1.0,
+    token streams identical to k=0, and one verify compile per k."""
+    new_tok, n_req, reps = (384, 24, 2) if smoke else (512, 32, 3)
+    ks = (0, 2) if smoke else (0, 2, 3)
+    rng0 = np.random.default_rng(11)
+    prompts = [rng0.integers(0, cfg.vocab_size,
+                             (PROMPT_LEN,)).astype(np.int32)
+               for _ in range(n_req)]
+
+    def mk():
+        return [Request(rid=i, tokens=prompts[i], max_new_tokens=new_tok)
+                for i in range(n_req)]
+
+    sweep, outs = {}, {}
+    for k in ks:
+        peng = PrefillEngine(model, params, min_bucket=32, max_bucket=64)
+        dec = DecodeEngine(model, params, SLOTS, SPEC_CAPACITY,
+                           block_size=SPEC_BLOCK, spec_k=k, spec_ngram=1)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=4)
+        for r in mk():
+            sched.submit(r)
+        sched.run()                         # warm run compiles everything
+        outs[k] = {rid: r.output_tokens for rid, r in dec.outputs.items()}
+        warm_spec = dec.spec_compiles
+        best = float("inf")
+        for _ in range(reps):
+            dec.outputs.clear()
+            dec.tokens_out = 0
+            sched = RegionScheduler(peng, dec, max_prefill_batch=4)
+            for r in mk():
+                sched.submit(r)
+            t0 = time.perf_counter()
+            sched.run()
+            best = min(best, time.perf_counter() - t0)
+        produced = n_req * new_tok
+        acc = dec.accepted_tokens_per_dispatch
+        recompiles = dec.spec_compiles - warm_spec
+        assert recompiles == 0, (
+            f"k={k}: {recompiles} verify recompiles after warm run")
+        sweep[f"k{k}"] = {
+            "tok_s": round(produced / best, 1),
+            "accepted_tokens_per_dispatch": round(acc, 3),
+            "verify_compiles": dec.spec_compiles,
+        }
+        emit(f"engine/spec_decode_k{k}", best * 1e6,
+             f"{produced / best:.1f}tok/s acc/disp={acc:.2f} slots={SLOTS}")
+
+    plain = sweep["k0"]["tok_s"]
+    best_k, best_ratio = 0, 1.0
+    for k in ks[1:]:
+        assert outs[k] == outs[0], (
+            f"k={k} speculative tokens diverge from plain greedy")
+        r = sweep[f"k{k}"]["tok_s"] / plain
+        sweep[f"k{k}"]["speedup_vs_plain"] = round(r, 3)
+        if r > best_ratio:
+            best_k, best_ratio = k, r
+    assert best_k >= 2, (
+        f"no draft depth beat plain decode (best ratio {best_ratio:.3f})")
+    assert sweep[f"k{best_k}"]["accepted_tokens_per_dispatch"] > 1.0
+    emit("engine/spec_decode_speedup", best_ratio,
+         f"best k={best_k} vs plain, token-identical")
+    return {"slots": SLOTS, "capacity": SPEC_CAPACITY,
+            "block_size": SPEC_BLOCK, "requests": n_req,
+            "new_tokens": new_tok, "spec_ngram": 1,
+            "best_k": best_k, "speedup_vs_plain": round(best_ratio, 3),
+            "accepted_tokens_per_dispatch":
+                sweep[f"k{best_k}"]["accepted_tokens_per_dispatch"],
+            "sweep": sweep}
+
+
 def bench_paged_admission(model, params, entries):
     """Paged page-write admission scatter vs the dense full-slot placement,
     same prefilled entries.  The paged path must run recompile-free after
@@ -508,6 +594,7 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
         "admission": bench_paged_admission(model_p, params_p, entries_p),
         "prefix": bench_paged_prefix(model_p, params_p, cfg_p, smoke),
     }
+    speculative = bench_spec_decode(model_p, params_p, cfg_p, smoke)
     write_json(out_path, {
         "archs": {"linear_state": ARCH_LINEAR, "attention": ARCH_ATTN,
                   "paged": ARCH_PAGED},
@@ -526,8 +613,14 @@ def main(smoke: bool = False, out_path: str = "BENCH_engine.json"):
         "paged_token_savings_at_50pct_hits":
             paged["prefix"]["token_savings_frac"],
         "paged_resident_kv_bytes": paged["prefix"]["resident_kv_bytes"],
+        # headline: speculative decode vs plain at SLOTS slots on the
+        # continuous scheduler, greedy token-identical, and the mean
+        # tokens each verify dispatch emitted at the best draft depth
+        "spec_decode_speedup_at_16_slots": speculative["speedup_vs_plain"],
+        "accepted_tokens_per_dispatch":
+            speculative["accepted_tokens_per_dispatch"],
         "decode": decode, "admission": admission, "prefill": prefill,
-        "occupancy": occupancy, "paged": paged,
+        "occupancy": occupancy, "paged": paged, "speculative": speculative,
     })
     return True
 

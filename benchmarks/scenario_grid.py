@@ -166,17 +166,28 @@ def _make_trace(family: str, rate: float, sim_time: float, k: int,
                               roam_prob=0.1 if k > 1 else 0.0)
 
 
-def _fleet_cost_hr(sim, sc: SystemConfig) -> float:
-    """$/hr of the fleet the run actually ended with: autoscale points are
-    charged at the autoscalers' final per-region allocation, fixed points
-    at the configured one (PrfaaS nodes are never autoscaled)."""
-    if sim.autoscalers:
-        n_p = sum(a.system.n_p for a in sim.autoscalers.values())
-        n_d = sum(a.system.n_d for a in sim.autoscalers.values())
-    else:
-        n_p, n_d = sc.n_p, sc.n_d
-    return (n_p * PRICE_HR["prefill"] + n_d * PRICE_HR["decode"]
-            + sc.n_prfaas * PRICE_HR["prfaas"])
+def _fleet_cost_hr(sim, sc: SystemConfig, horizon_s: float) -> float:
+    """Time-averaged $/hr of the fleet over the horizon.
+
+    Autoscale points integrate each region's piecewise-constant (n_p, n_d)
+    trajectory across its conversion epochs — charging the final allocation
+    for the whole run under-bills any point that scaled down mid-run (and
+    over-bills one that scaled up).  Fixed points charge the configured
+    allocation; PrfaaS nodes are never autoscaled."""
+    base = sc.n_prfaas * PRICE_HR["prfaas"]
+    if not sim.autoscalers:
+        return (base + sc.n_p * PRICE_HR["prefill"]
+                + sc.n_d * PRICE_HR["decode"])
+    total = base
+    for a in sim.autoscalers.values():
+        segs = [(0.0,) + tuple(a.initial)] + list(a.conversions)
+        dollars = 0.0
+        for i, (t, n_p, n_d) in enumerate(segs):
+            t_end = segs[i + 1][0] if i + 1 < len(segs) else horizon_s
+            dollars += (t_end - t) * (n_p * PRICE_HR["prefill"]
+                                      + n_d * PRICE_HR["decode"])
+        total += dollars / max(horizon_s, 1e-9)
+    return total
 
 
 def run_scenario(family: str, k: int, policy: str, size: float,
@@ -204,7 +215,7 @@ def run_scenario(family: str, k: int, policy: str, size: float,
     wall = time.time() - t0
     horizon_h = sim_time / 3600.0
     completed = max(m["completed"], 1)
-    cost_hr = _fleet_cost_hr(sim, sc)
+    cost_hr = _fleet_cost_hr(sim, sc, sim_time)
     return {
         "family": family, "pd_clusters": k, "policy": policy, "size": size,
         "requests": len(tr), "wall_s": round(wall, 3),

@@ -71,6 +71,9 @@ class Autoscaler:
         self.cfg = AutoscalerConfig() if cfg is None else cfg
         self._last_eval = 0.0
         self._cache_snap = (0, 0)        # (cached, routed) at last eval
+        # allocation before the first conversion, so cost accounting can
+        # time-integrate the piecewise-constant (n_p, n_d) trajectory
+        self.initial = (system.n_p, system.n_d)
         self.conversions: List[tuple] = []
 
     def _window_cache_frac(self, tel: StageTelemetry) -> float:

@@ -262,6 +262,13 @@ class SimConfig:
     # TTFT SLO for goodput/attainment metrics (0 = off: attainment reports
     # 1.0 and goodput equals throughput, keeping the keys JSON-stable)
     ttft_slo_s: float = 0.0
+    # TBT SLO (mean time-between-tokens per request); 0 = off, same
+    # JSON-stable convention as ttft_slo_s
+    tbt_slo_s: float = 0.0
+    # mean accepted DRAFT tokens per verify dispatch from the live
+    # speculative decoder (accepted_tokens_per_dispatch - 1).  > 0 scales
+    # decode service time by 1/(1+rate); 0 keeps the golden exact path
+    spec_accept_rate: float = 0.0
     # -- multi-cluster topology (1 = the paper's two-cluster deployment) ----
     pd_clusters: int = 1                # regional PD clusters fed by PrfaaS
     pd_shares: Optional[Tuple[float, ...]] = None   # regional traffic shares
@@ -590,7 +597,13 @@ class PrfaasSimulator:
         b = self.sim.decode_block_tokens
         if b > 0:
             n = -(-n // b) * b
-        return n * self.w.t_decode
+        t = n * self.w.t_decode
+        # speculative decode emits (1 + accept_rate) tokens per dispatch on
+        # average; the guard keeps rate = 0 byte-identical to the pre-spec
+        # golden path
+        if self.sim.spec_accept_rate > 0:
+            t /= 1.0 + self.sim.spec_accept_rate
+        return t
 
     def _route(self, req: Request) -> Tuple[str, float]:
         n_blocks = req.total_len // self.sim.block_tokens
@@ -914,6 +927,11 @@ class PrfaasSimulator:
                 if 0 <= r.done <= horizon and r.arrival >= t0]
         ttft = np.array([r.first_token - r.arrival for r in done
                          if r.first_token > 0])
+        # mean time-between-tokens per request: decode span over the
+        # output_len - 1 inter-token gaps (speculation shrinks the span)
+        tbt = np.array([(r.done - r.first_token)
+                        / max(1, self.w.output_len - 1)
+                        for r in done if r.first_token > 0])
         window = max(1e-9, horizon - t0)
         thr = len(done) / window
         offload = sum(1 for r in self.all_requests
@@ -969,6 +987,14 @@ class PrfaasSimulator:
             "ttft_slo_s": slo,
             "slo_attainment": att,
             "goodput_rps": goodput,
+            "tbt_mean": float(tbt.mean()) if len(tbt) else float("nan"),
+            "tbt_p50": _pct(tbt, 50),
+            "tbt_p90": _pct(tbt, 90),
+            "tbt_p99": _pct(tbt, 99),
+            "tbt_slo_s": self.sim.tbt_slo_s,
+            "tbt_attainment": (float((tbt <= self.sim.tbt_slo_s).mean())
+                               if self.sim.tbt_slo_s > 0 and len(tbt)
+                               else 1.0),
             "completed": len(done),
             "offload_frac": offload / max(1, routed),
             # same measurement window as throughput: bytes sent after the

@@ -939,6 +939,8 @@ class _VectorEngine:
         first = np.where(started, self.dec_start + sim.w.t_decode, -1.0)
         done = started & (done_t <= horizon) & (self.arrival >= t0)
         ttft = (first - self.arrival)[done & (first > 0)]
+        tbt = (done_t - first)[done & (first > 0)] \
+            / max(1, sim.w.output_len - 1)
         routed = int((self.target >= 0).sum())
         offload = int((self.target == 0).sum())
         slo = getattr(cfg, "ttft_slo_s", 0.0)
@@ -1016,6 +1018,14 @@ class _VectorEngine:
             "ttft_slo_s": slo,
             "slo_attainment": att,
             "goodput_rps": goodput,
+            "tbt_mean": float(tbt.mean()) if len(tbt) else float("nan"),
+            "tbt_p50": _pct(tbt, 50),
+            "tbt_p90": _pct(tbt, 90),
+            "tbt_p99": _pct(tbt, 99),
+            "tbt_slo_s": getattr(cfg, "tbt_slo_s", 0.0),
+            "tbt_attainment": (
+                float((tbt <= cfg.tbt_slo_s).mean())
+                if getattr(cfg, "tbt_slo_s", 0.0) > 0 and len(tbt) else 1.0),
             "completed": int(done.sum()),
             "offload_frac": offload / max(1, routed),
             "egress_gbps": (sent_total - egress0) * 8 / 1e9 / window,

@@ -293,6 +293,27 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, scale=None,
                                     block_k=block_k, interpret=_on_cpu())
 
 
+def verify_attention(q, k_cache, v_cache, lengths, *, scale=None,
+                     use_kernel=True):
+    """Speculative-verify attention over Q candidate positions in one call.
+
+    q: (B, Hq, Q, D); position j attends over ``min(lengths + j, S)`` keys
+    (``lengths`` = context + 1, the first position's key count).  The ref
+    path batches all Q positions through ONE masked pass over the KV cache
+    (the hot-path win: Q× fewer attention ops per layer); the kernel path
+    unrolls Q calls of the flash decode kernel so accelerator numerics stay
+    bit-identical to the plain one-token decode dispatch."""
+    if not _use_kernel(use_kernel) or _on_cpu_lowering(k_cache.shape[2]):
+        return ref.verify_attention_ref(q, k_cache, v_cache, lengths,
+                                        scale=scale)
+    S = k_cache.shape[2]
+    outs = [_decode.decode_attention(q[:, :, j], k_cache, v_cache,
+                                     jnp.minimum(lengths + j, S),
+                                     scale=scale, interpret=_on_cpu())
+            for j in range(q.shape[2])]
+    return jnp.stack(outs, axis=2)
+
+
 def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *, window=0,
                            scale=None, use_kernel=True):
     """Block-table flash-decode: KV gathered from a shared page pool.

@@ -163,6 +163,56 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
     return jnp.einsum("bhk,bhkd->bhd", probs, vf).astype(dtype)
 
 
+def verify_attention_ref(q, k_cache, v_cache, lengths, *,
+                         scale: float | None = None):
+    """Speculative-verify attention: q: (B, Hq, Q, D) — Q candidate
+    positions per request; k_cache, v_cache: (B, Hkv, S, D).
+
+    Position j of request b attends over ``min(lengths[b] + j, S)`` keys
+    (the caller passes ``lengths`` as the FIRST position's key count, i.e.
+    context + 1).  ONE masked pass over the KV cache scores every position
+    — the f32 upcast/GQA-repeat of the cache AND the two GEMM sweeps over
+    it are shared across all Q positions, which is the whole perf win over
+    q sequential decode steps (each of which re-reads the cache).
+
+    Numerics contract: float-equivalent, not bitwise, to per-position
+    ``decode_attention_ref`` calls — the (B,H,Q,S)-shaped GEMMs may tile
+    (and thus reassociate the d/k summations) differently from the
+    (B,H,S)-shaped single-token ones.  Masking is content-independent
+    (rows >= the per-position length get NEG_INF before softmax, so the
+    future rows a verify pass pre-writes contribute exactly 0); the
+    speculative contract enforced by the engine tests is greedy TOKEN
+    identity (argmax), which survives ulp-level reassociation.
+    Returns (B, Hq, Q, D).
+    """
+    B, Hq, Q, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    dtype = q.dtype
+    # Grouped contractions on the UN-repeated cache: the GQA head-group is
+    # a batch dim of the dot, not a contraction dim, so skipping the
+    # materialized ``jnp.repeat`` halves the GEMM input traffic without
+    # changing any summation.
+    qf = q.astype(jnp.float32) * scale
+    qf = qf.reshape(B, Hkv, group, Q, D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bngqd,bnkd->bngqk", qf, kf)     # (B,Hkv,G,Q,S)
+    from repro.models.perf_flags import FLAGS, shard_hint
+    if FLAGS.shard_attention:
+        scores = shard_hint(scores, ("pod", "data"), None, None, None, None)
+    kpos = jnp.arange(S)[None, None, :]
+    eff = jnp.minimum(lengths[:, None] + jnp.arange(Q)[None, :], S)
+    mask = kpos < eff[:, :, None]                        # (B, Q, S)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.any(mask, -1)[:, None, None, :, None], probs, 0.0)
+    o = jnp.einsum("bngqk,bnkd->bngqd", probs, vf)
+    return o.reshape(B, Hq, Q, D).astype(dtype)
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, tables, lengths, *,
                                window: int = 0, scale: float | None = None):
     """Paged flash-decode oracle: gather pages through the block table, then

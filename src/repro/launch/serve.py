@@ -81,6 +81,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="decode sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="sample from the top-k logits (0 = full vocab)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft tokens per verify round "
+                         "(0 = plain decode; greedy only)")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="drafter suffix-match length")
+    ap.add_argument("--tbt-slo", type=float, default=0.0,
+                    help="TBT SLO seconds for attainment metrics (0 = off)")
     ap.add_argument("--batch-gap-s", type=float, default=120.0,
                     help="virtual seconds between batches (replay spacing)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
@@ -166,6 +173,12 @@ def cross_validate(args, model_cfg, dep: CrossDCDeployment, trace,
     sc = SystemConfig(1, k, k, dep.system.b_out, float(args.threshold),
                       kv_wire_compression=ratio)
     horizon = trace[-1][0] + args.batch_gap_s + 60.0
+    # price speculation with the LIVE run's measured acceptance: mean
+    # accepted draft tokens per verify dispatch (0.0 when spec is off, so
+    # the replay stays byte-identical to the pre-spec golden path)
+    rounds = sum(d.verify_rounds for d in dep.decoders.values())
+    accepted = sum(d.accepted_tokens for d in dep.decoders.values())
+    accept_rate = (accepted / rounds - 1.0) if rounds else 0.0
     sim = PrfaasSimulator(tm, sc, w, SimConfig(
         arrival_rate=1.0, sim_time=horizon, seed=args.seed,
         link_gbps=args.link_gbps, pd_clusters=k,
@@ -176,6 +189,7 @@ def cross_validate(args, model_cfg, dep: CrossDCDeployment, trace,
         # replay decode admission at the live engine's block-boundary
         # cadence (the RegionScheduler admits at step_block boundaries)
         decode_block_tokens=dep.cfg.decode_block_size,
+        spec_accept_rate=accept_rate, tbt_slo_s=dep.cfg.tbt_slo_s,
         pool_blocks=200_000, engine="event",
         # frozen: no control epochs -> per-home thresholds never move on
         # either side, so routing must agree exactly
@@ -210,6 +224,7 @@ def cross_validate(args, model_cfg, dep: CrossDCDeployment, trace,
         "egress_bytes": {"live": live_egress, "sim": sim_egress,
                          "ratio": sim_egress / max(live_egress, 1.0)},
         "kv_wire_compression": ratio,
+        "spec_accept_rate": accept_rate,
     }
 
 
@@ -236,6 +251,8 @@ def run_serve(args) -> dict:
         max_prefill_bucket=args.max_prefill_bucket,
         temperature=args.temperature, top_k=args.top_k,
         sample_seed=args.seed,
+        spec_k=args.spec_k, spec_ngram=args.spec_ngram,
+        tbt_slo_s=args.tbt_slo,
         calibration=args.calibration)
     model = Model(cfg, use_kernels=False)
     params = model.init(jax.random.PRNGKey(0))

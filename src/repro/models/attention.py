@@ -191,6 +191,50 @@ def gqa_decode_paged(p, x, spec: AttentionSpec, cache, lengths, tables, *,
     return y, {"k": kbuf, "v": vbuf}
 
 
+def gqa_decode_verify(p, x, spec: AttentionSpec, cache, lengths, *,
+                      use_kernels=True):
+    """Batched speculative verify for APPEND-ONLY full attention.
+
+    ``x``: (B, q, d) — the current token plus k drafted continuations,
+    embedded.  Computes all q positions in ONE batched pass instead of a
+    q-step scan: the f32 upcast and the two GEMM sweeps over the KV cache
+    are shared across positions, which is what makes verify cheaper than
+    q sequential decode steps.  Matches running ``gqa_decode`` q times up
+    to float reassociation in the batched attention GEMMs (greedy argmax
+    is stable under it — the engine tests pin token identity): (a)
+    projections / RoPE / norms are row-independent, (b) the attention ref
+    masks rows ``>= lengths+1+j`` with NEG_INF *before* softmax, so the
+    not-yet-"written" future rows this pass pre-writes contribute exactly
+    0 regardless of content.  Only valid for ``kind == "full"``
+    (SWA rings re-read overwritten rows once the window wraps — those
+    verify through the sequential scan path instead).
+
+    Writes past the capacity wall are dropped rather than wrapped
+    (sequential decode wraps modulo the buffer); both behaviours only
+    touch rows that no kept token ever reads, so emitted streams match.
+    """
+    B, Q, _ = x.shape
+    H, Hkv, D = spec.q_heads, spec.kv_heads, spec.head_dim
+    q = _split_heads(_lin(p["wq"], x), H, D)                 # (B,H,Q,D)
+    k = _split_heads(_lin(p["wk"], x), Hkv, D)
+    v = _split_heads(_lin(p["wv"], x), Hkv, D)
+    pos = lengths.astype(jnp.int32)[:, None] + jnp.arange(Q, dtype=jnp.int32)
+    if spec.rope:
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+
+    rows_b = jnp.arange(B)[:, None]
+    kbuf = cache["k"].at[rows_b, pos].set(
+        k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), mode="drop")
+    vbuf = cache["v"].at[rows_b, pos].set(
+        v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), mode="drop")
+    kt, vt = kbuf.transpose(0, 2, 1, 3), vbuf.transpose(0, 2, 1, 3)
+    o = ops.verify_attention(q, kt, vt, lengths + 1,
+                             use_kernel=use_kernels)         # (B,H,Q,D)
+    y = _merge_heads(o) @ p["wo"]["w"]
+    return y, {"k": kbuf, "v": vbuf}
+
+
 def gqa_forward_chunk(p, x, spec: AttentionSpec, positions, cache, *,
                       use_kernels=True):
     """Incremental prefill: x is a chunk at absolute ``positions``; ``cache``
@@ -438,3 +482,83 @@ def attention_decode_paged(p, x, spec: AttentionSpec, cache, lengths, tables,
     return gqa_decode_paged(p, x, spec, cache, lengths, tables,
                             page_tokens=page_tokens, capacity=capacity,
                             use_kernels=use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# speculative-verify ring rollback
+# ---------------------------------------------------------------------------
+#
+# Only SWA ring buffers need rollback after a rejected speculative suffix:
+# a ring write at slot (L + j) % w_buf clobbers the key that was living at
+# global position L + j - w_buf, which IS still in-window for subsequent
+# queries.  Append-only caches (full-attn, MLA latents, paged seq tables)
+# need nothing — a rejected position p is only ever read once the slot's
+# length exceeds p, and the length only gets there after the real write at
+# p lands first.  The helpers below save the q rows a verify dispatch will
+# overwrite and put the rejected ones back afterwards; accepted rows are
+# re-written with their own (identical) values so the scatter needs no mask.
+
+
+def _ring_write_slots(lengths, q, w_buf):
+    """(B, q) ring slots the q verify steps write: (L + j) % w_buf."""
+    steps = jnp.arange(q, dtype=jnp.int32)[None, :]
+    return jnp.mod(lengths.astype(jnp.int32)[:, None] + steps, w_buf)
+
+
+def ring_verify_save(cache, lengths, q):
+    """Dense SWA ring cache leaves (R, B, w_buf, Hkv, D): gather the rows
+    the next ``q`` decode steps will overwrite -> leaves (R, B, q, Hkv, D)."""
+    w_buf = cache["k"].shape[2]
+    idx = _ring_write_slots(lengths, q, w_buf)[None, :, :, None, None]
+    return {n: jnp.take_along_axis(v, idx, axis=2) for n, v in cache.items()}
+
+
+def ring_verify_restore(cache, saved, lengths, accept, q):
+    """Put back the saved rows wherever the verify step was rejected
+    (step j of a slot is rejected iff j > accept[b]); accepted rows are
+    written back with their current — identical — values."""
+    w_buf = cache["k"].shape[2]
+    idx = _ring_write_slots(lengths, q, w_buf)               # (B, q)
+    rej = jnp.arange(q, dtype=jnp.int32)[None, :] > accept[:, None]
+    rows = jnp.arange(idx.shape[0])[:, None]                 # (B, 1)
+    out = {}
+    for n, buf in cache.items():
+        cur = buf[:, rows, idx]                              # (R, B, q, Hkv, D)
+        vals = jnp.where(rej[None, :, :, None, None],
+                         saved[n].astype(buf.dtype), cur)
+        out[n] = buf.at[:, rows, idx].set(vals)
+    return out
+
+
+def _ring_phys_off(lengths, q, w_buf, ring_table, page_tokens):
+    """((B, q), (B, q)) physical page + in-page offset of the q ring writes.
+    Inactive slots' tables point at the sink page; duplicate sink indices
+    scatter garbage over garbage, which is fine."""
+    T = page_tokens
+    tbl = ring_table[:, :w_buf // T]
+    wpos = _ring_write_slots(lengths, q, w_buf)              # (B, q)
+    phys = jnp.take_along_axis(tbl, wpos // T, axis=1)
+    return phys, wpos % T
+
+
+def ring_verify_save_paged(cache, lengths, q, ring_table, *, page_tokens,
+                           capacity, window):
+    """Paged SWA pool leaves (R, Hkv, P, T, D): gather the q rows per slot
+    the verify dispatch will ring-write -> leaves (R, Hkv, B, q, D)."""
+    w_buf = min(window, capacity)
+    phys, off = _ring_phys_off(lengths, q, w_buf, ring_table, page_tokens)
+    return {n: v[:, :, phys, off] for n, v in cache.items()}
+
+
+def ring_verify_restore_paged(cache, saved, lengths, accept, q, ring_table, *,
+                              page_tokens, capacity, window):
+    w_buf = min(window, capacity)
+    phys, off = _ring_phys_off(lengths, q, w_buf, ring_table, page_tokens)
+    rej = jnp.arange(q, dtype=jnp.int32)[None, :] > accept[:, None]
+    out = {}
+    for n, buf in cache.items():
+        cur = buf[:, :, phys, off]                           # (R, Hkv, B, q, D)
+        vals = jnp.where(rej[None, None, :, :, None],
+                         saved[n].astype(buf.dtype), cur)
+        out[n] = buf.at[:, :, phys, off].set(vals)
+    return out

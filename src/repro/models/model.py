@@ -528,6 +528,204 @@ class Model:
         self._inference = False
         return logits, {"groups": new_caches}
 
+    # ------------------------------------------------- speculative verify
+
+    @property
+    def _verify_parallel(self) -> bool:
+        """True when every block is append-only full attention with a dense
+        FFN (no SWA rings, no O(1) mixer state, no cross/encoder/VLM) — the
+        shape where the batched one-pass verify scores q positions in a
+        single shared sweep of the KV cache and nothing needs rollback."""
+        cfg = self.cfg
+        if cfg.encoder_groups is not None or cfg.num_image_patches:
+            return False
+        for g in cfg.groups:
+            for b in g.blocks:
+                m = b.mixer
+                if not (isinstance(m, AttentionSpec) and m.kind == "full"
+                        and not m.is_cross and b.cross is None
+                        and b.ffn.kind == "dense"):
+                    return False
+        return True
+
+    def _decode_block_verify(self, spec: BlockSpec, p, x, cache, lengths):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, new_cache = attn_mod.gqa_decode_verify(
+            p["mixer"], h, spec.mixer, cache, lengths,
+            use_kernels=self.use_kernels)
+        x = x + y
+        x = x + apply_ffn(p["ffn"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                          spec.ffn)
+        return x, new_cache
+
+    def _decode_groups_verify(self, groups, params_groups, x, caches,
+                              lengths):
+        new_all = []
+        for g, gp, gc in zip(groups, params_groups, caches):
+            def body(x, xs, _g=g, _gp=gp):
+                rep_params, rep_caches = xs
+                new_caches = {}
+                for bi, bspec in enumerate(_g.blocks):
+                    p = (_gp["shared"][f"b{bi}"] if bspec.shared
+                         else rep_params[f"b{bi}"])
+                    x, c = self._decode_block_verify(
+                        bspec, p, x, rep_caches[f"b{bi}"], lengths)
+                    new_caches[f"b{bi}"] = c
+                return x, new_caches
+
+            x, new_caches = jax.lax.scan(body, x, (gp["stacked"], gc),
+                                         unroll=True if self.unroll else 1)
+            new_all.append(new_caches)
+        return x, new_all
+
+    def _ring_blocks(self, caches, fn):
+        """Save pass: apply ``fn(spec, leaves) -> saved_rows`` to every SWA
+        ring block's attention leaves (the only caches that need rollback
+        after a rejected speculative suffix); non-ring blocks map to None."""
+        out_groups = []
+        for g, gc in zip(self.cfg.groups, caches["groups"]):
+            ng = {}
+            for bi, b in enumerate(g.blocks):
+                c = gc[f"b{bi}"]
+                m = b.mixer
+                ring = (isinstance(m, AttentionSpec) and m.kind == "swa"
+                        and m.window > 0 and not m.is_cross)
+                if ring and b.cross is not None:
+                    ng[f"b{bi}"] = {"self": fn(m, c["self"])}
+                elif ring:
+                    ng[f"b{bi}"] = fn(m, c)
+                else:
+                    ng[f"b{bi}"] = None
+            out_groups.append(ng)
+        return {"groups": out_groups}
+
+    @staticmethod
+    def _is_attn_leaf(path) -> bool:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return name in ("k", "v", "ckv", "kpe")
+
+    def decode_verify(self, params, seq, caches, lengths, tables=None,
+                      page_tokens=None, capacity=None):
+        """Score ``q = k + 1`` candidate positions per slot in ONE dispatch.
+
+        ``seq``: (B, q) int32 — column 0 is each slot's current (already
+        accepted, not yet processed) token, columns 1..k the drafted
+        continuation.  Two strategies, both keeping greedy output
+        token-identical to the plain one-token-per-dispatch path:
+        append-only full-attn archs (dense layout) take a batched ONE-PASS
+        verify over all q positions (``gqa_decode_verify`` — the perf win;
+        float-equivalent attention, argmax-stable); everything else (SWA
+        rings, linear/hybrid mixers, paged tables) runs ``q`` steps of the
+        EXACT ``decode_step`` under a ``lax.scan``, bit-identical by
+        construction.  (ISSUE 10 suggested
+        reusing the chunked-prefill ``q_offset`` attention; that path uses
+        un-absorbed MLA chunk math whose floating-point order differs from
+        absorbed decode, which would break the greedy token-identity
+        acceptance criterion — scanning the decode step keeps it exact.)
+
+        Returns ``(logits (B, q, V) f32, caches after q writes, pending)``
+        where ``pending`` carries what ``commit_verify`` needs to roll back
+        the rejected suffix: pre-verify SWA ring rows (append-only caches
+        need no rollback — a rejected position is never read before the real
+        write lands there) and per-step snapshots of every O(1) mixer state
+        (linear/conv/sLSTM), stacked along a leading (q,) axis.
+        """
+        q = seq.shape[1]
+        if tables is None and self._verify_parallel:
+            # Append-only full-attn arch: one batched pass over all q
+            # positions (see ``gqa_decode_verify`` for the masking and
+            # numerics argument); nothing to roll back, so ``pending`` is
+            # empty and ``commit_verify`` is a no-op.
+            self._inference = True
+            x = self._embed_tokens(params, seq)              # (B,q,d)
+            x, new_groups = self._decode_groups_verify(
+                self.cfg.groups, params["groups"], x, caches["groups"],
+                lengths)
+            logits = self._logits(params, x)                 # (B,q,V) f32
+            self._inference = False
+            return logits, {"groups": new_groups}, {"rings": None,
+                                                    "snaps": None}
+        if tables is not None:
+            saved = self._ring_blocks(
+                caches, lambda m, c: attn_mod.ring_verify_save_paged(
+                    c, lengths, q, tables["ring"], page_tokens=page_tokens,
+                    capacity=capacity, window=m.window))
+        else:
+            saved = self._ring_blocks(
+                caches, lambda m, c: attn_mod.ring_verify_save(
+                    c, lengths, q))
+
+        def snap_state(path, leaf):
+            return jnp.zeros((), leaf.dtype) if self._is_attn_leaf(path) \
+                else leaf
+
+        def body(carry, tok):
+            cc, lens = carry
+            logits, cc = self.decode_step(params, tok, cc, lens,
+                                          tables=tables,
+                                          page_tokens=page_tokens,
+                                          capacity=capacity)
+            snap = jax.tree_util.tree_map_with_path(snap_state, cc)
+            return (cc, lens + 1), (logits, snap)
+
+        (caches, _), (logits, snaps) = jax.lax.scan(
+            body, (caches, lengths), jnp.swapaxes(seq, 0, 1))
+        pending = {"rings": saved, "snaps": snaps}
+        return jnp.swapaxes(logits, 0, 1), caches, pending
+
+    def commit_verify(self, caches, pending, lengths, accept, q,
+                      tables=None, page_tokens=None, capacity=None):
+        """Finalize a verify dispatch: roll back the SWA ring rows the
+        rejected steps overwrote and rewind every O(1) mixer state to its
+        post-``accept[b]``-step snapshot (step j is accepted iff
+        ``j <= accept[b]``).  ``lengths`` must be the PRE-verify lengths the
+        dispatch ran with."""
+        if pending["snaps"] is None:     # parallel append-only verify path
+            return caches
+        caches = self._restore_rings(caches, pending["rings"], lengths,
+                                     accept, q, tables=tables,
+                                     page_tokens=page_tokens,
+                                     capacity=capacity)
+
+        def pick(path, leaf, snap):
+            if self._is_attn_leaf(path):
+                return leaf
+            idx = accept.reshape((1, 1, -1) + (1,) * (snap.ndim - 3))
+            return jnp.take_along_axis(snap, idx, axis=0)[0]
+
+        return jax.tree_util.tree_map_with_path(pick, caches,
+                                                pending["snaps"])
+
+    def _restore_rings(self, caches, saved, lengths, accept, q, tables=None,
+                       page_tokens=None, capacity=None):
+        out_groups = []
+        for g, gc, sg in zip(self.cfg.groups, caches["groups"],
+                             saved["groups"]):
+            ng = {}
+            for bi, b in enumerate(g.blocks):
+                c, s = gc[f"b{bi}"], sg[f"b{bi}"]
+                m = b.mixer
+                ring = (isinstance(m, AttentionSpec) and m.kind == "swa"
+                        and m.window > 0 and not m.is_cross)
+                if not ring:
+                    ng[f"b{bi}"] = c
+                    continue
+                own = c["self"] if b.cross is not None else c
+                sown = s["self"] if b.cross is not None else s
+                if tables is not None:
+                    new = attn_mod.ring_verify_restore_paged(
+                        own, sown, lengths, accept, q, tables["ring"],
+                        page_tokens=page_tokens, capacity=capacity,
+                        window=m.window)
+                else:
+                    new = attn_mod.ring_verify_restore(own, sown, lengths,
+                                                       accept, q)
+                ng[f"b{bi}"] = ({"self": new, "cross": c["cross"]}
+                                if b.cross is not None else new)
+            out_groups.append(ng)
+        return {"groups": out_groups}
+
     # ------------------------------------------------------- cache builders
 
     def init_cache(self, batch_size: int, capacity: int,

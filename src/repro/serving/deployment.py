@@ -106,6 +106,9 @@ class DeploymentConfig:
     temperature: float = 0.0           # 0 = greedy (bit-identical default)
     top_k: int = 0                     # 0 = full vocab when sampling
     sample_seed: int = 0               # decode sampling PRNG seed
+    spec_k: int = 0                    # speculative draft tokens per round
+    spec_ngram: int = 2                # drafter suffix-match length
+    tbt_slo_s: float = 0.0             # TBT SLO for attainment (0 = off)
     block_tokens: int = 16
     pool_blocks: int = 4096
     # paged device KV: region decode engines use BlockPool pages as the
@@ -158,7 +161,8 @@ class CrossDCDeployment:
                                temperature=cfg.temperature, top_k=cfg.top_k,
                                seed=cfg.sample_seed, paged=cfg.paged_kv,
                                pool=pools.get(name),
-                               page_tokens=cfg.block_tokens)
+                               page_tokens=cfg.block_tokens,
+                               spec_k=cfg.spec_k, spec_ngram=cfg.spec_ngram)
             for name in self.pd_names}
         # one continuously-batched scheduler loop per region: it owns the
         # region's prefill queue and decode slots together; every finished
@@ -429,12 +433,33 @@ class CrossDCDeployment:
             return self._wire_raw / self._wire_quant
         return self._seed_ratio
 
+    @staticmethod
+    def _tbt_stats(tbt: List[float], slo_s: float) -> dict:
+        """Measured per-request mean time-between-tokens: percentiles plus
+        SLO attainment (fraction of requests at/under ``slo_s``; 1.0 when
+        the SLO is unset or nothing finished yet)."""
+        if not tbt:
+            return {"tbt_mean_s": 0.0, "tbt_p50_s": 0.0, "tbt_p90_s": 0.0,
+                    "tbt_p99_s": 0.0, "tbt_slo_s": slo_s,
+                    "tbt_attainment": 1.0}
+        arr = np.asarray(tbt)
+        return {
+            "tbt_mean_s": float(arr.mean()),
+            "tbt_p50_s": float(np.percentile(arr, 50)),
+            "tbt_p90_s": float(np.percentile(arr, 90)),
+            "tbt_p99_s": float(np.percentile(arr, 99)),
+            "tbt_slo_s": slo_s,
+            "tbt_attainment": (float((arr <= slo_s).mean())
+                               if slo_s > 0 else 1.0),
+        }
+
     def metrics(self) -> dict:
         done = self.completed
         ttft = [r.ttft_s for r in done]
         per_region = {}
         for name in self.pd_names:
             rs = [r for r in done if r.home == name]
+            dec = self.decoders[name]
             per_region[name] = {
                 "requests": len(rs),
                 "offloaded": sum(1 for r in rs if r.route == PRFAAS),
@@ -446,6 +471,9 @@ class CrossDCDeployment:
                 "occupancy": self.schedulers[name].occupancy(),
                 "goodput_tok_s": self.schedulers[name].goodput_tok_s(),
                 "max_admit_wait": self.schedulers[name].max_admit_wait,
+                "accepted_tokens_per_dispatch":
+                    dec.accepted_tokens_per_dispatch,
+                **self._tbt_stats(dec.tbt_s, self.cfg.tbt_slo_s),
             }
             if self.cfg.paged_kv:
                 dec = self.decoders[name]
@@ -462,6 +490,9 @@ class CrossDCDeployment:
         busy = sum(d.slot_busy_s for d in self.decoders.values())
         span = sum(self.cfg.decode_slots * s.wall_s
                    for s in self.schedulers.values())
+        all_tbt = [t for d in self.decoders.values() for t in d.tbt_s]
+        rounds = sum(d.verify_rounds for d in self.decoders.values())
+        accepted = sum(d.accepted_tokens for d in self.decoders.values())
         return {
             "requests": len(done),
             "offloaded": sum(1 for r in done if r.route == PRFAAS),
@@ -482,6 +513,9 @@ class CrossDCDeployment:
             "occupancy": busy / span if span > 0 else 0.0,
             "goodput_tok_s": sum(s.goodput_tok_s()
                                  for s in self.schedulers.values()),
+            "accepted_tokens_per_dispatch": (accepted / rounds if rounds
+                                             else 1.0),
+            **self._tbt_stats(all_tbt, self.cfg.tbt_slo_s),
             "wire_compression": self.measured_compression(),
             "clusters": per_region,
             "links": self.topology.pair_stats(),

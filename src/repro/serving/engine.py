@@ -218,6 +218,8 @@ class PrefillEngine:
                 self.prefill(toks, np.full((b,), l, np.int32))
         if decode is not None and getattr(decode, "paged", False):
             decode.warmup_admission(batch_sizes, lengths)
+        if decode is not None:
+            decode.warmup_block()
 
     def _pad(self, tokens: np.ndarray, lengths):
         """Pad a (B, S) prompt batch to its schedulable shape: pow2 length
@@ -402,7 +404,8 @@ class DecodeEngine:
     def __init__(self, model: Model, params, num_slots: int, capacity: int,
                  block_size: int = 8, *, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0, paged: bool = False,
-                 pool: Optional[BlockPool] = None, page_tokens: int = 16):
+                 pool: Optional[BlockPool] = None, page_tokens: int = 16,
+                 spec_k: int = 0, spec_ngram: int = 2):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -411,8 +414,28 @@ class DecodeEngine:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self._key = jax.random.PRNGKey(int(seed))
-        self._blocks = 0               # step_block dispatch counter (RNG)
+        self._blocks = 0               # step_block dispatch counter
+        self._steps = 0                # tokens-emitted counter (RNG fold_in)
         self.paged = bool(paged)
+        self.spec_k = max(0, int(spec_k))
+        self.spec_ngram = max(1, int(spec_ngram))
+        if self.spec_k and self.temperature > 0.0:
+            raise ValueError("speculative decode verifies the longest "
+                             "greedy-matching prefix; it requires "
+                             "temperature=0 (got spec_k "
+                             f"{self.spec_k}, temperature {temperature})")
+        if self.spec_k:
+            # SWA ring rollback restores the q = spec_k + 1 rows a verify
+            # dispatch overwrites; the per-slot row indices are distinct
+            # only while q <= w_buf
+            w_min = min([min(b.mixer.window, capacity)
+                         for g in model.cfg.groups for b in g.blocks
+                         if getattr(b.mixer, "kind", "") == "swa"
+                         and getattr(b.mixer, "window", 0) > 0]
+                        or [capacity])
+            if self.spec_k + 1 > w_min:
+                raise ValueError(f"spec_k + 1 = {self.spec_k + 1} exceeds "
+                                 f"the smallest SWA ring buffer ({w_min})")
         if self.paged:
             if pool is None:
                 # standalone default: same token headroom the dense layout
@@ -458,6 +481,22 @@ class DecodeEngine:
             self.pool = pool
             self.caches = jax.jit(
                 lambda: model.init_cache(num_slots, capacity))()
+            self._warming = False
+        # speculative decode: per-slot token history (prompt + emitted) for
+        # the device-resident n-gram drafter, plus accept telemetry
+        self._hist = np.zeros((num_slots, capacity), np.int32)
+        self.verify_rounds = 0
+        self.accepted_tokens = 0
+        if self.spec_k:
+            self._block_spec = jax.jit(self._block_spec_impl,
+                                       donate_argnums=(2,))
+            if self.paged:
+                self._block_spec_paged = jax.jit(self._block_spec_paged_impl,
+                                                 donate_argnums=(2,))
+        # per-request time-between-tokens: wall seconds per emitted token
+        # after the first, recorded at retirement
+        self._admit_wall: Dict[int, float] = {}
+        self.tbt_s: List[float] = []
         self.lengths = np.zeros((num_slots,), np.int32)
         self.tokens = np.zeros((num_slots,), np.int32)
         self.active = np.zeros((num_slots,), bool)
@@ -658,6 +697,7 @@ class DecodeEngine:
             self.budget[slot] = req.max_new_tokens
             self.slot_req[slot] = req.rid
             self.outputs[req.rid] = Response(req.rid, [int(first)])
+            self._seed_slot_history(slot, req, first, L)
             if self.on_admit is not None and not self._warming:
                 snap = ({"ring": payload["ring"], "state": payload["state"]}
                         if L % T == 0 else None)
@@ -672,9 +712,10 @@ class DecodeEngine:
         if not lay.seq_cols:
             return
         T = lay.page_tokens
+        # speculative blocks advance up to spec_k + 1 tokens per round
+        stride = self.block_size * (self.spec_k + 1)
         for slot in np.where(self.active)[0]:
-            end = min(int(self.lengths[slot]) + self.block_size,
-                      self.capacity)
+            end = min(int(self.lengths[slot]) + stride, self.capacity)
             need = -(-end // T)
             have = len(self._seq_pages[slot])
             if need <= have:
@@ -688,23 +729,24 @@ class DecodeEngine:
             self._seq_pages[slot].extend(ids)
             self._slot_owned[slot].extend(ids)
 
-    def _block_paged_impl(self, params, tokens, caches, lengths, key, tables):
+    def _block_paged_impl(self, params, tokens, caches, lengths, key, step0,
+                          tables):
         """Paged twin of ``_block_impl``: the block tables ride into every
         ``decode_step`` (page geometry is closure-static)."""
         lay = self._layout
 
-        def body(carry, _):
-            toks, caches, lens, key = carry
-            key, sub = jax.random.split(key)
+        def body(carry, i):
+            toks, caches, lens = carry
+            sub = jax.random.fold_in(key, step0 + i)
             logits, caches = self.model.decode_step(
                 params, toks, caches, lens, tables=tables,
                 page_tokens=lay.page_tokens, capacity=self.capacity)
             nxt = self._select(logits, sub)
-            return (nxt, caches, lens + 1, key), nxt
+            return (nxt, caches, lens + 1), nxt
 
-        (_, caches, _, _), toks = jax.lax.scan(
-            body, (tokens, caches, lengths, key), None,
-            length=self.block_size)
+        (_, caches, _), toks = jax.lax.scan(
+            body, (tokens, caches, lengths),
+            jnp.arange(self.block_size, dtype=jnp.int32))
         return toks, caches
 
     def warmup_admission(self, batch_sizes: Sequence[int],
@@ -787,7 +829,20 @@ class DecodeEngine:
             self.budget[slot] = req.max_new_tokens
             self.slot_req[slot] = req.rid
             self.outputs[req.rid] = Response(req.rid, [int(first_token)])
+            self._seed_slot_history(slot, req, first_token, prompt_len)
         return n
+
+    def _seed_slot_history(self, slot: int, req: Request, first_token: int,
+                           prompt_len: int):
+        """Drafter history (prompt + first token) and TBT admission stamp."""
+        if self.spec_k:
+            self._hist[slot, :] = 0
+            L = min(prompt_len, self._hist.shape[1])
+            self._hist[slot, :L] = np.asarray(req.tokens[:L], np.int32)
+            if prompt_len < self._hist.shape[1]:
+                self._hist[slot, prompt_len] = first_token
+        if not self._warming:
+            self._admit_wall[req.rid] = time.perf_counter()
 
     # ----------------------------------------------------------------- step
     def _retire(self, slot: int, force_truncate: bool = False):
@@ -800,6 +855,11 @@ class DecodeEngine:
                                        and self.budget[slot] > 0)
         resp.truncated = bool(truncated)
         self.truncations += int(truncated)
+        t_admit = self._admit_wall.pop(rid, None)
+        if t_admit is not None and not self._warming:
+            n_tok = len(resp.output_tokens)
+            self.tbt_s.append((time.perf_counter() - t_admit)
+                              / max(1, n_tok - 1))
         self.active[slot] = False
         self.slot_req[slot] = None
         self._free.append(slot)
@@ -858,21 +918,124 @@ class DecodeEngine:
             logits = jnp.where(logits < kth, -jnp.inf, logits)
         return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
-    def _block_impl(self, params, tokens, caches, lengths, key):
-        """``block_size`` decode steps fully on-device; the RNG key rides
-        the scan carry, split once per step."""
-        def body(carry, _):
-            toks, caches, lens, key = carry
-            key, sub = jax.random.split(key)
+    def _block_impl(self, params, tokens, caches, lengths, key, step0):
+        """``block_size`` decode steps fully on-device.  The sampling key
+        for scan step ``i`` is ``fold_in(key, step0 + i)`` — indexed by
+        tokens emitted, not by dispatch, so a sampled stream is reproducible
+        no matter how the scheduler partitions it into blocks (and so the
+        variable-stride speculative accounting can share the counter)."""
+        def body(carry, i):
+            toks, caches, lens = carry
+            sub = jax.random.fold_in(key, step0 + i)
             logits, caches = self.model.decode_step(params, toks, caches,
                                                     lens)
             nxt = self._select(logits, sub)
-            return (nxt, caches, lens + 1, key), nxt
+            return (nxt, caches, lens + 1), nxt
 
-        (_, caches, _, _), toks = jax.lax.scan(
-            body, (tokens, caches, lengths, key), None,
-            length=self.block_size)
+        (_, caches, _), toks = jax.lax.scan(
+            body, (tokens, caches, lengths),
+            jnp.arange(self.block_size, dtype=jnp.int32))
         return toks, caches
+
+    # --------------------------------------------------- speculative decode
+    def _draft(self, hist, lens):
+        """n-gram / prompt-lookup drafter, fully on-device: propose
+        ``spec_k`` tokens per slot by suffix-matching the last ``spec_ngram``
+        tokens of ``hist[b, :lens[b]+1]`` (prompt + everything emitted)
+        against every earlier position and replaying what followed the most
+        recent match.  No second model — drafts are just gathered history.
+        Slots without a match (or reading past their frontier) propose
+        whatever lies there; a wrong draft only costs its rejection."""
+        n, k = self.spec_ngram, self.spec_k
+        B, C = hist.shape
+        pos = jnp.arange(C, dtype=jnp.int32)[None, :]
+        ok = (pos >= n - 1) & (pos < lens[:, None])
+        for d in range(n):
+            shifted = hist if d == 0 else \
+                jnp.pad(hist, ((0, 0), (d, 0)))[:, :C]
+            tgt = jnp.take_along_axis(
+                hist, jnp.clip(lens[:, None] - d, 0, C - 1), axis=1)
+            ok &= (shifted == tgt)
+        j = jnp.max(jnp.where(ok, pos, -1), axis=1)      # latest match or -1
+        cols = jnp.clip(j[:, None] + 1 + jnp.arange(k, dtype=jnp.int32),
+                        0, C - 1)
+        return jnp.take_along_axis(hist, cols, axis=1)   # (B, k)
+
+    def _spec_round(self, params, toks, caches, lens, hist, tables=None):
+        """One draft -> verify -> accept -> commit round for every slot.
+        Greedy acceptance: step j's prediction is compared against draft j;
+        ``accept[b]`` = length of the matching prefix, and the (always
+        correct) prediction after the last accepted draft rides along as a
+        bonus token — so every round emits accept+1 tokens, ≥ 1."""
+        k = self.spec_k
+        q = k + 1
+        kw = {}
+        if tables is not None:
+            kw = dict(tables=tables, page_tokens=self._layout.page_tokens,
+                      capacity=self.capacity)
+        drafts = self._draft(hist, lens)
+        seq = jnp.concatenate([toks[:, None], drafts], axis=1)
+        logits, caches, pending = self.model.decode_verify(
+            params, seq, caches, lens, **kw)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (B, q)
+        match = (preds[:, :k] == drafts).astype(jnp.int32)
+        accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)     # (B,)
+        caches = self.model.commit_verify(caches, pending, lens, accept, q,
+                                          **kw)
+        nxt = jnp.take_along_axis(preds, accept[:, None], axis=1)[:, 0]
+        # history frontier: positions lens+1+j take preds[j] for accepted j
+        # (rejected columns route out of range and drop), keeping the
+        # invariant hist[b, :lens[b]+1] == prompt + accepted stream
+        B, C = hist.shape
+        step = jnp.arange(q, dtype=jnp.int32)[None, :]
+        cols = jnp.where(step <= accept[:, None],
+                         lens[:, None] + 1 + step, C)
+        hist = hist.at[jnp.arange(B)[:, None], cols].set(preds, mode="drop")
+        return caches, lens + accept + 1, hist, nxt, preds, accept
+
+    def _block_spec_impl(self, params, tokens, caches, lengths, hist):
+        """Speculative twin of ``_block_impl``: ``block_size`` verify rounds
+        on-device, each emitting a VARIABLE 1..spec_k+1 tokens per slot.
+        The accept-counts thread the scan carry (lengths advance by
+        accept+1), and the stacked (round, slot, q) predictions + accepts go
+        back to the host for variable-stride budget/retire accounting."""
+        def body(carry, _):
+            toks, caches, lens, hist = carry
+            caches, lens, hist, nxt, preds, accept = self._spec_round(
+                params, toks, caches, lens, hist)
+            return (nxt, caches, lens, hist), (preds, accept)
+
+        (_, caches, _, _), (preds, accepts) = jax.lax.scan(
+            body, (tokens, caches, lengths, hist), None,
+            length=self.block_size)
+        return preds, accepts, caches
+
+    def _block_spec_paged_impl(self, params, tokens, caches, lengths, hist,
+                               tables):
+        def body(carry, _):
+            toks, caches, lens, hist = carry
+            caches, lens, hist, nxt, preds, accept = self._spec_round(
+                params, toks, caches, lens, hist, tables=tables)
+            return (nxt, caches, lens, hist), (preds, accept)
+
+        (_, caches, _, _), (preds, accepts) = jax.lax.scan(
+            body, (tokens, caches, lengths, hist), None,
+            length=self.block_size)
+        return preds, accepts, caches
+
+    @property
+    def accepted_tokens_per_dispatch(self) -> float:
+        """Mean tokens emitted per verify round (1.0 for the plain path)."""
+        if self.verify_rounds == 0:
+            return 1.0
+        return self.accepted_tokens / self.verify_rounds
+
+    @property
+    def spec_compiles(self) -> Optional[int]:
+        if not self.spec_k:
+            return 0
+        return _jit_cache_size(self._block_spec_paged if self.paged
+                               else self._block_spec)
 
     @property
     def block_compiles(self) -> Optional[int]:
@@ -893,19 +1056,23 @@ class DecodeEngine:
             self._ensure_pages()          # may retire page-starved slots
             if not self.active.any():
                 return 0
+        if self.spec_k:
+            return self._step_block_spec()
         t0 = time.perf_counter()
-        key = jax.random.fold_in(self._key, self._blocks)
+        key = self._key
+        step0 = jnp.int32(self._steps)
         self._blocks += 1
+        self._steps += self.block_size
         if self.paged:
             tables = {"seq": jnp.asarray(self.table_seq),
                       "ring": jnp.asarray(self.table_ring)}
             toks, self.caches = self._block_paged(
                 self.params, jnp.asarray(self.tokens),
-                self.caches, jnp.asarray(self.lengths), key, tables)
+                self.caches, jnp.asarray(self.lengths), key, step0, tables)
         else:
             toks, self.caches = self._block(
                 self.params, jnp.asarray(self.tokens),
-                self.caches, jnp.asarray(self.lengths), key)
+                self.caches, jnp.asarray(self.lengths), key, step0)
         toks = np.asarray(toks)                       # (block, num_slots)
         idx = np.where(self.active)[0]
         wall = time.perf_counter() - t0
@@ -931,6 +1098,86 @@ class DecodeEngine:
             if done[j]:
                 self._retire(i)
         return int(self.active.sum())
+
+    def _step_block_spec(self):
+        """Speculative ``step_block``: ``block_size`` draft/verify rounds in
+        ONE dispatch, each emitting 1..spec_k+1 tokens per slot.  The host
+        unpacks the per-round (predictions, accepts) into variable-stride
+        budget/length/retire accounting.  A slot whose budget or capacity
+        wall lands mid-stream takes only its valid prefix and retires, so
+        the device-side history/length frontier stays authoritative exactly
+        for the slots that continue."""
+        t0 = time.perf_counter()
+        self._blocks += 1
+        toks = jnp.asarray(self.tokens)
+        lens = jnp.asarray(self.lengths)
+        hist = jnp.asarray(self._hist)
+        if self.paged:
+            tables = {"seq": jnp.asarray(self.table_seq),
+                      "ring": jnp.asarray(self.table_ring)}
+            preds, accepts, self.caches = self._block_spec_paged(
+                self.params, toks, self.caches, lens, hist, tables)
+        else:
+            preds, accepts, self.caches = self._block_spec(
+                self.params, toks, self.caches, lens, hist)
+        preds = np.asarray(preds)        # (rounds, num_slots, spec_k + 1)
+        accepts = np.asarray(accepts)    # (rounds, num_slots)
+        idx = np.where(self.active)[0]
+        wall = time.perf_counter() - t0
+        self.decode_wall_s += wall
+        self.slot_busy_s += len(idx) * wall
+        self.verify_rounds += int(accepts[:, idx].size)
+        self.accepted_tokens += int((accepts[:, idx] + 1).sum())
+        for i in idx:
+            stream = np.concatenate(
+                [preds[r, i, :accepts[r, i] + 1]
+                 for r in range(preds.shape[0])])
+            valid = int(np.clip(
+                min(self.budget[i], self.capacity - 1 - self.lengths[i]),
+                1, len(stream)))
+            take = stream[:valid]
+            self.outputs[self.slot_req[i]].output_tokens.extend(
+                int(t) for t in take)
+            L = int(self.lengths[i])
+            hi = min(L + 1 + valid, self._hist.shape[1])
+            self._hist[i, L + 1:hi] = take[:max(0, hi - (L + 1))]
+            self.tokens[i] = take[-1]
+            self.lengths[i] += valid
+            self.budget[i] -= valid
+            self.tokens_out += valid
+            if self.budget[i] <= 0 or self.lengths[i] >= self.capacity - 1:
+                self._retire(int(i))
+        return int(self.active.sum())
+
+    def warmup_block(self):
+        """Precompile the decode block program(s) on the live (zeroed or
+        garbage) buffers: one throwaway dispatch with every slot inactive.
+        Dense garbage writes land in regions a later admission fully
+        rewrites; paged tables all point at the sink page.  After this the
+        hot path never compiles again (``block_compiles`` /
+        ``spec_compiles`` stay at 1)."""
+        toks = jnp.zeros((self.num_slots,), jnp.int32)
+        lens = jnp.zeros((self.num_slots,), jnp.int32)
+        if self.paged:
+            tables = {"seq": jnp.asarray(self.table_seq),
+                      "ring": jnp.asarray(self.table_ring)}
+            if self.spec_k:
+                _, _, self.caches = self._block_spec_paged(
+                    self.params, toks, self.caches, lens,
+                    jnp.asarray(self._hist), tables)
+            else:
+                _, self.caches = self._block_paged(
+                    self.params, toks, self.caches, lens, self._key,
+                    jnp.int32(0), tables)
+        else:
+            if self.spec_k:
+                _, _, self.caches = self._block_spec(
+                    self.params, toks, self.caches, lens,
+                    jnp.asarray(self._hist))
+            else:
+                _, self.caches = self._block(
+                    self.params, toks, self.caches, lens, self._key,
+                    jnp.int32(0))
 
     def run_until_drained(self, max_steps: int = 10_000):
         """Drain all active streams via ``step_block`` (``max_steps`` counts
@@ -1120,7 +1367,9 @@ class RegionScheduler:
                 "occupancy": self.occupancy(),
                 "goodput_tok_s": self.goodput_tok_s(),
                 "tokens_out": self.decode.tokens_out,
-                "truncations": self.decode.truncations}
+                "truncations": self.decode.truncations,
+                "accepted_tokens_per_dispatch":
+                    self.decode.accepted_tokens_per_dispatch}
 
 
 def slice_request_cache(caches, idx: int):

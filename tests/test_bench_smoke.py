@@ -100,6 +100,20 @@ def test_bench_smoke_runs_clean(tmp_path):
     # must also be recompile-free after warmup_admission
     assert paged["admission"]["wire_admit_recompiles_after_warmup"] == 0
     assert paged["admission"]["wire_admit_us"] > 0
+    # speculative decode (PR 10): the bench point must exist, accept more
+    # than one token per verify dispatch, and beat the plain k=0 path at
+    # 16 slots on the continuous scheduler (token-identical by assertion
+    # inside the bench itself)
+    assert "spec_decode_speedup_at_16_slots" in eng
+    assert "accepted_tokens_per_dispatch" in eng
+    spec = eng["speculative"]
+    assert spec["accepted_tokens_per_dispatch"] > 1.0
+    assert spec["best_k"] >= 2
+    assert spec["sweep"][f"k{spec['best_k']}"]["tok_s"] >= \
+        spec["sweep"]["k0"]["tok_s"]
+    for key, point in spec["sweep"].items():
+        if key != "k0":
+            assert point["verify_compiles"] == 1, (key, point)
     # fused serving-path kernels (PR 8) land interpret-mode sweep points
     ker = json.loads((tmp_path / "BENCH_kernel.json").read_text())
     pts = ker["interpret_points"]

@@ -1,0 +1,181 @@
+"""Scenario-grid cost accounting + speculative/TBT simulator plumbing.
+
+Fast, jit-free tests for the PR 10 satellites:
+
+  * ``_fleet_cost_hr`` time-INTEGRATES each autoscaler's piecewise-constant
+    (n_p, n_d) trajectory over its conversion epochs — charging the final
+    allocation for the whole horizon under-bills runs that scaled down and
+    over-bills runs that scaled up (the old bug);
+  * ``SimConfig.spec_accept_rate`` scales the decode slot hold time by
+    1 / (1 + rate) so ``--cross-validate`` can price speculation, and
+    rate = 0 keeps the golden pre-spec path exact;
+  * both simulator engines emit TBT percentiles + SLO attainment.
+"""
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from benchmarks.scenario_grid import PRICE_HR, _fleet_cost_hr
+from repro.core import (PrfaasSimulator, SimConfig, SystemConfig,
+                        ThroughputModel, Workload, paper_h20_profile,
+                        paper_h200_profile)
+
+HORIZON = 3600.0
+
+
+def _sc(n_p, n_d, n_prfaas=1):
+    return SimpleNamespace(n_prfaas=n_prfaas, n_p=n_p, n_d=n_d)
+
+
+def _cost(n_p, n_d):
+    return n_p * PRICE_HR["prefill"] + n_d * PRICE_HR["decode"]
+
+
+class TestFleetCostIntegration:
+    def test_fixed_point_charges_configured_allocation(self):
+        sim = SimpleNamespace(autoscalers={})
+        got = _fleet_cost_hr(sim, _sc(4, 4), HORIZON)
+        assert got == pytest.approx(PRICE_HR["prfaas"] + _cost(4, 4))
+
+    def test_midpoint_conversion_integrates_both_segments(self):
+        """One P->D conversion at horizon/2: the run must be billed the
+        time-weighted mean of the two allocations — strictly between
+        final-forever and initial-forever."""
+        a = SimpleNamespace(initial=(4, 4),
+                            conversions=[(HORIZON / 2, 3, 5)])
+        sim = SimpleNamespace(autoscalers={"pd": a})
+        got = _fleet_cost_hr(sim, _sc(4, 4), HORIZON)
+        base = PRICE_HR["prfaas"]
+        initial_forever = base + _cost(4, 4)           # 70 + 392
+        final_forever = base + _cost(3, 5)             # 70 + 350
+        expected = base + (_cost(4, 4) + _cost(3, 5)) / 2.0
+        assert got == pytest.approx(expected)          # 70 + 371
+        assert final_forever < got < initial_forever
+
+    def test_no_conversions_bills_initial_allocation(self):
+        """An autoscaler that never fired bills its initial allocation for
+        the whole horizon (the old final-allocation code agreed here only
+        by accident)."""
+        a = SimpleNamespace(initial=(4, 4), conversions=[])
+        sim = SimpleNamespace(autoscalers={"pd": a})
+        got = _fleet_cost_hr(sim, _sc(4, 4), HORIZON)
+        assert got == pytest.approx(PRICE_HR["prfaas"] + _cost(4, 4))
+
+    def test_late_scale_down_bills_mostly_initial(self):
+        """Conversion at 90% of the horizon: the integrated bill sits 90%
+        of the way toward the initial allocation, not at the final one."""
+        a = SimpleNamespace(initial=(4, 4),
+                            conversions=[(0.9 * HORIZON, 3, 5)])
+        sim = SimpleNamespace(autoscalers={"pd": a})
+        got = _fleet_cost_hr(sim, _sc(4, 4), HORIZON)
+        expected = (PRICE_HR["prfaas"]
+                    + 0.9 * _cost(4, 4) + 0.1 * _cost(3, 5))
+        assert got == pytest.approx(expected)
+
+    def test_multi_region_sums_per_autoscaler_trajectories(self):
+        a1 = SimpleNamespace(initial=(2, 2),
+                             conversions=[(HORIZON / 4, 1, 3)])
+        a2 = SimpleNamespace(initial=(3, 1), conversions=[])
+        sim = SimpleNamespace(autoscalers={"pd0": a1, "pd1": a2})
+        got = _fleet_cost_hr(sim, _sc(5, 3), HORIZON)
+        expected = (PRICE_HR["prfaas"]
+                    + 0.25 * _cost(2, 2) + 0.75 * _cost(1, 3)
+                    + _cost(3, 1))
+        assert got == pytest.approx(expected)
+
+
+class TestSpecAcceptRateServiceTime:
+    def _stub(self, rate, output_len=64, t_decode=0.01, block=0):
+        return SimpleNamespace(
+            w=SimpleNamespace(output_len=output_len, t_decode=t_decode),
+            sim=SimpleNamespace(decode_block_tokens=block,
+                                spec_accept_rate=rate))
+
+    def test_rate_zero_is_exact_pre_spec_path(self):
+        plain = PrfaasSimulator._decode_service_time(self._stub(0.0))
+        assert plain == 64 * 0.01          # bitwise: no division applied
+
+    def test_rate_scales_hold_time_harmonically(self):
+        """accept_rate r => (1 + r) tokens per dispatch: the slot hold
+        time shrinks by exactly 1 / (1 + r)."""
+        plain = PrfaasSimulator._decode_service_time(self._stub(0.0))
+        for r in (0.5, 0.73, 1.0, 2.0):
+            spec = PrfaasSimulator._decode_service_time(self._stub(r))
+            assert spec == pytest.approx(plain / (1.0 + r))
+
+    def test_block_rounding_applies_before_spec_scaling(self):
+        got = PrfaasSimulator._decode_service_time(
+            self._stub(1.0, output_len=60, block=16))
+        assert got == pytest.approx(64 * 0.01 / 2.0)
+
+    def test_config_default_off(self):
+        assert SimConfig(arrival_rate=1.0).spec_accept_rate == 0.0
+        assert SimConfig(arrival_rate=1.0).tbt_slo_s == 0.0
+
+
+TBT_KEYS = ("tbt_mean", "tbt_p50", "tbt_p90", "tbt_p99", "tbt_slo_s",
+            "tbt_attainment")
+
+
+class TestDeploymentTbtStats:
+    """`CrossDCDeployment._tbt_stats` (the live-side aggregation) without
+    spinning up a deployment."""
+
+    def test_percentiles_and_attainment(self):
+        from repro.serving.deployment import CrossDCDeployment
+        tbt = [0.01, 0.02, 0.03, 0.04, 0.10]
+        s = CrossDCDeployment._tbt_stats(tbt, 0.05)
+        assert s["tbt_p50_s"] <= s["tbt_p90_s"] <= s["tbt_p99_s"]
+        assert s["tbt_mean_s"] == pytest.approx(sum(tbt) / len(tbt))
+        assert s["tbt_slo_s"] == 0.05
+        assert s["tbt_attainment"] == pytest.approx(0.8)   # 4 of 5 under
+
+    def test_empty_and_unset_slo_report_full_attainment(self):
+        from repro.serving.deployment import CrossDCDeployment
+        assert CrossDCDeployment._tbt_stats([], 0.05)["tbt_attainment"] == 1.0
+        assert CrossDCDeployment._tbt_stats([0.2], 0.0)["tbt_attainment"] == 1.0
+
+
+@pytest.fixture(scope="module")
+def tm_sc():
+    w = Workload()
+    tm = ThroughputModel(paper_h200_profile(), paper_h20_profile(), w)
+    sc, rate, _ = tm.grid_search(4, 8, 100e9 / 8)
+    return tm, sc, rate, w
+
+
+class TestSimulatorTbtMetrics:
+    @pytest.mark.parametrize("engine", ["event", "vector"])
+    def test_tbt_keys_and_attainment(self, tm_sc, engine):
+        tm, sc, rate, w = tm_sc
+        cfg = SimConfig(arrival_rate=0.6 * rate, sim_time=300.0,
+                        seed=3, engine=engine, tbt_slo_s=1.0)
+        m = PrfaasSimulator(tm, sc, w, cfg).run()
+        for key in TBT_KEYS:
+            assert key in m, key
+        assert m["completed"] > 0
+        assert m["tbt_mean"] > 0.0
+        assert m["tbt_p50"] <= m["tbt_p90"] <= m["tbt_p99"]
+        assert m["tbt_slo_s"] == 1.0
+        assert 0.0 <= m["tbt_attainment"] <= 1.0
+        # a generous SLO must be attainable; unset SLO reports 1.0
+        cfg2 = SimConfig(arrival_rate=0.6 * rate, sim_time=300.0,
+                         seed=3, engine=engine)
+        m2 = PrfaasSimulator(tm, sc, w, cfg2).run()
+        assert m2["tbt_slo_s"] == 0.0
+        assert m2["tbt_attainment"] == 1.0
+
+    @pytest.mark.parametrize("engine", ["event", "vector"])
+    def test_spec_accept_rate_raises_throughput(self, tm_sc, engine):
+        """At a decode-bound operating point, pricing speculation into the
+        replay (accept_rate 1.0 halves slot hold time) must not LOWER
+        completed throughput, and must shrink mean TBT."""
+        tm, sc, rate, w = tm_sc
+        base = dict(arrival_rate=0.6 * rate, sim_time=300.0, seed=3,
+                    engine=engine)
+        m0 = PrfaasSimulator(tm, sc, w, SimConfig(**base)).run()
+        m1 = PrfaasSimulator(
+            tm, sc, w, SimConfig(**base, spec_accept_rate=1.0)).run()
+        assert m1["completed"] >= m0["completed"]
+        assert m1["tbt_mean"] < m0["tbt_mean"]

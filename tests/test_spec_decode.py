@@ -1,0 +1,346 @@
+"""Speculative multi-token decode tests (PR 10 tentpole).
+
+The load-bearing property: with greedy decoding, the speculative engine —
+n-gram drafter, one-dispatch verify, variable tokens-per-block — emits
+EXACTLY the token sequences the plain one-token-per-dispatch path produces,
+across full-attn, MLA + linear, SWA, and hybrid archs, on both the dense
+and paged layouts, including chunked prompts past the prefill max bucket.
+On top of identity:
+
+  * ``spec_k=0`` runs the PR 6 block path untouched (no verify program is
+    ever built);
+  * greedy acceptance is exact at both edges — a draft equal to the
+    model's own continuation accepts in full, a draft that never matches
+    accepts nothing and every round still emits its one bonus token;
+  * rejected speculative suffixes leave NO trace: the caches after a
+    verify + commit round match running the accepted tokens through the
+    plain ``decode_step`` (bit-exact on the scan-verify path);
+  * the verify dispatch compiles once per (bucket, k) and never again
+    under traffic; paged slots grow pages by the worst-case k+1 stride and
+    retire cleanly on pool exhaustion.
+
+Marked ``live`` (full scheduler loops on jitted smoke models).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.blockpool import BlockPool
+from repro.models import Model
+from repro.serving.api import Request
+from repro.serving.engine import (DecodeEngine, PrefillEngine,
+                                  RegionScheduler)
+
+pytestmark = pytest.mark.live
+
+SLOTS, CAPACITY, BLOCK = 4, 384, 8
+MAX_BUCKET = 64
+PAGE = 16
+SPEC_K = 2
+
+# one arch per decode-cache family: full-attn (parallel verify), MLA +
+# linear, SWA, hybrid (scan verify with ring rollback / state snapshots)
+ARCHS = ["mistral-nemo-12b", "kimi-linear-1t", "h2o-danube-1.8b",
+         "zamba2-1.2b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch(request):
+    cfg = get_smoke_config(request.param)
+    model = Model(cfg, use_kernels=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_requests(cfg, lens, budgets, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        (L,)).astype(np.int32),
+                    max_new_tokens=b)
+            for i, (L, b) in enumerate(zip(lens, budgets))]
+
+
+def _run(model, params, reqs, *, paged=False, spec_k=0, pool=None,
+         spec_ngram=1):
+    peng = PrefillEngine(model, params, min_bucket=32, max_bucket=MAX_BUCKET)
+    dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                       paged=paged, pool=pool, page_tokens=PAGE,
+                       spec_k=spec_k, spec_ngram=spec_ngram)
+    sched = RegionScheduler(peng, dec, max_prefill_batch=3)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert not sched.has_work
+    return ({rid: r.output_tokens for rid, r in dec.outputs.items()}, dec)
+
+
+# mixed lengths (incl. one prompt past MAX_BUCKET -> chunked prefill),
+# ragged budgets so retires land mid-block at every draft depth
+LENS = [24, 40, 70, 16, 33, 64]
+BUDGETS = [30, 44, 25, 38, 27, 21]
+
+
+class TestTokenIdentity:
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_speculative_matches_plain(self, arch, paged):
+        """Greedy speculative streams == plain greedy streams through the
+        scheduler (slot churn, chunked prompt, mid-block retires)."""
+        cfg, model, params = arch
+        plain, _ = _run(model, params, _mk_requests(cfg, LENS, BUDGETS),
+                        paged=paged)
+        spec, dec = _run(model, params, _mk_requests(cfg, LENS, BUDGETS),
+                         paged=paged, spec_k=SPEC_K)
+        assert spec == plain
+        # speculation actually happened (every round emits >= 1 token;
+        # the drafter must land > 1 sometimes on at least one arch family,
+        # but even accept-nothing rounds keep the accounting exact)
+        assert dec.verify_rounds > 0
+        assert dec.accepted_tokens >= dec.verify_rounds
+
+    def test_spec_k0_is_plain_block_path(self, arch):
+        """spec_k=0 must BE the PR 6 path: same tokens, and no verify
+        program is ever built or compiled."""
+        cfg, model, params = arch
+        plain, dec0 = _run(model, params, _mk_requests(cfg, LENS, BUDGETS))
+        assert dec0.spec_compiles == 0
+        assert dec0.verify_rounds == 0
+        assert dec0.accepted_tokens_per_dispatch == 1.0
+
+
+class TestAcceptanceEdges:
+    """Drive ``decode_verify`` + ``commit_verify`` directly with crafted
+    drafts: both edges of greedy acceptance, and bit-exact cache state
+    after rollback."""
+
+    def _admitted_engine(self, model, params, cfg, spec_k=SPEC_K):
+        reqs = _mk_requests(cfg, [24, 40, 16, 33], [64] * 4, seed=5)
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           spec_k=spec_k, spec_ngram=1)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=4)
+        for r in reqs:
+            sched.submit(r)
+        # tick until every slot is admitted and mid-stream (lengths,
+        # history and caches past fresh-admission state)
+        for _ in range(20):
+            sched.tick()
+            if dec.active.all():
+                break
+        assert dec.active.all()
+        sched.tick()
+        return dec
+
+    def _greedy_continuation(self, model, params, dec, k):
+        """The model's own next-k greedy tokens from the engine's live
+        state (computed on a cache COPY via sequential decode steps)."""
+        caches = jax.tree.map(lambda x: x, dec.caches)
+        toks = jnp.asarray(dec.tokens)
+        lens = jnp.asarray(dec.lengths)
+        out = []
+        for j in range(k):
+            logits, caches = model.decode_step(params, toks, caches, lens)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lens = lens + 1
+            out.append(toks)
+        return jnp.stack(out, axis=1)                    # (B, k)
+
+    def test_accept_all(self, arch):
+        """Drafting the model's own continuation accepts every draft."""
+        cfg, model, params = arch
+        dec = self._admitted_engine(model, params, cfg)
+        drafts = self._greedy_continuation(model, params, dec, SPEC_K)
+        toks = jnp.asarray(dec.tokens)
+        lens = jnp.asarray(dec.lengths)
+        seq = jnp.concatenate([toks[:, None], drafts], axis=1)
+        logits, _, _ = model.decode_verify(params, seq, dec.caches, lens)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        match = (preds[:, :SPEC_K] == drafts).astype(jnp.int32)
+        accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        assert bool(jnp.all(accept == SPEC_K)), np.asarray(accept)
+
+    def test_reject_all(self, arch):
+        """Drafts crafted to never match accept nothing — and the round
+        still emits its one always-correct bonus token."""
+        cfg, model, params = arch
+        dec = self._admitted_engine(model, params, cfg)
+        cont = self._greedy_continuation(model, params, dec, SPEC_K)
+        drafts = (cont + 1) % cfg.vocab_size             # guaranteed wrong
+        toks = jnp.asarray(dec.tokens)
+        lens = jnp.asarray(dec.lengths)
+        seq = jnp.concatenate([toks[:, None], drafts], axis=1)
+        logits, _, _ = model.decode_verify(params, seq, dec.caches, lens)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        match = (preds[:, :SPEC_K] == drafts).astype(jnp.int32)
+        accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        assert bool(jnp.all(accept == 0)), np.asarray(accept)
+        # position 0 is the plain next token regardless of the drafts
+        step_logits, _ = model.decode_step(params, toks, dec.caches,
+                                           lens)
+        assert bool(jnp.array_equal(jnp.argmax(step_logits, -1),
+                                    jnp.argmax(logits[:, 0], -1)))
+
+    def test_rollback_leaves_no_trace(self, arch):
+        """verify(reject-all) + commit == running ONE plain decode step:
+        every cache leaf the continuing stream can read must match.  On
+        the scan-verify path (SWA/linear/hybrid/MLA) the match is
+        bit-exact; the parallel full-attn path writes f32-reassociated
+        (argmax-identical) rows, so the read-visible region must be
+        allclose and the model must keep emitting identical tokens (pinned
+        by TestTokenIdentity)."""
+        cfg, model, params = arch
+        dec = self._admitted_engine(model, params, cfg)
+        cont = self._greedy_continuation(model, params, dec, SPEC_K)
+        drafts = (cont + 1) % cfg.vocab_size
+        toks = jnp.asarray(dec.tokens)
+        lens = jnp.asarray(dec.lengths)
+        seq = jnp.concatenate([toks[:, None], drafts], axis=1)
+        _, ver_caches, pending = model.decode_verify(params, seq,
+                                                     dec.caches, lens)
+        accept = jnp.zeros((SLOTS,), jnp.int32)
+        committed = model.commit_verify(ver_caches, pending, lens, accept,
+                                        SPEC_K + 1)
+        _, stepped = model.decode_step(params, toks, dec.caches, lens)
+
+        exact = not model._verify_parallel
+        for (pc, c), (ps, s) in zip(
+                jax.tree_util.tree_flatten_with_path(committed)[0],
+                jax.tree_util.tree_flatten_with_path(stepped)[0]):
+            assert pc == ps
+            cf = np.asarray(c, dtype=np.float32)
+            sf = np.asarray(s, dtype=np.float32)
+            seq_axes = [i for i, d in enumerate(c.shape) if d == CAPACITY]
+            if seq_axes:
+                # append-only seq caches, laid out (layers, B, S, ...) —
+                # the rejected suffix wrote rows lens+1..lens+k that one
+                # plain step never touches; those rows are unreadable by
+                # the length mask, so only rows < lens+1 must match
+                assert c.shape[1] == SLOTS, c.shape
+                for b in range(SLOTS):
+                    r = int(lens[b]) + 1
+                    idx = [slice(None)] * c.ndim
+                    idx[1] = b
+                    idx[seq_axes[0]] = slice(None, r)
+                    idx = tuple(idx)
+                    if exact:
+                        np.testing.assert_array_equal(cf[idx], sf[idx])
+                    else:
+                        np.testing.assert_allclose(cf[idx], sf[idx],
+                                                   rtol=1e-4, atol=1e-4)
+            elif exact:
+                # SWA rings are rolled back and mixer states rewound: the
+                # whole leaf must match one plain step bit-exactly
+                np.testing.assert_array_equal(cf, sf)
+            else:
+                np.testing.assert_allclose(cf, sf, rtol=1e-4, atol=1e-4)
+
+
+class TestParallelVerifyUnit:
+    """The batched one-pass verify (append-only full-attn archs) against q
+    sequential ``decode_step`` calls at a shipped engine shape."""
+
+    def test_parallel_verify_matches_sequential_steps(self):
+        cfg = get_smoke_config("mistral-nemo-12b")
+        model = Model(cfg, use_kernels=False)
+        assert model._verify_parallel
+        params = model.init(jax.random.PRNGKey(0))
+        B, Q = 4, SPEC_K + 1
+        caches = model.init_cache(B, CAPACITY)
+        lengths = jnp.array([5, 17, 120, 300], jnp.int32)
+        leaves, td = jax.tree_util.tree_flatten(caches)
+        caches = jax.tree_util.tree_unflatten(td, [
+            (jax.random.normal(jax.random.PRNGKey(90 + i), l.shape)
+             * 0.02).astype(l.dtype) for i, l in enumerate(leaves)])
+        seq = jax.random.randint(jax.random.PRNGKey(3), (B, Q), 0,
+                                 cfg.vocab_size)
+
+        lg_p, _, pending = model.decode_verify(params, seq, caches, lengths)
+        assert pending["snaps"] is None and pending["rings"] is None
+
+        c_s = caches
+        logits = []
+        for j in range(Q):
+            lg, c_s = model.decode_step(params, seq[:, j], c_s, lengths + j)
+            logits.append(lg)
+        lg_s = jnp.stack(logits, axis=1)
+        # float-equivalent logits, identical greedy tokens (the engine
+        # contract): see verify_attention_ref's numerics note
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_s),
+                                   rtol=1e-5, atol=1e-5)
+        assert bool(jnp.array_equal(jnp.argmax(lg_p, -1),
+                                    jnp.argmax(lg_s, -1)))
+
+    def test_scan_verify_is_bitwise(self):
+        """The lax.scan verify path (here: SWA arch) must be BIT-identical
+        to sequential decode steps — it is the same program."""
+        cfg = get_smoke_config("h2o-danube-1.8b")
+        model = Model(cfg, use_kernels=False)
+        assert not model._verify_parallel
+        params = model.init(jax.random.PRNGKey(0))
+        B, Q = 4, SPEC_K + 1
+        caches = model.init_cache(B, CAPACITY)
+        lengths = jnp.array([5, 17, 120, 300], jnp.int32)
+        seq = jax.random.randint(jax.random.PRNGKey(3), (B, Q), 0,
+                                 cfg.vocab_size)
+        lg_p, _, _ = model.decode_verify(params, seq, caches, lengths)
+        c_s = caches
+        logits = []
+        for j in range(Q):
+            lg, c_s = model.decode_step(params, seq[:, j], c_s, lengths + j)
+            logits.append(lg)
+        assert bool(jnp.array_equal(lg_p, jnp.stack(logits, axis=1)))
+
+
+class TestCompileStability:
+    def test_one_verify_compile_after_warmup(self, arch):
+        """``warmup_block`` compiles the verify program once; real traffic
+        afterwards never recompiles it."""
+        cfg, model, params = arch
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           spec_k=SPEC_K, spec_ngram=1)
+        dec.warmup_block()
+        assert dec.spec_compiles == 1
+        sched = RegionScheduler(peng, dec, max_prefill_batch=3)
+        for r in _mk_requests(cfg, LENS, BUDGETS):
+            sched.submit(r)
+        sched.run()
+        assert dec.spec_compiles == 1, "verify dispatch recompiled"
+
+    def test_greedy_only_guard(self, arch):
+        cfg, model, params = arch
+        with pytest.raises(ValueError, match="temperature"):
+            DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                         spec_k=1, temperature=0.8)
+
+
+class TestPagedSpecGrowth:
+    def test_pool_exhaustion_during_spec_growth_retires_cleanly(self):
+        """Paged speculative slots reserve pages at the worst-case
+        block_size * (k+1) stride; a deliberately tight pool must exhaust,
+        retire page-starved slots (not crash or corrupt), and conserve
+        pages."""
+        cfg = get_smoke_config("mistral-nemo-12b")
+        model = Model(cfg, use_kernels=False)
+        params = model.init(jax.random.PRNGKey(0))
+        pool = BlockPool(14, PAGE, 1)            # 224 tokens for 4 slots
+        peng = PrefillEngine(model, params, min_bucket=32,
+                             max_bucket=MAX_BUCKET)
+        dec = DecodeEngine(model, params, SLOTS, CAPACITY, block_size=BLOCK,
+                           paged=True, pool=pool, page_tokens=PAGE,
+                           spec_k=SPEC_K, spec_ngram=1)
+        sched = RegionScheduler(peng, dec, max_prefill_batch=4)
+        for r in _mk_requests(cfg, [32, 32, 32, 32], [120] * 4, seed=9):
+            sched.submit(r)
+        sched.run()
+        assert not sched.has_work
+        assert dec.page_fail_retires > 0, \
+            "spec growth must actually exhaust the pool"
+        assert len(dec.outputs) == 4             # every request produced
+        pool.check_invariants()
+        s = pool.stats
+        assert s["allocated"] == s["freed"] + s["evicted"] + pool.resident
